@@ -1,0 +1,100 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Timing notes: all "fast path" algorithms compared in wall-clock (the paper's
+metric) are vectorized C-backed numpy on both sides (RanGroupScan /
+IntGroup / Merge / SvS / Lookup / Hash), so constant factors are
+comparable; inherently serial pointer-walk baselines (SkipList, BaezaYates,
+BPP) are python-loop implementations and are reported with an `interp`
+flag — as in the paper they lose everywhere, but their *operation counts*
+are implementation-independent and reported alongside.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.baselines import BASELINES
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.intersect import hashbin, intgroup, rangroup, rangroupscan
+from repro.core.partition import preprocess_fixed, preprocess_prefix
+
+INTERP_ONLY = {"SkipList", "BaezaYates", "BPP"}
+
+
+def gen_pair(n1: int, n2: int, r: int, universe: int = 1 << 28, seed: int = 0
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    common = rng.choice(universe, size=r, replace=False).astype(np.uint32)
+    a = rng.choice(universe, size=n1, replace=False).astype(np.uint32)
+    b = rng.choice(universe, size=n2, replace=False).astype(np.uint32)
+    return (np.unique(np.concatenate([a[:max(0, n1 - r)], common])),
+            np.unique(np.concatenate([b[:max(0, n2 - r)], common])))
+
+
+def gen_k(k: int, n: int, r: int, universe: int = 1 << 28, seed: int = 0
+          ) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    common = rng.choice(universe, size=r, replace=False).astype(np.uint32)
+    out = []
+    for i in range(k):
+        own = rng.choice(universe, size=n, replace=False).astype(np.uint32)
+        out.append(np.unique(np.concatenate([own[:max(0, n - r)], common])))
+    return out
+
+
+def timeit(fn: Callable, reps: int = 3) -> Tuple[float, object]:
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, out  # microseconds
+
+
+def paper_algos(sets: Sequence[np.ndarray], w: int = 256, m: int = 2,
+                seed: int = 0, include=("RanGroupScan", "RanGroup",
+                                        "IntGroup", "HashBin")):
+    """Pre-process once, return {name: callable} for the paper algorithms."""
+    fam = random_hash_family(m, w, seed=seed)
+    fam1 = random_hash_family(1, 64, seed=seed + 1)
+    perm = default_permutation(seed)
+    out: Dict[str, Callable] = {}
+    if "RanGroupScan" in include or "RanGroup" in include or "HashBin" in include:
+        idxs = [preprocess_prefix(s, w=w, m=m, family=fam, perm=perm)
+                for s in sets]
+        if "RanGroupScan" in include:
+            out["RanGroupScan"] = lambda: rangroupscan(idxs)[0]
+        if "RanGroup" in include:
+            out["RanGroup"] = lambda: rangroup(idxs)[0]
+        if "HashBin" in include and len(sets) == 2:
+            out["HashBin"] = lambda: hashbin(idxs[0], idxs[1])[0]
+    if "IntGroup" in include and len(sets) == 2:
+        fixed = [preprocess_fixed(s, w=64, family=fam1) for s in sets]
+        out["IntGroup"] = lambda: intgroup(fixed[0], fixed[1])[0]
+    return out
+
+
+def baseline_algos(sets: Sequence[np.ndarray], include=None):
+    include = include or list(BASELINES)
+    return {name: (lambda fn=fn: fn(sets)[0])
+            for name, fn in BASELINES.items() if name in include}
+
+
+def check_and_time(algos: Dict[str, Callable], truth: np.ndarray,
+                   reps: int = 3) -> Dict[str, float]:
+    out = {}
+    for name, fn in algos.items():
+        us, res = timeit(fn, reps=reps)
+        assert np.array_equal(res, truth), f"{name} produced a wrong result"
+        out[name] = us
+    return out
+
+
+def truth_of(sets: Sequence[np.ndarray]) -> np.ndarray:
+    out = sets[0]
+    for s in sets[1:]:
+        out = np.intersect1d(out, s)
+    return out

@@ -1,0 +1,35 @@
+"""Paper Fig. 10/11: pre-processing overhead vs plain sorting."""
+from __future__ import annotations
+import time
+import numpy as np
+from repro.core.compress import compress_lowbits, delta_encode
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.partition import preprocess_fixed, preprocess_prefix
+
+
+def run(quick: bool = True):
+    sizes = [1 << 16, 1 << 18] if quick else [1 << 16, 1 << 18, 1 << 20, 1 << 22]
+    rng = np.random.default_rng(0)
+    fam = random_hash_family(2, 256, seed=0)
+    fam1 = random_hash_family(1, 64, seed=1)
+    perm = default_permutation(0)
+    rows = []
+    for n in sizes:
+        vals = rng.choice(1 << 28, size=n, replace=False).astype(np.uint32)
+        t0 = time.perf_counter(); np.sort(vals); t_sort = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        idx = preprocess_prefix(vals, w=256, m=2, family=fam, perm=perm)
+        t_prefix = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        preprocess_fixed(vals, w=64, family=fam1)
+        t_fixed = time.perf_counter() - t0
+        t0 = time.perf_counter(); compress_lowbits(idx); t_low = time.perf_counter() - t0
+        t0 = time.perf_counter(); delta_encode(np.sort(vals)); t_delta = time.perf_counter() - t0
+        rows.append({"figure": "fig10", "n": n,
+                     "sort_ms": round(t_sort * 1e3, 2),
+                     "rangroupscan_ms": round(t_prefix * 1e3, 2),
+                     "intgroup_ms": round(t_fixed * 1e3, 2),
+                     "lowbits_extra_ms": round(t_low * 1e3, 2),
+                     "delta_encode_ms": round(t_delta * 1e3, 2),
+                     "prefix_vs_sort": round(t_prefix / t_sort, 2)})
+    return rows

@@ -1,0 +1,27 @@
+"""Paper Fig. 4: intersect 2 equal-size sets, r = 1% of n, vary n.
+
+Claim to validate: RanGroupScan ~40-50% faster than Merge across sizes;
+ordering RanGroupScan <= IntGroup < Merge < Lookup < adaptive < Hash/SkipList.
+"""
+from __future__ import annotations
+import numpy as np
+from .common import (baseline_algos, check_and_time, gen_pair, paper_algos,
+                     truth_of, INTERP_ONLY)
+
+
+def run(quick: bool = True):
+    sizes = [1 << 17, 1 << 19] if quick else [1 << 17, 1 << 19, 1 << 21, 1 << 23]
+    rows = []
+    for n in sizes:
+        a, b = gen_pair(n, n, max(1, n // 100), seed=n)
+        truth = truth_of([a, b])
+        algos = paper_algos([a, b], w=256, m=2)
+        base = ["Merge", "SvS", "Hash", "Lookup"] + ([] if quick else ["SkipList", "BaezaYates", "BPP"])
+        algos.update(baseline_algos([a, b], include=base))
+        times = check_and_time(algos, truth, reps=2 if quick else 3)
+        for name, us in times.items():
+            rows.append({"figure": "fig4", "n": n, "r": len(truth),
+                         "algorithm": name, "us": round(us, 1),
+                         "interp": name in INTERP_ONLY,
+                         "speedup_vs_merge": round(times["Merge"] / us, 3)})
+    return rows

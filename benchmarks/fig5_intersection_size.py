@@ -1,0 +1,26 @@
+"""Paper Fig. 5: two 2^20 sets (10M in paper), vary r from 0.05% to ~90%.
+
+Claims: RanGroupScan/IntGroup best for r < ~70% of n; Merge takes over for
+larger r with RanGroupScan staying within a few % of Merge.
+"""
+from __future__ import annotations
+import numpy as np
+from .common import baseline_algos, check_and_time, gen_pair, paper_algos, truth_of
+
+
+def run(quick: bool = True):
+    n = 1 << 18 if quick else 1 << 21
+    fracs = [0.0005, 0.01, 0.1, 0.5, 0.7, 0.9]
+    rows = []
+    for f in fracs:
+        a, b = gen_pair(n, n, max(1, int(n * f)), seed=int(f * 1e4))
+        truth = truth_of([a, b])
+        algos = paper_algos([a, b], w=256, m=2,
+                            include=("RanGroupScan", "RanGroup", "IntGroup"))
+        algos.update(baseline_algos([a, b], include=["Merge", "SvS", "Lookup"]))
+        times = check_and_time(algos, truth, reps=2)
+        for name, us in times.items():
+            rows.append({"figure": "fig5", "n": n, "r_frac": f, "r": len(truth),
+                         "algorithm": name, "us": round(us, 1),
+                         "speedup_vs_merge": round(times["Merge"] / us, 3)})
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig. 6: k = 2, 3, 4 equal-size sets (m=2 images, as in the paper).
+
+Claim: RanGroupScan fastest, lead grows with k (more group tuples filtered
+to empty by the k-way AND); RanGroup next; Merge degrades with k.
+"""
+from __future__ import annotations
+import numpy as np
+from .common import baseline_algos, check_and_time, gen_k, paper_algos, truth_of
+
+
+def run(quick: bool = True):
+    n = 1 << 17 if quick else 1 << 20
+    rows = []
+    for k in (2, 3, 4):
+        sets = gen_k(k, n, max(1, n // 200), seed=k)
+        truth = truth_of(sets)
+        algos = paper_algos(sets, w=256, m=2,
+                            include=("RanGroupScan", "RanGroup"))
+        algos.update(baseline_algos(sets, include=["Merge", "SvS", "Hash"]))
+        times = check_and_time(algos, truth, reps=2)
+        for name, us in times.items():
+            rows.append({"figure": "fig6", "k": k, "n": n, "r": len(truth),
+                         "algorithm": name, "us": round(us, 1),
+                         "speedup_vs_merge": round(times["Merge"] / us, 3)})
+    return rows

@@ -1,0 +1,73 @@
+"""Paper Fig. 7/12: realistic workload — Zipf corpus + query log with the
+paper's keyword-count mix (68/23/9% for 2/3/4 words).
+
+Reports normalized mean latency (Merge = 1.0), per-k breakdown, the
+fraction of queries each algorithm wins, and worst-case latency ratios.
+"""
+from __future__ import annotations
+import numpy as np
+from repro.core.baselines import merge, svs_gallop, hash_lookup, lookup_st
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.intersect import hashbin, rangroup, rangroupscan
+from repro.core.partition import preprocess_prefix
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.serve.search import zipf_query_log
+from .common import timeit
+
+
+def run(quick: bool = True):
+    n_docs = 20000 if quick else 200000
+    n_q = 150 if quick else 1000
+    docs = zipf_corpus(n_docs, vocab=20000, mean_len=120, seed=3)
+    postings = inverted_index(docs)
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    index = {t: preprocess_prefix(p, w=256, m=2, family=fam, perm=perm)
+             for t, p in postings.items() if len(p) >= 2}
+    queries = [q for q in zipf_query_log(sorted(index), n_q, seed=9)
+               if all(t in index for t in q) and len(q) >= 2]
+
+    algo_times = {}
+    wins = {}
+    def record(name, us_list):
+        algo_times[name] = us_list
+    names = ["RanGroupScan", "RanGroup", "HashBin2", "Merge", "SvS", "Hash", "Lookup"]
+    per_algo = {n: [] for n in names}
+    for q in queries:
+        idxs = sorted((index[t] for t in q), key=lambda i: i.n)
+        posts = [np.asarray(postings[t]) for t in q]
+        posts.sort(key=len)
+        truth = posts[0]
+        for s in posts[1:]:
+            truth = np.intersect1d(truth, s)
+        runs = {
+            "RanGroupScan": lambda: rangroupscan(idxs)[0],
+            "RanGroup": lambda: rangroup(idxs)[0],
+            "Merge": lambda: merge(posts)[0],
+            "SvS": lambda: svs_gallop(posts)[0],
+            "Hash": lambda: hash_lookup(posts)[0],
+            "Lookup": lambda: lookup_st(posts)[0],
+        }
+        if len(idxs) == 2:
+            runs["HashBin2"] = lambda: hashbin(idxs[0], idxs[1])[0]
+        for name, fn in runs.items():
+            us, res = timeit(fn, reps=1)
+            assert np.array_equal(res, truth), name
+            per_algo[name].append(us)
+        done = {n: per_algo[n][-1] for n in runs}
+        best = min(done, key=done.get)
+        wins[best] = wins.get(best, 0) + 1
+
+    merge_mean = float(np.mean(per_algo["Merge"]))
+    rows = []
+    for name, ts in per_algo.items():
+        if not ts:
+            continue
+        rows.append({
+            "figure": "fig7", "algorithm": name, "queries": len(ts),
+            "normalized_mean": round(float(np.mean(ts)) / merge_mean, 3),
+            "normalized_worst": round(float(np.max(ts)) /
+                                      float(np.max(per_algo["Merge"])), 3),
+            "win_fraction": round(wins.get(name, 0) / max(1, len(queries)), 3),
+        })
+    return rows

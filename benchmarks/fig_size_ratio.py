@@ -1,0 +1,28 @@
+"""Paper §4 'Varying the Sets Size Ratios': |L2| fixed, sr = |L2|/|L1| sweep.
+
+Claims: RanGroupScan best for sr < 32; Hash/Lookup best for sr > 100;
+HashBin and RanGroupScan always close to the best performer.
+"""
+from __future__ import annotations
+import numpy as np
+from .common import baseline_algos, check_and_time, gen_pair, paper_algos, truth_of
+
+
+def run(quick: bool = True):
+    n2 = 1 << 18 if quick else 1 << 21
+    ratios = [1, 4, 16, 64, 256] if quick else [1, 4, 16, 32, 64, 128, 256, 1024]
+    rows = []
+    for sr in ratios:
+        n1 = max(16, n2 // sr)
+        a, b = gen_pair(n1, n2, max(1, n1 // 100), seed=sr)
+        truth = truth_of([a, b])
+        algos = paper_algos([a, b], w=256, m=2,
+                            include=("RanGroupScan", "HashBin"))
+        algos.update(baseline_algos([a, b], include=["Merge", "SvS", "Hash", "Lookup"]))
+        times = check_and_time(algos, truth, reps=2)
+        best = min(times.values())
+        for name, us in times.items():
+            rows.append({"figure": "size_ratio", "n1": n1, "n2": n2, "sr": sr,
+                         "algorithm": name, "us": round(us, 1),
+                         "vs_best": round(us / best, 3)})
+    return rows

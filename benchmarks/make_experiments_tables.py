@@ -1,0 +1,66 @@
+"""Generate the §Dry-run and §Roofline markdown tables from artifacts.
+
+Usage: PYTHONPATH=src:. python benchmarks/make_experiments_tables.py
+Writes benchmarks/artifacts/tables.md (pasted into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from roofline import load_cells, roofline_row
+
+OUT = pathlib.Path(__file__).resolve().parent / "artifacts" / "tables.md"
+
+
+def fmt(x, nd=2):
+    return f"{x:.{nd}f}"
+
+
+def main() -> None:
+    cells = load_cells("baseline")
+    lines = []
+
+    lines.append("### Dry-run matrix (status | GiB/device | compile s)\n")
+    archs = sorted({c["arch"] for c in cells})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for mesh in ("16x16", "2x16x16"):
+        lines.append(f"\n**mesh {mesh}**\n")
+        lines.append("| arch | " + " | ".join(shapes) + " |")
+        lines.append("|---|" + "---|" * len(shapes))
+        for a in archs:
+            row = [a]
+            for sh in shapes:
+                rec = next((c for c in cells if c["arch"] == a
+                            and c["shape"] == sh and c["mesh"] == mesh), None)
+                if rec is None:
+                    row.append("—")
+                elif rec["status"] == "skip":
+                    row.append("SKIP (full-attn)")
+                elif rec["status"] != "ok":
+                    row.append("ERROR")
+                else:
+                    gib = rec["memory_analysis"]["peak_bytes_est"] / 2**30
+                    row.append(f"ok {gib:.1f}G {rec['compile_s']:.0f}s")
+            lines.append("| " + " | ".join(row) + " |")
+
+    lines.append("\n### Roofline (per device; v5e 197TF/s bf16, 819GB/s HBM, 50GB/s link)\n")
+    lines.append("| arch | shape | mesh | compute s | memory s | collective s | dominant | roofline frac | useful flops |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for rec in cells:
+        if rec["status"] != "ok":
+            continue
+        r = roofline_row(rec)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt(r['compute_s'])} | {fmt(r['memory_s'])} | "
+            f"{fmt(r['collective_s'])} | **{r['dominant']}** | "
+            f"{100*r['roofline_fraction']:.1f}% | "
+            f"{100*r['useful_compute_ratio']:.0f}% |")
+
+    OUT.write_text("\n".join(lines) + "\n")
+    print(f"wrote {OUT} ({len(lines)} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  For every (arch x shape x mesh) cell:
+
+  compute term    = HLO flops / chip / 197e12          [s]
+  memory term     = HBM-boundary bytes / chip / 819e9  [s]
+  collective term = wire bytes / chip / 50e9           [s]
+
+All three inputs are trip-count-aware per-device numbers from the HLO
+walker (launch/hlo_analysis.py).  The dominant term is the bottleneck; the
+roofline fraction reported is compute_term / dominant_term (1.0 = the
+chip's MXUs are the binding constraint — perfect for a training step).
+MODEL_FLOPS uses 6*N*D (dense) or 6*N_active*D (MoE) per trained token;
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPS exposes remat and
+dispatch overheads (> 1/3 is healthy for full-remat training).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load_cells(variant: str = "baseline") -> List[Dict]:
+    out = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("variant", "baseline") != variant:
+            continue
+        out.append(rec)
+    return out
+
+
+def tokens_of(rec: Dict) -> int:
+    from repro.configs import shape_by_name
+
+    s = shape_by_name(rec["shape"])
+    if rec["kind"] == "decode":
+        return s.global_batch  # one new token per sequence
+    return s.global_batch * s.seq_len
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    ha = rec["hlo_analysis"]
+    n = rec["n_devices"]
+    compute = ha["flops_per_device"] / PEAK_FLOPS
+    memory = ha["hbm_bytes_per_device"] / HBM_BW
+    coll = ha["wire_bytes_per_device"] / LINK_BW
+    dom = max(compute, memory, coll)
+    which = ("compute" if dom == compute else
+             "memory" if dom == memory else "collective")
+    toks = tokens_of(rec)
+    mult = 3 if rec["kind"] == "train" else 1  # fwd+bwd
+    model_flops = 2 * rec["active_params_B"] * 1e9 * toks * mult
+    hlo_global = ha["flops_per_device"] * n
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": which,
+        "roofline_fraction": compute / dom if dom else 0.0,
+        "model_flops": model_flops,
+        "useful_compute_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        "mem_per_dev_gib": rec["memory_analysis"]["peak_bytes_est"] / 2**30,
+        "tokens_per_step": toks,
+        "step_time_bound_s": dom,
+        "collective_bytes_by_type": ha["collective_bytes_by_type"],
+    }
+
+
+def table(variant: str = "baseline") -> List[Dict]:
+    rows = []
+    for rec in load_cells(variant):
+        if rec.get("status") == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "dominant": "SKIP",
+                         "reason": rec.get("reason", "")})
+            continue
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def run(quick: bool = True):
+    rows = []
+    for r in table():
+        if r.get("dominant") == "SKIP":
+            continue
+        rows.append({
+            "figure": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "mesh": r["mesh"],
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "roofline_fraction": round(r["roofline_fraction"], 4),
+            "useful_compute_ratio": round(r["useful_compute_ratio"], 3),
+        })
+    return rows
+
+
+def main() -> None:
+    rows = table()
+    hdr = f"{'arch':<20} {'shape':<12} {'mesh':<8} {'comp_ms':>9} {'mem_ms':>9} {'coll_ms':>9} {'dom':<10} {'roof%':>6} {'useful%':>8} {'GiB/dev':>8}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("dominant") == "SKIP":
+            print(f"{r['arch']:<20} {r['shape']:<12} {r['mesh']:<8} {'—':>9} {'—':>9} {'—':>9} {'SKIP':<10}")
+            continue
+        print(f"{r['arch']:<20} {r['shape']:<12} {r['mesh']:<8} "
+              f"{r['compute_s']*1e3:>9.2f} {r['memory_s']*1e3:>9.2f} "
+              f"{r['collective_s']*1e3:>9.2f} {r['dominant']:<10} "
+              f"{100*r['roofline_fraction']:>5.1f}% "
+              f"{100*r['useful_compute_ratio']:>7.1f}% "
+              f"{r['mem_per_dev_gib']:>8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+``python -m benchmarks.run [--full] [--only fig4,fig7]`` prints CSV rows
+(name,us_per_call,derived) and writes benchmarks/artifacts/results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+MODULES = [
+    "fig4_set_size", "fig5_intersection_size", "fig_size_ratio",
+    "fig6_num_keywords", "fig7_real_workload", "fig8_compression",
+    "fig9_filtering_prob", "fig10_preprocessing", "fig_space", "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if only and name not in only and name.replace("_", "") not in only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+        except FileNotFoundError as e:
+            print(f"# {name}: skipped ({e})", file=sys.stderr)
+            continue
+        dt = time.time() - t0
+        for r in rows:
+            us = r.get("us", r.get("compute_ms"))
+            key_bits = [f"{k}={v}" for k, v in r.items()
+                        if k not in ("figure", "us") and v is not None]
+            print(f"{r.get('figure', name)}/{r.get('algorithm', r.get('arch', ''))},"
+                  f"{us},{';'.join(key_bits)}")
+        all_rows.extend(rows)
+        print(f"# {name}: {len(rows)} rows in {dt:.1f}s", file=sys.stderr)
+
+    out = pathlib.Path(__file__).resolve().parent / "artifacts" / "results.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

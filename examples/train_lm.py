@@ -1,0 +1,67 @@
+"""Train a small LM end-to-end with checkpoint/restart fault tolerance.
+
+Default: a ~10M-param dense model, 120 steps on CPU, with a mid-run
+simulated restart that resumes bit-exact from the checkpoint.  ``--full``
+scales to a ~100M model / 300 steps (hours on 1 CPU core; minutes on a
+real accelerator).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import SyntheticLMData
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = ArchConfig(name="demo-100m", family="dense", n_layers=8,
+                         d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                         vocab=32768, dtype="float32", param_dtype="float32")
+        steps, batch, seq = args.steps or 300, 8, 512
+    else:
+        cfg = ArchConfig(name="demo-10m", family="dense", n_layers=4,
+                         d_model=256, n_heads=8, n_kv_heads=4, d_ff=1024,
+                         vocab=4096, dtype="float32", param_dtype="float32")
+        steps, batch, seq = args.steps or 120, 8, 128
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), "
+          f"{steps} steps of {batch}x{seq}")
+
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    model = build_model(cfg)
+    mesh = make_local_mesh()
+    data = SyntheticLMData(vocab=cfg.vocab, batch=batch, seq=seq, seed=0)
+    opt = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=steps)
+    lcfg = LoopConfig(steps=steps // 2, ckpt_dir=args.ckpt, ckpt_every=20,
+                      log_every=10)
+
+    print("=== phase 1: train to half, then 'crash' ===")
+    out1 = train(model, mesh, data, lcfg, opt_cfg=opt)
+    print(f"phase 1 done at step {out1['final_step']}")
+
+    print("=== phase 2: restart from checkpoint, train to the end ===")
+    lcfg2 = dataclasses.replace(lcfg, steps=steps)
+    out2 = train(model, mesh, data, lcfg2, opt_cfg=opt)
+    first = out1["history"][0]["loss"]
+    last = out2["history"][-1]["loss"]
+    print(f"loss: {first:.4f} -> {last:.4f} "
+          f"({'improved ✓' if last < first else 'NO IMPROVEMENT ✗'})")
+    print(f"stragglers observed: {out1['stragglers'] + out2['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

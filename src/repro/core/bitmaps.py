@@ -1,0 +1,99 @@
+"""Word representations of small sets (Section 3.1), packed for the TPU.
+
+The paper encodes a set ``A ⊆ [w]`` as one w-bit machine word.  On TPU the
+natural "word" is a vector of 32-bit VPU lanes, so a w-bit representation is
+``W = w // 32`` packed uint32 lanes.  ``w`` is configurable (64..512); the
+default used by the engine is 256 (8 lanes), keeping the paper's load factor
+``|group|/w = 1/sqrt(w)`` while widening the filter.
+
+Host-side (numpy) helpers build the images during pre-processing; the same
+code runs under jax.numpy for device-side image construction (e.g. the
+constrained-decoding vocab masks built at serve time).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "num_lanes",
+    "build_images",
+    "popcount32",
+    "bits_to_values",
+    "any_nonzero",
+]
+
+
+def _xp(x):
+    if isinstance(x, np.ndarray):
+        return np
+    import jax.numpy as jnp
+
+    return jnp
+
+
+def num_lanes(w: int) -> int:
+    assert w % 32 == 0 and w & (w - 1) == 0
+    return w // 32
+
+
+def build_images(hashes, valid, w: int):
+    """Pack per-element hash values into word-representation bitmaps.
+
+    Args:
+      hashes: (..., G, gmax, m) uint32 in [0, w) — hash of each element under
+        each of the m functions (padding rows may hold arbitrary values).
+      valid:  (..., G, gmax) bool — which elements are real.
+      w: bitmap width in bits.
+
+    Returns:
+      (..., G, m, W) uint32 — the m word representations per group.
+    """
+    xp = _xp(hashes)
+    W = num_lanes(w)
+    lane = (hashes >> np.uint32(5)).astype(xp.int32)  # word index in [0, W)
+    bit = xp.left_shift(xp.asarray(1, dtype=xp.uint32), (hashes & np.uint32(31)))
+    # one-hot over lanes: (..., G, gmax, m, W)
+    onehot = (lane[..., None] == xp.arange(W, dtype=xp.int32)).astype(xp.uint32)
+    contrib = onehot * bit[..., None]
+    contrib = contrib * valid[..., None, None].astype(xp.uint32)
+    # OR-reduce over the elements of the group (same bit can repeat, so a
+    # bitwise OR reduction — supported by the ufunc in both np and jnp).
+    return xp.bitwise_or.reduce(contrib, axis=-3)
+
+
+def build_images_chunked(hashes: np.ndarray, valid: np.ndarray, w: int, chunk: int = 65536) -> np.ndarray:
+    """Host-side chunked variant of :func:`build_images` (bounded temp memory)."""
+    G = hashes.shape[0]
+    out = np.zeros((G, hashes.shape[2], num_lanes(w)), dtype=np.uint32)
+    for lo in range(0, G, chunk):
+        hi = min(G, lo + chunk)
+        out[lo:hi] = build_images(hashes[lo:hi], valid[lo:hi], w)
+    return out
+
+
+def popcount32(x):
+    """Per-lane popcount of uint32 (SWAR — no special instructions needed)."""
+    xp = _xp(x)
+    x = xp.asarray(x, dtype=xp.uint32)
+    x = x - ((x >> np.uint32(1)) & np.uint32(0x55555555))
+    x = (x & np.uint32(0x33333333)) + ((x >> np.uint32(2)) & np.uint32(0x33333333))
+    x = (x + (x >> np.uint32(4))) & np.uint32(0x0F0F0F0F)
+    return (x * np.uint32(0x01010101)) >> np.uint32(24)
+
+
+def any_nonzero(images, axis=-1):
+    """True where the OR over ``axis`` lanes is non-zero (H != empty-set)."""
+    xp = _xp(images)
+    return xp.max(images, axis=axis) != 0 if xp is not np else np.bitwise_or.reduce(images, axis=axis) != 0
+
+
+def bits_to_values(word_rep: np.ndarray, w: int) -> np.ndarray:
+    """Host-side: enumerate the set bits of a packed bitmap -> sorted values.
+
+    Mirrors the paper's footnote-1 lowbit/NLZ scan; vectorized via unpackbits.
+    """
+    W = num_lanes(w)
+    assert word_rep.shape[-1] == W
+    le_bytes = word_rep.astype("<u4").view(np.uint8)
+    bits = np.unpackbits(le_bytes, bitorder="little")
+    return np.nonzero(bits)[0].astype(np.uint32)

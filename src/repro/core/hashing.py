@@ -1,0 +1,150 @@
+"""Hash families used by the paper's data structures.
+
+Two kinds of hash functions appear in the paper:
+
+* ``h : Sigma -> [w]`` — 2-universal hashes whose images are encoded as w-bit
+  word representations (Section 3.1).  We use multiply-shift hashing
+  (Dietzfelbinger et al.): ``h_{a,b}(x) = (a*x + b) >> (32 - log2 w)`` with a
+  random odd 32-bit ``a`` — 2-universal on 32-bit keys and a single fused
+  multiply-add on both CPUs and the TPU VPU.
+
+* ``g : Sigma -> Sigma`` — a *random permutation* used for the randomized
+  partitioning (Section 3.2): elements are ordered by ``g(x)`` and grouped by
+  the ``t`` most significant bits ``g_t(x)``.  We realize ``g`` as an
+  invertible bit-mixing permutation on uint32 (odd-multiply and xor-shift
+  rounds, both bijections mod 2^32), so ``g`` is exactly a permutation —
+  matching the paper's note that permutations (total order, negative
+  dependence) and universal hashes are interchangeable here.
+
+All functions accept numpy or jax arrays and stay in uint32 (the container
+runs with jax x64 disabled; 32-bit keys cover the paper's universe sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "HashFamily",
+    "BitMixPermutation",
+    "random_hash_family",
+    "default_permutation",
+]
+
+_GOLDEN32 = np.uint32(0x9E3779B1)  # odd; 2^32 / golden ratio
+
+
+def _xp(x):
+    """Return the array namespace (numpy or jax.numpy) of ``x``."""
+    if isinstance(x, np.ndarray) or np.isscalar(x):
+        return np
+    import jax.numpy as jnp
+
+    return jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HashFamily:
+    """``m`` independent 2-universal multiply-shift hashes Sigma -> [w].
+
+    ``w`` must be a power of two; each hash returns values in ``[0, w)``.
+    """
+
+    a: np.ndarray  # (m,) uint32, odd
+    b: np.ndarray  # (m,) uint32
+    w: int
+
+    def __post_init__(self):
+        assert self.w & (self.w - 1) == 0, "w must be a power of two"
+        assert np.all(self.a % 2 == 1), "multipliers must be odd"
+
+    @property
+    def m(self) -> int:
+        return int(self.a.shape[0])
+
+    @property
+    def shift(self) -> int:
+        return 32 - int(self.w).bit_length() + 1  # 32 - log2(w)
+
+    def apply(self, x, j: int):
+        """Hash values ``x`` (uint32 array) with the ``j``-th function -> [w)."""
+        xp = _xp(x)
+        a = xp.asarray(np.uint32(self.a[j]))
+        b = xp.asarray(np.uint32(self.b[j]))
+        x = xp.asarray(x, dtype=xp.uint32)
+        return (a * x + b) >> np.uint32(self.shift)
+
+    def apply_all(self, x):
+        """Hash with every function: returns ``x.shape + (m,)`` in ``[0, w)``."""
+        xp = _xp(x)
+        x = xp.asarray(x, dtype=xp.uint32)
+        a = xp.asarray(self.a.astype(np.uint32))
+        b = xp.asarray(self.b.astype(np.uint32))
+        return (x[..., None] * a + b) >> np.uint32(self.shift)
+
+
+@dataclasses.dataclass(frozen=True)
+class BitMixPermutation:
+    """An invertible bit-mixing permutation g on uint32.
+
+    Rounds of ``x *= odd`` (invertible mod 2^32) and ``x ^= x >> s``
+    (invertible by iterated shifts).  ``prefix(x, t)`` returns the ``t`` most
+    significant bits of ``g(x)`` — the paper's ``g_t(x)`` group id.
+    """
+
+    mults: tuple  # odd uint32 multipliers
+    shifts: tuple  # xor-shift amounts
+
+    def forward(self, x):
+        xp = _xp(x)
+        y = xp.asarray(x, dtype=xp.uint32)
+        for mul, sh in zip(self.mults, self.shifts):
+            y = y * np.uint32(mul)
+            y = y ^ (y >> np.uint32(sh))
+        return y
+
+    def inverse(self, y):
+        xp = _xp(y)
+        x = xp.asarray(y, dtype=xp.uint32)
+        for mul, sh in zip(reversed(self.mults), reversed(self.shifts)):
+            # invert x ^= x >> sh by repeated application
+            z = x
+            s = sh
+            while s < 32:
+                z = x ^ (z >> np.uint32(sh))
+                s += sh
+            x = z
+            # invert odd multiply via modular inverse mod 2^32
+            inv = pow(int(mul), -1, 1 << 32)
+            x = x * np.uint32(inv)
+        return x
+
+    def prefix(self, x, t: int):
+        """g_t(x): the t most significant bits of g(x) (0 <= t <= 32)."""
+        if t == 0:
+            xp = _xp(x)
+            return xp.zeros_like(xp.asarray(x, dtype=xp.uint32))
+        return self.forward(x) >> np.uint32(32 - t)
+
+
+def random_hash_family(m: int, w: int, seed: int = 0) -> HashFamily:
+    rng = np.random.default_rng(seed)
+    a = (rng.integers(0, 1 << 32, size=m, dtype=np.uint64).astype(np.uint32)) | np.uint32(1)
+    b = rng.integers(0, 1 << 32, size=m, dtype=np.uint64).astype(np.uint32)
+    return HashFamily(a=a, b=b, w=w)
+
+
+def default_permutation(seed: int = 0) -> BitMixPermutation:
+    rng = np.random.default_rng(seed + 7)
+    mults = tuple(
+        int(v) | 1 for v in rng.integers(1, 1 << 32, size=3, dtype=np.uint64)
+    )
+    shifts = (16, 13, 17)
+    return BitMixPermutation(mults=mults, shifts=shifts)
+
+
+def identity_permutation() -> BitMixPermutation:
+    """g = identity — handy for deterministic tests (sorted order == g-order)."""
+    return BitMixPermutation(mults=(1,), shifts=(32 - 1,)) if False else BitMixPermutation(mults=(1,), shifts=())

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the kernels must match; every kernel test
+sweeps shapes/dtypes and asserts allclose against these functions.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SENTINEL32 = jnp.int32(-1)  # 0xFFFFFFFF viewed as int32 — padding sentinel
+
+
+def bitmap_filter_ref(images: jnp.ndarray) -> jnp.ndarray:
+    """Word-representation AND filter (Alg. 5 line 3), batched over groups.
+
+    Args:
+      images: (k, G, m, W) uint32/int32 — for each of the k sets, the m
+        packed hash images of the group aligned to each of the G tuples.
+
+    Returns:
+      (G,) bool — True where the tuple SURVIVES the filter, i.e. for every
+      j in [m] the k-way AND of the j-th images is non-zero.  (A tuple is
+      *skipped* when any image-AND is all-zero — the paper's test.)
+    """
+    h = images[0]
+    for i in range(1, images.shape[0]):
+        h = h & images[i]                       # (G, m, W)
+    nonzero = (h != 0).any(axis=-1)             # (G, m)
+    return nonzero.all(axis=-1)                 # (G,)
+
+
+def group_match_ref(a_vals: jnp.ndarray, b_vals: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs small-group intersection (TPU replacement for the linear
+    merge in IntersectSmall): which elements of ``a`` occur in ``b``.
+
+    Args:
+      a_vals: (S, ga) int32 — survivor groups of set A, sentinel-padded (-1).
+      b_vals: (S, gb) int32 — aligned survivor groups of set B.
+
+    Returns:
+      (S, ga) bool — True where a real element of ``a`` is present in ``b``.
+    """
+    eq = a_vals[:, :, None] == b_vals[:, None, :]
+    return eq.any(axis=-1) & (a_vals != SENTINEL32)

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, without allocating any real arrays:
+  * proof the sharding config is coherent (lower().compile() succeeds);
+  * per-device memory analysis (argument/temp/output bytes);
+  * per-device HLO flops + bytes (cost_analysis);
+  * collective bytes by collective type, parsed from the optimized HLO —
+    the inputs to the roofline model in benchmarks/roofline.py.
+
+Results are cached as JSON under benchmarks/artifacts/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<rtype>\([^=]*?\)|[a-z0-9\[\],{}/_.-]+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _bytes_of_type(typestr: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> Dict[str, Any]:
+    """Sum per-device wire bytes per collective type (ring estimates):
+    all-gather/all-to-all: result bytes; reduce-scatter/permute: result
+    bytes; all-reduce: 2x result bytes (reduce-scatter + all-gather)."""
+    per_type: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    wire_total = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _bytes_of_type(m.group("rtype"))
+        g = _GROUPS_RE.search(line)
+        if g:
+            gsize = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            gsize = int(gi.group(2)) if gi else default_group
+        frac = (gsize - 1) / max(1, gsize)
+        wire = nbytes * frac * (2.0 if op == "all-reduce" else 1.0)
+        per_type[op] = per_type.get(op, 0.0) + wire
+        count[op] = count.get(op, 0) + 1
+        wire_total += wire
+    return {"bytes_by_type": per_type, "count_by_type": count,
+            "wire_bytes_per_device": wire_total}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             fsdp: Optional[bool] = None, remat: bool = True,
+             variant: str = "baseline") -> Dict[str, Any]:
+    import jax
+    from ..configs import get_config, shape_by_name
+    from ..models.model import build_model
+    from ..optim import adamw
+    from ..parallel.sharding import batch_pspecs, shardings_of
+    from ..train.step import (
+        abstract_params, build_serve_decode, build_train_step,
+    )
+    from .mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "variant": variant,
+        "params_B": cfg.param_count() / 1e9,
+        "active_params_B": cfg.active_param_count() / 1e9,
+    }
+
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        rec["status"] = "skip"
+        rec["reason"] = ("pure full-attention arch: 524k dense decode is the "
+                        "quadratic regime excluded by the shape suite (DESIGN.md §6)")
+        return rec
+
+    model = build_model(cfg)
+    t0 = time.time()
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from .. import tuning
+    import contextlib
+    knobs = tuning.parse(variant)
+    rec["tuning"] = knobs
+
+    with mesh, tuning.overrides(**knobs):
+        if shape.kind == "train":
+            from ..train.step import auto_microbatch
+            micro = auto_microbatch(shape.global_batch, shape.seq_len, mesh)
+            rec["microbatch"] = micro
+            step, (p_specs, o_specs), opt_cfg = build_train_step(
+                model, mesh, fsdp=fsdp, microbatch=micro)
+            batch_abs = model.batch_spec(shape)
+            b_specs = batch_pspecs(batch_abs, mesh)
+            p_abs = abstract_params(model)
+            o_abs = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), p_abs)
+            in_sh = (shardings_of(p_abs, p_specs, mesh),
+                     jax.tree_util.tree_map(lambda _, s: NamedSharding(mesh, s),
+                                            o_abs, o_specs),
+                     shardings_of(batch_abs, b_specs, mesh))
+            metrics_sh = {k: NamedSharding(mesh, P()) for k in
+                          ("grad_norm", "lr", "loss")}
+            out_sh = (in_sh[0], in_sh[1], metrics_sh)
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_abs, o_abs, batch_abs)
+        elif shape.kind == "prefill":
+            from ..train.step import build_serve_prefill
+            from ..parallel.sharding import assign_spec, dp_axes
+            fn, p_specs = build_serve_prefill(model, mesh)
+            p_abs = abstract_params(model)
+            batch_abs = model.batch_spec(shape)
+            b_specs = batch_pspecs(batch_abs, mesh)
+            logits_sh = NamedSharding(mesh, assign_spec(
+                (shape.global_batch, cfg.vocab),
+                [(dp_axes(mesh), -2), ("model", -1)], mesh))
+            jitted = jax.jit(fn,
+                             in_shardings=(shardings_of(p_abs, p_specs, mesh),
+                                           shardings_of(batch_abs, b_specs, mesh)),
+                             out_shardings=logits_sh)
+            lowered = jitted.lower(p_abs, batch_abs)
+        else:  # decode
+            fn, p_specs, c_specs, cache_abs = build_serve_decode(
+                model, mesh, shape.global_batch, shape.seq_len)
+            p_abs = abstract_params(model)
+            batch_abs = model.batch_spec(shape)
+            tok_abs, pos_abs = batch_abs["tokens"], batch_abs["pos"]
+            from ..parallel.sharding import assign_spec, dp_axes
+            tok_spec = batch_pspecs({"tokens": tok_abs}, mesh)["tokens"]
+            c_sh = shardings_of(cache_abs, c_specs, mesh)
+            logits_sh = NamedSharding(mesh, assign_spec(
+                (shape.global_batch, cfg.vocab),
+                [(dp_axes(mesh), -2), ("model", -1)], mesh))
+            jitted = jax.jit(
+                fn,
+                in_shardings=(shardings_of(p_abs, p_specs, mesh), c_sh,
+                              NamedSharding(mesh, tok_spec),
+                              NamedSharding(mesh, P())),
+                out_shardings=(logits_sh, c_sh),
+                donate_argnums=(1,))
+            lowered = jitted.lower(p_abs, cache_abs, tok_abs, pos_abs)
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        rec["cost_analysis"] = {
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        }
+        rec["memory_analysis"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes_est": int(mem.argument_size_in_bytes
+                                  + mem.output_size_in_bytes
+                                  + mem.temp_size_in_bytes
+                                  - mem.alias_size_in_bytes),
+        }
+        hlo = compiled.as_text()
+        from .hlo_analysis import analyze_hlo
+        rec["hlo_analysis"] = analyze_hlo(hlo, default_group=n_dev)
+        rec["collectives_static"] = parse_collectives(hlo, default_group=n_dev)
+        rec["hlo_lines"] = hlo.count("\n")
+        rec["n_devices"] = int(n_dev)
+        rec["status"] = "ok"
+    return rec
+
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fsdp", default=None, choices=(None, "on", "off"))
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    from ..configs import ARCH_IDS
+
+    archs = ARCH_IDS if args.all or not args.arch else (args.arch,)
+    shapes = ALL_SHAPES if args.all or not args.shape else (args.shape,)
+    meshes = (False, True) if (args.both_meshes or args.all) else (args.multi_pod,)
+    fsdp = None if args.fsdp is None else (args.fsdp == "on")
+
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch}__{shape}__{mesh_name}"
+                if args.variant != "baseline":
+                    safe = args.variant.replace("=", "").replace(";", "_")
+                    tag += f"__{safe}"
+                out = ARTIFACTS / f"{tag}.json"
+                if args.skip_existing and out.exists():
+                    prev = json.loads(out.read_text())
+                    if prev.get("status") in ("ok", "skip"):
+                        print(f"[skip-existing] {tag}")
+                        continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, fsdp=fsdp,
+                                   variant=args.variant)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                out.write_text(json.dumps(rec, indent=2))
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    ma = rec["memory_analysis"]
+                    ha = rec["hlo_analysis"]
+                    extra = (f" mem/dev={ma['peak_bytes_est']/2**30:.2f}GiB"
+                             f" flops/dev={ha['flops_per_device']:.3g}"
+                             f" hbm/dev={ha['hbm_bytes_per_device']:.3g}B"
+                             f" wire/dev={ha['wire_bytes_per_device']:.3g}B"
+                             f" compile={rec['compile_s']}s")
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

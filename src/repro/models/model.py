@@ -1,0 +1,158 @@
+"""Unified model facade: one object per architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` exposing:
+  * ``init(key) -> params``
+  * ``loss(params, batch) -> scalar``           (training objective)
+  * ``prefill(params, batch) -> last-token logits``  (inference prefill)
+  * ``init_cache(batch, max_seq) -> cache``
+  * ``decode(params, cache, tokens, pos) -> (logits, cache)``
+  * ``batch_spec(shape) -> dict of ShapeDtypeStructs``  (for the dry-run)
+
+Batches are dicts; extra modality inputs (frames / patch embeddings) appear
+per family.  All functions are pure and jit/pjit-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import encdec, moe, ssm, transformer, xlstm
+from .layers import chunked_xent
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode: Callable
+
+    def batch_spec(self, shape: ShapeConfig, per_host_batch: Optional[int] = None) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for the inputs of this (arch, shape)."""
+        b = per_host_batch or shape.global_batch
+        s = shape.seq_len
+        cfg = self.cfg
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            spec = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if cfg.family == "encdec":
+                spec["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.encoder_seq, cfg.frontend_dim), cfg.activation_dtype)
+            if cfg.frontend == "patch":
+                spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_patches, cfg.frontend_dim), cfg.activation_dtype)
+            if shape.kind == "prefill":
+                spec.pop("labels")
+            return spec
+        # decode: one new token against a seq_len-deep cache
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+
+def _dense_model(cfg: ArchConfig) -> Model:
+    def prefill(params, batch):
+        hidden = transformer.forward(params, cfg, batch["tokens"],
+                                     batch.get("patch_embeds"))
+        return transformer.logits_fn(params, cfg, hidden[:, -1])
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(key, cfg),
+        loss=lambda params, batch: transformer.loss_fn(params, cfg, batch),
+        prefill=prefill,
+        init_cache=lambda b, s, dtype=None: transformer.init_cache(cfg, b, s, dtype),
+        decode=lambda params, cache, tokens, pos: transformer.decode_step(
+            params, cfg, cache, tokens, pos),
+    )
+
+
+def _moe_model(cfg: ArchConfig) -> Model:
+    def prefill(params, batch):
+        hidden, _ = moe.forward(params, cfg, batch["tokens"])
+        return transformer.logits_fn(params, cfg, hidden[:, -1])
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: moe.init_params(key, cfg),
+        loss=lambda params, batch: moe.loss_fn(params, cfg, batch),
+        prefill=prefill,
+        init_cache=lambda b, s, dtype=None: transformer.init_cache(cfg, b, s, dtype),
+        decode=lambda params, cache, tokens, pos: moe.decode_step(
+            params, cfg, cache, tokens, pos),
+    )
+
+
+def _ssm_model(cfg: ArchConfig) -> Model:
+    def prefill(params, batch):
+        hidden = ssm.forward(params, cfg, batch["tokens"])
+        return transformer.logits_fn(params, cfg, hidden[:, -1])
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: ssm.init_params(key, cfg),
+        loss=lambda params, batch: ssm.loss_fn(params, cfg, batch),
+        prefill=prefill,
+        init_cache=lambda b, s, dtype=None: ssm.init_cache(cfg, b, s, dtype),
+        decode=lambda params, cache, tokens, pos: ssm.decode_step(
+            params, cfg, cache, tokens, pos),
+    )
+
+
+def _xlstm_model(cfg: ArchConfig) -> Model:
+    def prefill(params, batch):
+        hidden = xlstm.forward(params, cfg, batch["tokens"])
+        return transformer.logits_fn(params, cfg, hidden[:, -1])
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: xlstm.init_params(key, cfg),
+        loss=lambda params, batch: xlstm.loss_fn(params, cfg, batch),
+        prefill=prefill,
+        init_cache=lambda b, s, dtype=None: xlstm.init_cache(cfg, b, s, dtype),
+        decode=lambda params, cache, tokens, pos: xlstm.decode_step(
+            params, cfg, cache, tokens, pos),
+    )
+
+
+def _encdec_model(cfg: ArchConfig) -> Model:
+    def prefill(params, batch):
+        enc_out = encdec.encode(params, cfg, batch["frames"])
+        hidden = encdec.decode_train(params, cfg, batch["tokens"], enc_out)
+        return transformer.logits_fn(params, cfg, hidden[:, -1])
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: encdec.init_params(key, cfg),
+        loss=lambda params, batch: encdec.loss_fn(params, cfg, batch),
+        prefill=prefill,
+        init_cache=lambda b, s, dtype=None: encdec.init_cache(cfg, b, s, dtype),
+        decode=lambda params, cache, tokens, pos: encdec.decode_step(
+            params, cfg, cache, tokens, pos),
+    )
+
+
+_FAMILIES = {
+    "dense": _dense_model,
+    "vlm": _dense_model,
+    "moe": _moe_model,
+    "ssm_hybrid": _ssm_model,
+    "xlstm": _xlstm_model,
+    "encdec": _encdec_model,
+}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return _FAMILIES[cfg.family](cfg)

@@ -1,0 +1,320 @@
+"""Mamba2 (SSD) blocks and the zamba2-style hybrid stack.
+
+Training uses the chunked *state-space dual* (SSD) form of Mamba2: the
+sequence is split into chunks; within a chunk the output is a masked
+quadratic (attention-like) contraction, across chunks a short lax.scan
+carries the (H, P, N) state — O(S) work, parallel within chunks, and a
+compile-friendly two-level loop instead of a length-S scan.
+
+Decode carries the recurrent state explicitly: O(1) per token — this is
+what makes the hybrid/ssm archs eligible for the 524k long-context shape.
+
+zamba2: a stack of Mamba2 blocks with one *shared* GQA attention block
+applied every `attn_every` layers (parameters shared across applications,
+as in the paper) — the shared block's params live outside the scanned
+stack, and the scan body applies it conditionally on the layer index.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import tuning
+from ..configs.base import ArchConfig
+from ..parallel import ctx
+from .layers import (
+    attention_decode, attn_init, chunked_xent, dense_init, mlp, mlp_init,
+    rmsnorm, rmsnorm_init,
+)
+from .transformer import _attention_dyn, _embed, attn_spec, logits_fn
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+def mamba_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def mamba_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in, nh, ns = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = cfg.p_dtype
+    return {
+        # fused input projection -> [x, z, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * d_in + 2 * ns + nh, dt),
+        "w_out": dense_init(ks[1], d_in, d, dt),
+        "conv": (jax.random.normal(ks[2], (4, d_in)) * 0.2).astype(dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),           # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dt),
+    }
+
+
+def _mamba_proj(p: Params, cfg: ArchConfig, x: jnp.ndarray):
+    d_in, nh, ns = mamba_dims(cfg)
+    dt_ = x.dtype
+    w_in = ctx.constrain(p["w_in"].astype(dt_), (None, "model"))
+    zxbcdt = x @ w_in
+    xs, z, B, C, dtv = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + ns, 2 * d_in + 2 * ns], axis=-1)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])  # (..., nh)
+    return xs, z, B, C, dtv
+
+
+def _causal_conv(p: Params, xs: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise width-4 causal conv over sequence (B, S, d_in)."""
+    w = p["conv"].astype(xs.dtype)          # (4, d_in)
+    pad = jnp.pad(xs, ((0, 0), (3, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * w[i] for i in range(4))
+    return jax.nn.silu(out)
+
+
+def mamba_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                  chunk: int = 256) -> jnp.ndarray:
+    """Chunked SSD forward. x: (B, S, d) -> (B, S, d)."""
+    b, s, _ = x.shape
+    d_in, nh, ns = mamba_dims(cfg)
+    hp = d_in // nh
+    xs, z, B, C, dtv = _mamba_proj(p, cfg, x)
+    xs = _causal_conv(p, xs)
+    xh = xs.reshape(b, s, nh, hp)
+    A = -jnp.exp(p["A_log"])                                   # (nh,)
+    dA = dtv * A                                               # (B, S, nh) <= 0
+
+    chunk = min(chunk, s)
+    nc = max(1, s // chunk)
+    if nc * chunk != s:
+        chunk, nc = s, 1
+    c = chunk
+
+    def resh(t, feat):
+        return t.reshape(b, nc, c, *feat)
+
+    xh_c = resh(xh, (nh, hp))
+    B_c = resh(B, (ns,))
+    C_c = resh(C, (ns,))
+    dA_c = resh(dA, (nh,))
+    dt_c = resh(dtv, (nh,))
+
+    # cumulative within-chunk log decay: L[i] = sum_{j<=i} dA
+    seg = jnp.cumsum(dA_c, axis=2)                             # (B, nc, c, nh)
+
+    # ---- intra-chunk (quadratic) term:
+    # Y_intra[i] = sum_{j<=i} C_i.B_j * exp(seg_i - seg_j) * dt_j * x_j
+    CB = jnp.einsum("bnis,bnjs->bnij", C_c, B_c)               # (B,nc,c,c); n = chunk idx
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (B,nc,c,c,nh) = seg_i - seg_j
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    gate = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+    M = (CB[..., None] * gate * dt_c[:, :, None, :, :]).astype(x.dtype)  # (B,nc,i,j,nh)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", M, xh_c)
+
+    # ---- chunk states: S_n = sum_j exp(seg_end - seg_j) dt_j B_j x_j^T
+    end = seg[:, :, -1:, :]                                    # (B,nc,1,nh)
+    w_j = (jnp.exp(end - seg) * dt_c).astype(x.dtype)          # (B,nc,c,nh)
+    states = jnp.einsum("bnjh,bnjs,bnjhp->bnhsp", w_j, B_c,
+                        xh_c)                                  # (B,nc,nh,ns,hp)
+
+    # ---- inter-chunk scan: h_{n} = exp(sum dA_n) h_{n-1} + S_n
+    chunk_decay = jnp.exp(end[:, :, 0, :])                     # (B,nc,nh)
+
+    def scan_body(hprev, xs_):
+        st, dec = xs_
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, nh, ns, hp), jnp.float32)
+    _, h_in = jax.lax.scan(
+        scan_body, h0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4).astype(x.dtype)       # state entering chunk n
+
+    # ---- inter-chunk contribution: Y_inter[i] = C_i . (exp(seg_i) h_in)
+    y_inter = jnp.einsum("bnis,bnhsp,bnih->bnihp",
+                         C_c, h_in, jnp.exp(seg).astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, s, nh, hp)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    w_out = ctx.constrain(p["w_out"].astype(x.dtype), ("model", None))
+    return y @ w_out
+
+
+def mamba_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                 state: jnp.ndarray, conv_state: jnp.ndarray):
+    """O(1) recurrent step. x: (B, 1, d); state: (B, nh, ns, hp);
+    conv_state: (B, 4, d_in) rolling window."""
+    b = x.shape[0]
+    d_in, nh, ns = mamba_dims(cfg)
+    hp = d_in // nh
+    xs, z, B, C, dtv = _mamba_proj(p, cfg, x)
+    conv_state = jnp.concatenate([conv_state[:, 1:], xs], axis=1)  # (B,4,d_in)
+    xs = jax.nn.silu(jnp.einsum("bwd,wd->bd", conv_state, p["conv"].astype(x.dtype)))[:, None]
+    xh = xs.reshape(b, nh, hp)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv[:, 0] * A)                                # (B, nh)
+    Bv = B[:, 0]                                               # (B, ns)
+    upd = jnp.einsum("bh,bs,bhp->bhsp", dtv[:, 0].astype(x.dtype), Bv, xh)
+    state = state * dA[:, :, None, None].astype(state.dtype) + upd.astype(state.dtype)
+    y = jnp.einsum("bs,bhsp->bhp", C[:, 0], state.astype(x.dtype))
+    y = y + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, 1, d_in)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    w_out = ctx.constrain(p["w_out"].astype(x.dtype), ("model", None))
+    return y @ w_out, state, conv_state
+
+
+# --------------------------------------------------------------------------
+# zamba2 hybrid stack
+# --------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    # zamba2-style: the per-layer block is Mamba2 only; the MLP lives in the
+    # parameter-shared transformer block applied every `attn_every` layers.
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.p_dtype),
+        "mamba": mamba_init(key, cfg),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    kemb, klayers, kattn = jax.random.split(key, 3)
+    dt = cfg.p_dtype
+    lk = jax.random.split(klayers, cfg.n_layers)
+    p: Params = {
+        "embed": dense_init(kemb, cfg.vocab, cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(lk),
+        "ln_f": rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.attn_every:
+        ka, km = jax.random.split(kattn)
+        p["shared_attn"] = attn_init(ka, attn_spec(cfg), dt)
+        p["shared_ln"] = rmsnorm_init(cfg.d_model, dt)
+        p["shared_ln2"] = rmsnorm_init(cfg.d_model, dt)
+        p["shared_mlp"] = mlp_init(km, cfg.d_model, cfg.d_ff, dt, cfg.mlp_variant)
+    return p
+
+
+def _chunk_layout(cfg: ArchConfig):
+    """(n_outer, inner) chunking: shared attn applied once per outer chunk.
+
+    Expressed as two nested scans (no lax.cond) so static HLO analysis is
+    exact and the shared block's cost appears exactly n_outer times.
+    """
+    every = cfg.attn_every
+    L = cfg.n_layers
+    if every and every <= L and L % every == 0:
+        return L // every, every
+    return 0, L  # no shared attention
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            remat: bool = True, q_chunk: int = 512) -> jnp.ndarray:
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    spec = attn_spec(cfg)
+    win = jnp.int32(cfg.sliding_window or 0)
+    n_outer, inner = _chunk_layout(cfg)
+
+    def mamba_block(x, lp):
+        h = rmsnorm(lp["ln1"], x)
+        return x + mamba_forward(lp["mamba"], cfg, h), None
+
+    if n_outer == 0:
+        body = tuning.remat_wrap(mamba_block) if remat else mamba_block
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return rmsnorm(params["ln_f"], x)
+
+    layers = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_outer, inner, *a.shape[1:]), params["layers"])
+
+    def outer(x, chunk_p):
+        x, _ = jax.lax.scan(mamba_block, x, chunk_p)
+        h = rmsnorm(params["shared_ln"], x)
+        x = x + _attention_dyn(params["shared_attn"], spec, h, positions,
+                               win, q_chunk)
+        x = x + mlp(params["shared_mlp"], rmsnorm(params["shared_ln2"], x))
+        return x, None
+
+    if remat:
+        outer = tuning.remat_wrap(outer)
+    x, _ = jax.lax.scan(outer, x, layers)
+    return rmsnorm(params["ln_f"], x)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    hidden = forward(params, cfg, batch["tokens"])
+    return chunked_xent(hidden, params["embed"], batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> Params:
+    d_in, nh, ns = mamba_dims(cfg)
+    hp = d_in // nh
+    dt = dtype or cfg.activation_dtype
+    cache: Params = {
+        "ssm": jnp.zeros((cfg.n_layers, batch, nh, ns, hp), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, 4, d_in), dt),
+    }
+    if _chunk_layout(cfg)[0]:
+        # shared attention block: one rolling KV cache (window-bounded when a
+        # sliding window is configured; otherwise full-depth)
+        wlen = min(max_seq, cfg.sliding_window or max_seq)
+        cache["k"] = jnp.zeros((batch, wlen, cfg.n_kv_heads, cfg.hd), dt)
+        cache["v"] = jnp.zeros((batch, wlen, cfg.n_kv_heads, cfg.hd), dt)
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    x = _embed(params, cfg, tokens)
+    spec = attn_spec(cfg)
+    n_outer, inner = _chunk_layout(cfg)
+
+    def mamba_block(x, xs):
+        lp, st, cs = xs
+        h = rmsnorm(lp["ln1"], x)
+        y, st, cs = mamba_decode(lp["mamba"], cfg, h, st, cs)
+        return x + y, (st, cs)
+
+    if n_outer == 0:
+        x, (st, cs) = jax.lax.scan(
+            mamba_block, x, (params["layers"], cache["ssm"], cache["conv"]))
+        x = rmsnorm(params["ln_f"], x)
+        return logits_fn(params, cfg, x[:, 0]), {"ssm": st, "conv": cs}
+
+    resh = lambda a: a.reshape(n_outer, inner, *a.shape[1:])
+    layers = jax.tree_util.tree_map(resh, params["layers"])
+    ssm_c = resh(cache["ssm"])
+    conv_c = resh(cache["conv"])
+    wlen = cache["k"].shape[1]
+
+    def outer(carry, xs):
+        x, ck, cv = carry
+        lp, st_in, cs_in = xs
+        x, (st, cs) = jax.lax.scan(mamba_block, x, (lp, st_in, cs_in))
+        h = rmsnorm(params["shared_ln"], x)
+        wpos = jnp.minimum(pos, wlen - 1)  # saturating rolling window
+        h, ck, cv = attention_decode(params["shared_attn"], spec, h, ck, cv,
+                                     wpos)
+        x = x + h
+        x = x + mlp(params["shared_mlp"], rmsnorm(params["shared_ln2"], x))
+        return (x, ck, cv), (st, cs)
+
+    (x, ck, cv), (st, cs) = jax.lax.scan(
+        outer, (x, cache["k"], cache["v"]), (layers, ssm_c, conv_c))
+    x = rmsnorm(params["ln_f"], x)
+    logits = logits_fn(params, cfg, x[:, 0])
+    unsh = lambda a: a.reshape(cfg.n_layers, *a.shape[2:])
+    return logits, {"ssm": unsh(st), "conv": unsh(cs), "k": ck, "v": cv}

@@ -1,0 +1,256 @@
+"""Dense decoder-only transformer (qwen3 / starcoder2 / gemma3 / phi3-vision).
+
+One implementation covers the whole dense family:
+  * GQA attention with optional qk-norm (qwen3) and RoPE;
+  * per-layer local/global attention pattern (gemma3's 5:1 sliding-window)
+    expressed as a scanned per-layer window flag — shapes stay homogeneous
+    so the layer stack is a single jax.lax.scan (small HLO, fast compile,
+    remat-friendly);
+  * optional patch-embedding frontend stub (phi-3-vision): precomputed patch
+    embeddings are projected and prepended to the token sequence.
+
+Params are stacked along a leading layer axis; `jax.checkpoint` wraps the
+scan body (full remat of the layer — the baseline activation-checkpoint
+policy; see EXPERIMENTS.md §Perf for the tuned policies).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .. import tuning
+from .layers import (
+    AttnSpec, attention, attention_decode, attn_init, chunked_xent,
+    dense_init, mlp, mlp_init, rmsnorm, rmsnorm_init,
+)
+
+Params = Dict[str, Any]
+
+
+def attn_spec(cfg: ArchConfig) -> AttnSpec:
+    return AttnSpec(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.hd, qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        window=cfg.sliding_window,
+    )
+
+
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """Per-layer sliding-window sizes; 0 = full attention.
+
+    gemma3: `local_global_ratio` local layers then 1 global, repeating.
+    """
+    if cfg.sliding_window is None:
+        return jnp.zeros((cfg.n_layers,), dtype=jnp.int32)
+    if not cfg.local_global_ratio:
+        return jnp.full((cfg.n_layers,), cfg.sliding_window, dtype=jnp.int32)
+    r = cfg.local_global_ratio
+    pattern = [(0 if (i % (r + 1)) == r else cfg.sliding_window) for i in range(cfg.n_layers)]
+    return jnp.asarray(pattern, dtype=jnp.int32)
+
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = cfg.p_dtype
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "attn": attn_init(ks[0], attn_spec(cfg), dt),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt, cfg.mlp_variant),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    kemb, klayers, kfin, kpatch = jax.random.split(key, 4)
+    dt = cfg.p_dtype
+    layer_keys = jax.random.split(klayers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    p: Params = {
+        "embed": dense_init(kemb, cfg.vocab, cfg.d_model, dt),
+        "layers": layers,
+        "ln_f": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(kfin, cfg.vocab, cfg.d_model, dt)
+    if cfg.frontend == "patch":
+        p["patch_proj"] = dense_init(kpatch, cfg.frontend_dim, cfg.d_model, dt)
+    return p
+
+
+def _embed(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+           patch_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    from ..parallel import ctx as _ctx
+    emb = _ctx.constrain(params["embed"].astype(cfg.activation_dtype),
+                         ("model", None))
+    x = emb[tokens]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if patch_embeds is not None and "patch_proj" in params:
+        proj = patch_embeds.astype(x.dtype) @ params["patch_proj"].astype(x.dtype)
+        # patch tokens replace the first P positions (the prompt's image slots)
+        pcount = proj.shape[1]
+        x = jnp.concatenate([proj, x[:, pcount:]], axis=1)
+    return x
+
+
+def _layer_fwd(cfg: ArchConfig, x, layer_p, window, positions, q_chunk=512):
+    from ..parallel import ctx as _ctx
+    spec = attn_spec(cfg)
+    h = rmsnorm(layer_p["ln1"], x)
+    # window is a traced per-layer int32: 0 => full attention.  Both branches
+    # share shapes so a jnp.where-free select via mask arithmetic suffices:
+    # we pass the dynamic window into the mask directly.
+    h = _attention_dyn(layer_p["attn"], spec, h, positions, window, q_chunk)
+    x = x + h
+    h = rmsnorm(layer_p["ln2"], x)
+    x = x + mlp(layer_p["mlp"], h)
+    if tuning.get("seq_shard_mlp"):
+        # Megatron-SP-style: keep the residual stream sequence-sharded over
+        # `model` between layers (XLA turns the TP psums into
+        # reduce-scatter + all-gather pairs at 1/M volume each)
+        x = _ctx.constrain(x, (_ctx.DP, "model", None))
+    return x
+
+
+def _attention_dyn(p, spec: AttnSpec, x, positions, window, q_chunk):
+    """attention() with a *traced* window scalar (0 = unlimited)."""
+    import math as _math
+
+    b, s, d = x.shape
+    from .layers import _qkv, _repeat_kv
+    q_chunk = tuning.get("q_chunk")
+    sdt = tuning.scores_dtype()
+
+    q, k, v = _qkv(p, spec, x, positions)
+    groups = spec.n_heads // spec.n_kv
+    gqa_native = tuning.get("gqa_native") and groups > 1
+    if not gqa_native:
+        k = _repeat_kv(k, groups)
+        v = _repeat_kv(v, groups)
+    scale = 1.0 / _math.sqrt(spec.head_dim)
+    kv_pos = jnp.arange(k.shape[1])
+    q_chunk = min(q_chunk, s)
+    n_chunks = max(1, s // q_chunk)
+    if n_chunks * q_chunk != s:
+        q_chunk, n_chunks = s, 1
+    qs = q.reshape(b, n_chunks, q_chunk, spec.n_heads, spec.head_dim)
+    pos_chunks = positions.reshape(b, n_chunks, q_chunk)
+    eff_window = jnp.where(window > 0, window, jnp.int32(2 ** 30))
+
+    neg = jnp.asarray(-30000.0 if sdt == jnp.bfloat16 else -1e30, sdt)
+
+    def one_chunk(q_i, pos_i):
+        # scale folded into q (tiny tensor); scores born in sdt directly
+        # (no separate convert pass); softmax normalization applied to the
+        # output, not the (c,S) probability tile.
+        qs_ = q_i * jnp.asarray(scale, q_i.dtype)
+        if gqa_native:
+            # score einsum against the Kv heads directly: repeated K/V are
+            # never materialized (reads Kv instead of H head planes)
+            b_, c_, H_, D_ = qs_.shape
+            qg = qs_.reshape(b_, c_, spec.n_kv, groups, D_)
+            scores = jnp.einsum("bckgd,bskd->bkgcs", qg, k,
+                                preferred_element_type=sdt)
+            delta = pos_i[:, None, None, :, None] - kv_pos[None, None, None, None, :]
+            cmask = (delta >= 0) & (delta < eff_window)
+            scores = jnp.where(cmask, scores, neg)
+            mx = jnp.max(scores, axis=-1, keepdims=True)
+            ex = jnp.exp(scores - mx)
+            den = jnp.sum(ex, axis=-1)                    # (B,Kv,G,c)
+            o = jnp.einsum("bkgcs,bskd->bckgd", ex.astype(q_i.dtype), v)
+            o = o / jnp.moveaxis(den, 3, 1)[..., None].astype(o.dtype)
+            return o.reshape(b_, c_, H_, D_)
+        scores = jnp.einsum("bchk,bshk->bhcs", qs_, k,
+                            preferred_element_type=sdt)
+        delta = pos_i[:, None, :, None] - kv_pos[None, None, None, :]
+        cmask = (delta >= 0) & (delta < eff_window)
+        scores = jnp.where(cmask, scores, neg)
+        mx = jnp.max(scores, axis=-1, keepdims=True)
+        ex = jnp.exp(scores - mx)
+        den = jnp.sum(ex, axis=-1)                        # (B,H,c)
+        o = jnp.einsum("bhcs,bshk->bchk", ex.astype(q_i.dtype), v)
+        return o / jnp.swapaxes(den, 1, 2)[..., None].astype(o.dtype)
+
+    if n_chunks == 1:
+        o = one_chunk(qs[:, 0], pos_chunks[:, 0])[:, None]
+    else:
+        _, o = jax.lax.scan(
+            lambda _, xs: (None, one_chunk(*xs)), None,
+            (qs.transpose(1, 0, 2, 3, 4), pos_chunks.transpose(1, 0, 2)))
+        o = o.transpose(1, 0, 2, 3, 4)
+    o = o.reshape(b, s, spec.n_heads, spec.head_dim)
+    from ..parallel import ctx as _ctx
+    wo = _ctx.constrain(p["wo"].astype(o.dtype), ("model", None, None))
+    return jnp.einsum("bshk,hkd->bsd", o, wo)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            patch_embeds: Optional[jnp.ndarray] = None,
+            q_chunk: int = 512, remat: bool = True) -> jnp.ndarray:
+    """Token ids -> final hidden states (B, S, d)."""
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens, patch_embeds)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        layer_p, win = xs
+        return _layer_fwd(cfg, x, layer_p, win, positions, q_chunk), None
+
+    if remat:
+        body = tuning.remat_wrap(body)
+    x, _ = jax.lax.scan(body, x, (params["layers"], windows))
+    return rmsnorm(params["ln_f"], x)
+
+
+def logits_fn(params: Params, cfg: ArchConfig, hidden: jnp.ndarray) -> jnp.ndarray:
+    from ..parallel import ctx as _ctx
+    emb = params.get("unembed", params["embed"])
+    emb = _ctx.constrain(emb.astype(hidden.dtype), ("model", None))
+    return hidden @ emb.T
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            q_chunk: int = 512) -> jnp.ndarray:
+    hidden = forward(params, cfg, batch["tokens"], batch.get("patch_embeds"),
+                     q_chunk=q_chunk)
+    emb = params.get("unembed", params["embed"])
+    return chunked_xent(hidden, emb, batch["labels"])
+
+
+# ---------------------------------------------------------------- serving
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> Params:
+    dt = dtype or cfg.activation_dtype
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt),
+    }
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode: (B, 1) tokens at position `pos` -> (B, V) logits."""
+    x = _embed(params, cfg, tokens)
+    spec = attn_spec(cfg)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        layer_p, ck, cv, win = xs
+        h = rmsnorm(layer_p["ln1"], x)
+        # traced per-layer window scalar; 0 = full attention
+        w = jnp.where(win > 0, win, jnp.int32(2 ** 30))
+        h, ck, cv = attention_decode(layer_p["attn"], spec, h, ck, cv, pos, window=w)
+        x = x + h
+        h = rmsnorm(layer_p["ln2"], x)
+        x = x + mlp(layer_p["mlp"], h)
+        return x, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], windows))
+    x = rmsnorm(params["ln_f"], x)
+    logits = logits_fn(params, cfg, x[:, 0])
+    return logits, {"k": ck, "v": cv}

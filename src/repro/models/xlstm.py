@@ -1,0 +1,284 @@
+"""xLSTM stack (sLSTM + mLSTM blocks) — xlstm-350m.
+
+* mLSTM: matrix-memory cell in its parallel *chunked* form — a gated
+  linear-attention contraction with per-step scalar forget decay (same
+  two-level chunk structure as the Mamba2 SSD path: quadratic intra-chunk,
+  scanned inter-chunk state (H, dk, dv)).
+* sLSTM: scalar-memory cell with true hidden-to-gate recurrence — serial
+  by construction, implemented as a lax.scan over time (this is the
+  documented sequential bottleneck of the family; see DESIGN.md).
+
+Block pattern: every ``slstm_every``-th block is an sLSTM, the rest are
+mLSTM (grouped into rounds so the stack is two nested homogeneous scans).
+Blocks are pre-LN residual with internal 2x up/down projection (pf=2),
+matching the paper's block layout; no separate FFN (d_ff = 0).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import tuning
+from ..configs.base import ArchConfig
+from ..parallel import ctx
+from .layers import chunked_xent, dense_init, rmsnorm, rmsnorm_init
+from .transformer import _embed, logits_fn
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_up = 2 * cfg.d_model
+    nh = cfg.n_heads
+    hd = d_up // nh
+    return d_up, nh, hd
+
+
+# --------------------------------------------------------------- mLSTM
+
+def mlstm_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_up, nh, hd = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    dt = cfg.p_dtype
+    return {
+        "ln": rmsnorm_init(d, dt),
+        "w_up": dense_init(ks[0], d, 2 * d_up, dt),      # value path + output gate
+        "wq": dense_init(ks[1], d, d_up, dt),
+        "wk": dense_init(ks[2], d, d_up, dt),
+        "w_if": dense_init(ks[3], d, 2 * nh, dt),        # input & forget gates
+        "w_down": dense_init(ks[4], d_up, d, dt),
+        "norm": rmsnorm_init(d_up, dt),
+    }
+
+
+def mlstm_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+    b, s, d = x.shape
+    d_up, nh, hd = _dims(cfg)
+    h = rmsnorm(p["ln"], x)
+    up = h @ ctx.constrain(p["w_up"].astype(x.dtype), (None, "model"))
+    v, og = jnp.split(up, 2, axis=-1)
+    q = (h @ ctx.constrain(p["wq"].astype(x.dtype), (None, "model"))).reshape(b, s, nh, hd)
+    k = (h @ ctx.constrain(p["wk"].astype(x.dtype), (None, "model"))).reshape(b, s, nh, hd) / math.sqrt(hd)
+    v = v.reshape(b, s, nh, hd)
+    gates = (h @ p["w_if"].astype(x.dtype)).astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                  # (B, S, nh)
+    logf = jax.nn.log_sigmoid(fg)
+    i_gate = jnp.exp(jnp.minimum(ig, 0.0))                 # stabilized input gate
+
+    chunk = min(chunk, s)
+    nc = max(1, s // chunk)
+    if nc * chunk != s:
+        chunk, nc = s, 1
+    c = chunk
+    qc = q.reshape(b, nc, c, nh, hd)
+    kc = k.reshape(b, nc, c, nh, hd)
+    vc = v.reshape(b, nc, c, nh, hd)
+    ic = i_gate.reshape(b, nc, c, nh)
+    Fc = jnp.cumsum(logf.reshape(b, nc, c, nh), axis=2)    # within-chunk cum log decay
+
+    # intra-chunk: D_ij = exp(F_i - F_j) * i_j, causal
+    delta = Fc[:, :, :, None, :] - Fc[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    D = jnp.where(causal[None, None, :, :, None], jnp.exp(delta), 0.0)
+    D = D * ic[:, :, None, :, :]                            # (B,nc,i,j,nh)
+    scores = jnp.einsum("bnihd,bnjhd->bnijh", qc, kc)       # n = chunk index
+    M = scores.astype(jnp.float32) * D
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", M.astype(x.dtype), vc)
+
+    # inter-chunk state: S_n = sum_j exp(F_end - F_j) i_j k_j v_j^T
+    end = Fc[:, :, -1:, :]
+    wj = (jnp.exp(end - Fc) * ic).astype(x.dtype)
+    states = jnp.einsum("bnjh,bnjhd,bnjhe->bnhde", wj, kc, vc)  # (B,nc,nh,hd,hd)
+    cdecay = jnp.exp(end[:, :, 0, :])
+
+    def scan_body(hprev, xs_):
+        st, dec = xs_
+        return hprev * dec[:, :, None, None] + st, hprev
+
+    h0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    _, h_in = jax.lax.scan(scan_body, h0,
+                           (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+                            cdecay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4).astype(x.dtype)
+
+    y_inter = jnp.einsum("bnihd,bnhde->bnihe",
+                         qc * jnp.exp(Fc).astype(x.dtype)[..., None], h_in)
+    y = (y_intra + y_inter).reshape(b, s, d_up)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(og)
+    w_down = ctx.constrain(p["w_down"].astype(x.dtype), ("model", None))
+    return x + y @ w_down
+
+
+def mlstm_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray, state: jnp.ndarray):
+    """x: (B, 1, d); state: (B, nh, hd, hd) fp32."""
+    b = x.shape[0]
+    d_up, nh, hd = _dims(cfg)
+    h = rmsnorm(p["ln"], x)
+    up = h @ p["w_up"].astype(x.dtype)
+    v, og = jnp.split(up, 2, axis=-1)
+    q = (h @ p["wq"].astype(x.dtype)).reshape(b, nh, hd)
+    k = (h @ p["wk"].astype(x.dtype)).reshape(b, nh, hd) / math.sqrt(hd)
+    v = v.reshape(b, nh, hd)
+    gates = (h @ p["w_if"].astype(x.dtype)).astype(jnp.float32)
+    ig, fg = jnp.split(gates[:, 0], 2, axis=-1)
+    f = jnp.exp(jax.nn.log_sigmoid(fg))
+    i = jnp.exp(jnp.minimum(ig, 0.0))
+    state = state * f[:, :, None, None] + (
+        i[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", k, v).astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), state).astype(x.dtype)
+    y = y.reshape(b, 1, d_up)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(og)
+    return x + y @ p["w_down"].astype(x.dtype), state
+
+
+# --------------------------------------------------------------- sLSTM
+
+def slstm_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    ks = jax.random.split(key, 3)
+    dt = cfg.p_dtype
+    return {
+        "ln": rmsnorm_init(d, dt),
+        "w_x": dense_init(ks[0], d, 4 * d, dt),             # i, f, z, o from input
+        "w_h": (jax.random.normal(ks[1], (nh, hd, 4 * hd)) /
+                math.sqrt(hd)).astype(dt),                  # block-diag recurrence
+        "w_down": dense_init(ks[2], d, d, dt),
+    }
+
+
+def _slstm_cell(p, cfg, xt, hprev, cprev):
+    """xt: (B, 4d) pre-projected input; hprev/cprev: (B, nh, hd) fp32."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    rec = jnp.einsum("bhd,hde->bhe", hprev.astype(xt.dtype), p["w_h"].astype(xt.dtype))
+    gates = xt.reshape(xt.shape[0], nh, 4 * hd) + rec
+    i, f, z, o = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+    c = jax.nn.sigmoid(f) * cprev + jnp.exp(jnp.minimum(i, 0.0)) * jnp.tanh(z)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def slstm_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    hin = rmsnorm(p["ln"], x)
+    xproj = hin @ p["w_x"].astype(x.dtype)                  # (B, S, 4d)
+
+    def body(carry, xt):
+        h, c = carry
+        h, c = _slstm_cell(p, cfg, xt, h, c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b, nh, hd), jnp.float32)
+    (_, _), hs = jax.lax.scan(body, (h0, h0), xproj.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    return x + y @ p["w_down"].astype(x.dtype)
+
+
+def slstm_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray, h, c):
+    hin = rmsnorm(p["ln"], x)
+    xproj = (hin @ p["w_x"].astype(x.dtype))[:, 0]
+    h, c = _slstm_cell(p, cfg, xproj, h, c)
+    b, d = x.shape[0], cfg.d_model
+    y = h.reshape(b, 1, d).astype(x.dtype)
+    return x + y @ p["w_down"].astype(x.dtype), h, c
+
+
+# --------------------------------------------------------------- stack
+
+def rounds_of(cfg: ArchConfig) -> Tuple[int, int]:
+    every = cfg.slstm_every or cfg.n_layers + 1
+    if every > cfg.n_layers:
+        return 1, cfg.n_layers            # all mLSTM, one round
+    return cfg.n_layers // every, every - 1
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    n_rounds, m_per = rounds_of(cfg)
+    kemb, km, ks_ = jax.random.split(key, 3)
+    dt = cfg.p_dtype
+    mk = jax.random.split(km, n_rounds * m_per).reshape(n_rounds, m_per, 2)
+    p: Params = {
+        "embed": dense_init(kemb, cfg.vocab, cfg.d_model, dt),
+        "ln_f": rmsnorm_init(cfg.d_model, dt),
+        "mlstm": jax.vmap(jax.vmap(lambda k: mlstm_init(k, cfg)))(mk),
+    }
+    if cfg.slstm_every and cfg.slstm_every <= cfg.n_layers:
+        sk = jax.random.split(ks_, n_rounds)
+        p["slstm"] = jax.vmap(lambda k: slstm_init(k, cfg))(sk)
+    return p
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            remat: bool = True) -> jnp.ndarray:
+    x = _embed(params, cfg, tokens)
+    has_s = "slstm" in params
+
+    def round_body(x, xs):
+        def m_body(x, mp):
+            return mlstm_forward(mp, cfg, x), None
+        x, _ = jax.lax.scan(m_body, x, xs["m"])
+        if has_s:
+            x = slstm_forward(xs["s"], cfg, x)
+        return x, None
+
+    if remat:
+        round_body = tuning.remat_wrap(round_body)
+    scanned = {"m": params["mlstm"]}
+    if has_s:
+        scanned["s"] = params["slstm"]
+    x, _ = jax.lax.scan(round_body, x, scanned)
+    return rmsnorm(params["ln_f"], x)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    hidden = forward(params, cfg, batch["tokens"])
+    return chunked_xent(hidden, params["embed"], batch["labels"])
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> Params:
+    n_rounds, m_per = rounds_of(cfg)
+    d_up, nh, hd = _dims(cfg)
+    shd = cfg.d_model // cfg.n_heads
+    cache = {"m_state": jnp.zeros((n_rounds, m_per, batch, nh, hd, hd), jnp.float32)}
+    if cfg.slstm_every and cfg.slstm_every <= cfg.n_layers:
+        cache["s_h"] = jnp.zeros((n_rounds, batch, cfg.n_heads, shd), jnp.float32)
+        cache["s_c"] = jnp.zeros((n_rounds, batch, cfg.n_heads, shd), jnp.float32)
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    x = _embed(params, cfg, tokens)
+    has_s = "s_h" in cache
+
+    def round_body(x, xs):
+        def m_body(x, mxs):
+            mp, st = mxs
+            x, st = mlstm_decode(mp, cfg, x, st)
+            return x, st
+        x, mst = jax.lax.scan(m_body, x, (xs["mp"], xs["mst"]))
+        out = {"mst": mst}
+        if has_s:
+            x, h, c = slstm_decode(xs["sp"], cfg, x, xs["sh"], xs["sc"])
+            out["sh"], out["sc"] = h, c
+        return x, out
+
+    scanned = {"mp": params["mlstm"], "mst": cache["m_state"]}
+    if has_s:
+        scanned.update(sp=params["slstm"], sh=cache["s_h"], sc=cache["s_c"])
+    x, outs = jax.lax.scan(round_body, x, scanned)
+    x = rmsnorm(params["ln_f"], x)
+    logits = logits_fn(params, cfg, x[:, 0])
+    new_cache = {"m_state": outs["mst"]}
+    if has_s:
+        new_cache["s_h"], new_cache["s_c"] = outs["sh"], outs["sc"]
+    return logits, new_cache

@@ -1,0 +1,81 @@
+"""Gradient compression with error feedback (int8 row-scaled quantization).
+
+For cross-pod gradient synchronization the wire, not HBM, is the
+bottleneck (the `pod` axis rides DCI, ~an order of magnitude slower than
+ICI).  Quantizing the pod-level all-reduce payload to int8 cuts that
+traffic 4x vs fp32 / 2x vs bf16; the residual (quantization error) is fed
+back into the next step's gradient so the *accumulated* update is unbiased
+(error-feedback SGD, Seide et al. / Karimireddy et al.).
+
+Usage inside a step function:
+    q, scale = quantize(grad)
+    # all-reduce q (int8) + scale (f32 per row) instead of the raw grad
+    g_hat = dequantize(q, scale)
+    residual = grad - g_hat       # carried to the next step per leaf
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-scaled symmetric int8: scale = max|g| per leading row."""
+    gf = g.astype(jnp.float32)
+    flat = gf.reshape(gf.shape[0], -1) if gf.ndim > 1 else gf.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(g.shape if g.ndim > 1 else (-1,)), scale.squeeze(-1)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, like_shape=None) -> jnp.ndarray:
+    qf = q.astype(jnp.float32)
+    if qf.ndim > 1:
+        flat = qf.reshape(qf.shape[0], -1) * scale[:, None]
+        return flat.reshape(q.shape)
+    return qf * scale
+
+
+def compress_tree(grads: Any, residuals: Any) -> Tuple[Any, Any, Any]:
+    """Error-feedback compression over a gradient pytree.
+
+    Returns (quantized payloads, scales, new residuals).  The caller
+    transports (q, scale) over the slow axis and applies `decompress_tree`
+    on the other side; residuals stay local.
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = quantize(corrected)
+        g_hat = dequantize(q, s)
+        return q, s, corrected - g_hat
+
+    qs, ss, rs = [], [], []
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    rflat = treedef.flatten_up_to(residuals)
+    for g, r in zip(flat, rflat):
+        q, s, nr = one(g, r)
+        qs.append(q); ss.append(s); rs.append(nr)
+    un = treedef.unflatten
+    return un(qs), un(ss), un(rs)
+
+
+def decompress_tree(qs: Any, ss: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: dequantize(q, s), qs, ss,
+        is_leaf=lambda x: isinstance(x, jnp.ndarray) and x.dtype == jnp.int8)
+
+
+def zero_residuals(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_ratio(grads: Any) -> float:
+    """Wire-byte ratio of (int8 payload + f32 row scales) vs raw fp32."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    numel = sum(x.size for x in leaves)
+    q_bytes = numel  # int8
+    s_bytes = sum((x.shape[0] if x.ndim > 1 else 1) * 4 for x in leaves)
+    return (q_bytes + s_bytes) / max(1, numel * 4)

@@ -1,0 +1,66 @@
+"""Activation-sharding context: lets model code place sharding constraints
+without carrying a mesh through every call signature.
+
+Model code calls ``constrain(x, ("model", DP, None))`` — a no-op unless a
+mesh context is active (smoke tests on CPU run unconstrained), otherwise a
+``with_sharding_constraint`` with the placeholder ``DP`` expanded to the
+mesh's data-parallel axes (("pod", "data") on the multi-pod mesh).
+
+The step builders (train/step.py) enter the context inside the jitted
+function body, so the constraints are applied at trace time.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP = "__dp__"
+
+_STATE = {"mesh": None}
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    old = _STATE["mesh"]
+    _STATE["mesh"] = mesh
+    try:
+        yield
+    finally:
+        _STATE["mesh"] = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def _expand(mesh: Mesh, axes) -> Any:
+    if axes == DP:
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return dp if len(dp) > 1 else (dp[0] if dp else None)
+    return axes
+
+
+def constrain(x: jax.Array, spec: Sequence[Any]) -> jax.Array:
+    """Apply with_sharding_constraint(x, P(*spec)) if a mesh is active.
+
+    Entries may be axis names, tuples, None, or the DP placeholder.  Axes
+    that don't divide the corresponding dim are dropped (replicated)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, axes in zip(x.shape, spec):
+        axes = _expand(mesh, axes)
+        if axes is None:
+            resolved.append(None)
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        for a in tup:
+            size *= mesh.shape[a]
+        resolved.append(axes if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

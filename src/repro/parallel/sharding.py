@@ -1,0 +1,203 @@
+"""Sharding rules: name+shape-pattern -> PartitionSpec, for every family.
+
+Mesh axes are roles: ``data`` (+ ``pod`` when present) = DP/FSDP, ``model``
+= TP/EP/SP.  Rules are written against *trailing* dimensions (negative
+indices) so stacked-layer leading axes (scan) transparently map to
+replicated dims.  Every candidate axis is divisibility-checked against the
+mesh — if a preferred dim does not divide, the next candidate is tried, and
+ultimately the dim is replicated.  This makes one rule table serve all ten
+architectures (e.g. kv-head sharding applies only where kv % tp == 0;
+starcoder2's kv=4 falls back to replicated kv projections, exactly the
+MaxText behaviour).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[str, Tuple[str, ...], None]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_axis(mesh: Mesh) -> str:
+    return "model"
+
+
+def _size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def assign_spec(shape: Sequence[int], prefs: List[Tuple[Axes, int]],
+                mesh: Mesh) -> P:
+    """Greedy: for each (axes, negative_dim) preference, attach `axes` to
+    that dim if the dim exists, divides, and neither the dim nor the axes
+    are already used."""
+    ndim = len(shape)
+    out: List[Axes] = [None] * ndim
+    used: set = set()
+    for axes, nd in prefs:
+        if axes is None:
+            continue
+        dim = ndim + nd
+        if dim < 0 or dim >= ndim or out[dim] is not None:
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax_tuple = tuple(a for a in ax_tuple if a in mesh.axis_names and a not in used)
+        if not ax_tuple:
+            continue
+        if shape[dim] % _size(mesh, ax_tuple) != 0:
+            # try a shrinking suffix of the axis tuple
+            while len(ax_tuple) > 1 and shape[dim] % _size(mesh, ax_tuple) != 0:
+                ax_tuple = ax_tuple[1:]
+            if shape[dim] % _size(mesh, ax_tuple) != 0:
+                continue
+        out[dim] = ax_tuple if len(ax_tuple) > 1 else ax_tuple[0]
+        used.update(ax_tuple)
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+def param_rules(fsdp: bool, dp: Tuple[str, ...]):
+    """Ordered (regex over path, prefs) — first match wins.
+
+    prefs are [(axes, trailing_dim), ...]; "model" = TP/EP, dp = FSDP.
+    """
+    f: Axes = dp if fsdp else None
+    return [
+        # MoE experts (E, d, ff): EP on experts + FSDP on d
+        (r"moe/(w_gate|w_up)$", [("model", -3), (f, -2)]),
+        (r"moe/w_down$", [("model", -3), (f, -1)]),
+        (r"moe/router$", [(f, -2)]),
+        (r"moe/shared/(w_gate|w_up)$", [("model", -1), (f, -2)]),
+        (r"moe/shared/w_down$", [("model", -2), (f, -1)]),
+        # embeddings (V, d): vocab-sharded (chunked xent) + FSDP on d
+        (r"(embed|unembed)$", [("model", -2), (f, -1)]),
+        (r"(patch_proj|frontend_proj)$", [("model", -1)]),
+        # attention (d, H, hd) / (H, hd, d): heads on TP, d on FSDP
+        (r"attn/w(q|k|v)$", [("model", -2), (f, -3)]),
+        (r"attn/wo$", [("model", -3), (f, -1)]),
+        (r"xattn/w(q|k|v)$", [("model", -2), (f, -3)]),
+        (r"xattn/wo$", [("model", -3), (f, -1)]),
+        # dense MLP (d, ff) / (ff, d)
+        (r"mlp/(w_gate|w_up)$", [("model", -1), (f, -2)]),
+        (r"mlp/w_down$", [("model", -2), (f, -1)]),
+        # mamba
+        (r"mamba/w_in$", [("model", -1), (f, -2)]),
+        (r"mamba/w_out$", [("model", -2), (f, -1)]),
+        (r"mamba/conv$", [("model", -1)]),
+        # xlstm
+        (r"(mlstm|slstm).*/w_(up|x)$", [("model", -1), (f, -2)]),
+        (r"(mlstm|slstm).*/w(q|k)$", [("model", -1), (f, -2)]),
+        (r"(mlstm|slstm).*/w_if$", [(f, -2)]),
+        (r"(mlstm|slstm).*/w_h$", [("model", -3)]),
+        (r"(mlstm|slstm).*/w_down$", [("model", -2), (f, -1)]),
+        # norms / scalars: replicated
+        (r".*", []),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params_tree: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching `params_tree` (arrays or SDStructs)."""
+    rules = [(re.compile(pat), prefs) for pat, prefs in
+             param_rules(fsdp, dp_axes(mesh))]
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        for pat, prefs in rules:
+            if pat.search(ps):
+                return assign_spec(leaf.shape, prefs, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+# --------------------------------------------------------------------------
+# activation / batch / cache rules
+# --------------------------------------------------------------------------
+
+def batch_pspecs(batch_tree: Any, mesh: Mesh) -> Any:
+    """Inputs: batch dim over DP axes (skipped automatically when B=1 via
+    divisibility), everything else replicated — except the long-context
+    case (B=1) where the *sequence* dim is sharded over DP (sequence/
+    context parallelism)."""
+    dp = dp_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        prefs = [(dp, -len(shape))]  # dim 0 = batch
+        if len(shape) >= 2 and shape[0] == 1:
+            prefs.append((dp, -len(shape) + 1))  # shard seq instead
+        return assign_spec(shape, prefs, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, batch_tree)
+
+
+def cache_pspecs(cache_tree: Any, mesh: Mesh) -> Any:
+    """KV caches (L, B, S, K, D): batch over DP, sequence over TP (SP for
+    decode — the attention reduction over shards becomes partial softmax +
+    psum).  Recurrent states (mamba/xlstm): batch over DP, heads over TP."""
+    dp = dp_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if re.search(r"(^|/)(k|v|xk|xv)$", ps) and len(shape) >= 4:
+            # (..., B, S, K, D)
+            prefs = [(dp, -4), ("model", -3)]
+            if shape[-4] == 1:
+                # B=1 long-context: SP over every axis at once (256/512-way)
+                prefs = [(("model",) + dp, -3)]
+            return assign_spec(shape, prefs, mesh)
+        if re.search(r"(ssm|conv|m_state|s_h|s_c)$", ps):
+            # (..., B, heads, ...) — batch over DP, heads over TP
+            nb = -(len(shape)) if False else None
+            # find batch dim: it is the first dim whose size matches? rely on
+            # family layouts: ssm (L,B,nh,ns,hp): B=-4, nh=-3; conv (L,B,4,d)
+            if ps.endswith("conv"):
+                prefs = [(dp, -3), ("model", -1)]
+            elif ps.endswith("m_state"):
+                prefs = [(dp, -4), ("model", -3)]
+            elif ps.endswith("ssm"):
+                prefs = [(dp, -4), ("model", -3)]
+            else:  # s_h / s_c (rounds, B, nh, hd)
+                prefs = [(dp, -3), ("model", -2)]
+            return assign_spec(shape, prefs, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def shardings_of(tree: Any, pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda _, s: NamedSharding(mesh, s), tree, pspecs)

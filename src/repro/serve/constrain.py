@@ -1,0 +1,54 @@
+"""Constrained decoding via word-representation vocab masks.
+
+The paper's single-word set encoding (Section 3.1) applied at vocabulary
+scale: every decode-time constraint (grammar state, stop-list, retrieval
+whitelist, user filter) is a packed (V//32,) uint32 bitmap; the set of
+tokens allowed at a step is the *intersection* of k constraint sets —
+one fused bitwise-AND over the packed lanes (kernels/ops.vocab_mask_and),
+exactly Algorithm 2 line 1.  The unpacked mask gates the logits.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+
+
+class ConstraintSet:
+    """A named collection of packed vocab bitmaps."""
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+        self.lanes = -(-vocab // 32)
+        self.masks = {}
+
+    def add_allowed(self, name: str, token_ids: np.ndarray) -> None:
+        allowed = np.zeros(self.vocab, dtype=bool)
+        allowed[np.asarray(token_ids, dtype=np.int64)] = True
+        self.masks[name] = ops.pack_vocab_mask(jnp.asarray(allowed))
+
+    def add_banned(self, name: str, token_ids: np.ndarray) -> None:
+        allowed = np.ones(self.vocab, dtype=bool)
+        allowed[np.asarray(token_ids, dtype=np.int64)] = False
+        self.masks[name] = ops.pack_vocab_mask(jnp.asarray(allowed))
+
+    def combined(self, names: Optional[Sequence[str]] = None) -> jnp.ndarray:
+        names = list(names or self.masks)
+        stack = jnp.stack([self.masks[n] for n in names])
+        return ops.vocab_mask_and(stack)
+
+
+def apply_mask_to_logits(logits: jnp.ndarray, packed: jnp.ndarray,
+                         vocab: int) -> jnp.ndarray:
+    """(B, V) logits -> masked logits (disallowed = -inf)."""
+    allowed = ops.unpack_vocab_mask(packed, vocab)
+    return jnp.where(allowed[None, :], logits, -jnp.inf)
+
+
+def constrained_greedy_token(logits: jnp.ndarray, packed: jnp.ndarray,
+                             vocab: int) -> jnp.ndarray:
+    return jnp.argmax(apply_mask_to_logits(logits, packed, vocab), axis=-1)

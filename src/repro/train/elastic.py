@@ -1,0 +1,69 @@
+"""Elastic scaling: restart a checkpoint onto a different mesh.
+
+Runbook (1000+ node operation):
+  1. the cluster controller detects a failed/preempted host group;
+  2. surviving hosts already hold the latest async checkpoint (sharded
+     npz + manifest, atomic) — nothing to salvage from the dead host;
+  3. the controller relaunches with the new device count; ``remesh``
+     below rebuilds the mesh from whatever ``jax.devices()`` now reports,
+     re-derives every PartitionSpec (they are rules over *names*, not
+     device counts) and device_puts the restored host arrays through the
+     new NamedShardings;
+  4. the data pipeline resumes from the manifest's step counter — batches
+     are index-addressable so no data is skipped or repeated;
+  5. per-step-deadline straggler counters (train/loop.py) feed the same
+     controller for proactive eviction.
+
+Because every sharding rule divisibility-checks against the live mesh,
+shrinking from 16-way to 8-way model parallelism (or dropping the `pod`
+axis entirely) only changes *placement*, never the math.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from ..models.model import Model
+from ..optim import adamw
+from ..parallel.sharding import param_pspecs, shardings_of
+from . import checkpoint as ckpt
+from .step import abstract_params, needs_fsdp
+
+
+def best_mesh_for(n_devices: int) -> jax.sharding.Mesh:
+    """Factor the surviving device count into (data, model), preferring
+    model <= 16 (TP islands should stay within an ICI domain)."""
+    model = 1
+    for cand in (16, 8, 4, 2, 1):
+        if n_devices % cand == 0:
+            model = cand
+            break
+    data = n_devices // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def remesh(model: Model, ckpt_dir: str,
+           mesh: Optional[jax.sharding.Mesh] = None,
+           opt_cfg: Optional[adamw.AdamWConfig] = None
+           ) -> Tuple[int, Dict[str, Any], jax.sharding.Mesh]:
+    """Restore the latest checkpoint onto a (possibly different) mesh."""
+    mesh = mesh or best_mesh_for(len(jax.devices()))
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    p_abs = abstract_params(model)
+    o_abs = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), p_abs)
+    fsdp = needs_fsdp(model)
+    p_specs = param_pspecs(p_abs, mesh, fsdp=fsdp)
+    o_specs = adamw.AdamWState(
+        step=jax.sharding.PartitionSpec(),
+        m=param_pspecs(o_abs.m, mesh, fsdp=fsdp),
+        v=param_pspecs(o_abs.v, mesh, fsdp=fsdp),
+    )
+    shardings = {
+        "params": shardings_of(p_abs, p_specs, mesh),
+        "opt": jax.tree_util.tree_map(
+            lambda _, s: jax.sharding.NamedSharding(mesh, s), o_abs, o_specs),
+    }
+    step, state, extra = ckpt.restore(
+        ckpt_dir, {"params": p_abs, "opt": o_abs}, shardings=shardings)
+    return step, state, mesh

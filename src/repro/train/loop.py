@@ -1,0 +1,113 @@
+"""Training loop with checkpoint/restart, preemption and straggler guards.
+
+The loop is deliberately boring: all cleverness lives in the step function
+(train/step.py) and the checkpoint manager.  Fault tolerance properties:
+
+  * deterministic resume — data is index-addressable (data/pipeline.py);
+    the only pipeline state is the step counter in the manifest;
+  * SIGTERM (preemption) triggers a synchronous save then a clean exit;
+  * per-step deadline monitor: a step exceeding ``straggler_factor`` x the
+    trailing-median step time increments a counter and logs — on a real
+    cluster this feeds the controller that evicts/replaces the slow host
+    (see train/elastic.py for the restart-side mechanics);
+  * periodic async checkpoints overlap serialization with compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..models.model import Model
+from ..optim import adamw
+from ..parallel.sharding import batch_pspecs, shardings_of
+from . import checkpoint as ckpt
+from .step import abstract_params, build_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+    keep: int = 3
+    resume: bool = True
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+
+def train(model: Model, mesh, data, loop_cfg: LoopConfig,
+          opt_cfg: Optional[adamw.AdamWConfig] = None,
+          microbatch: int = 1,
+          log_fn: Callable[[str], None] = print) -> Dict[str, Any]:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    step_fn, (p_specs, o_specs), opt_cfg = build_train_step(
+        model, mesh, opt_cfg=opt_cfg, microbatch=microbatch)
+    p_abs = abstract_params(model)
+
+    with mesh:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        mgr = ckpt.CheckpointManager(loop_cfg.ckpt_dir, keep=loop_cfg.keep)
+        mgr.install_preemption_handler()
+
+        start_step = 0
+        restored = None
+        if loop_cfg.resume and ckpt.latest_step(loop_cfg.ckpt_dir) is not None:
+            o_abs = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), p_abs)
+            start_step, restored, extra = ckpt.restore(
+                loop_cfg.ckpt_dir, {"params": p_abs, "opt": o_abs})
+            log_fn(f"[resume] restored step {start_step} from {loop_cfg.ckpt_dir}")
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+        else:
+            params = model.init(jax.random.PRNGKey(loop_cfg.seed))
+            opt_state = adamw.init(opt_cfg, params)
+
+        history: List[Dict[str, float]] = []
+        times: List[float] = []
+        stragglers = 0
+        final_step = start_step
+        for step in range(start_step, loop_cfg.steps):
+            batch = data.batch_at(step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            loss = float(metrics["loss"])  # blocks; acts as the step barrier
+            dt = time.perf_counter() - t0
+            times.append(dt)
+            if len(times) >= 5:
+                med = statistics.median(times[-20:])
+                if dt > loop_cfg.straggler_factor * med:
+                    stragglers += 1
+                    log_fn(f"[straggler] step {step} took {dt:.3f}s "
+                           f"(median {med:.3f}s) — would trigger host swap")
+            if step % loop_cfg.log_every == 0:
+                log_fn(f"step {step:5d} loss {loss:.4f} "
+                       f"gnorm {float(metrics['grad_norm']):.3f} "
+                       f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+            history.append({"step": step, "loss": loss, "time_s": dt})
+            final_step = step + 1
+            if (step + 1) % loop_cfg.ckpt_every == 0:
+                mgr.save_async(step + 1, {"params": params, "opt": opt_state},
+                               extra={"data_step": step + 1})
+            if mgr.preempted:
+                log_fn(f"[preempt] SIGTERM at step {step}; saving and exiting")
+                mgr.save_sync(step + 1, {"params": params, "opt": opt_state},
+                              extra={"data_step": step + 1, "preempted": True})
+                break
+        else:
+            mgr.save_sync(final_step, {"params": params, "opt": opt_state},
+                          extra={"data_step": final_step})
+
+    return {
+        "history": history,
+        "final_step": final_step,
+        "stragglers": stragglers,
+        "params": params,
+        "opt_state": opt_state,
+    }

@@ -1,0 +1,136 @@
+"""train_step / serve_step builders with full sharding annotations.
+
+These are the functions the dry-run lowers and the launcher executes:
+
+  * ``build_train_step(model, opt_cfg)`` — loss -> grad -> AdamW update;
+    params/optimizer-state sharded per ``parallel.sharding.param_pspecs``
+    (FSDP on request), batch over DP, optional gradient-accumulation
+    microbatching via an inner scan.
+  * ``build_serve_prefill`` / ``build_serve_decode`` — inference steps with
+    KV-cache sharding per ``cache_pspecs``.
+
+Everything returns (fn, in_shardings, out_shardings) ready for
+``jax.jit(fn, in_shardings=..., out_shardings=...).lower(...)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.model import Model
+from ..optim import adamw
+from ..parallel import ctx
+from ..parallel.sharding import (
+    batch_pspecs, cache_pspecs, dp_axes, param_pspecs, shardings_of,
+)
+
+
+def needs_fsdp(model: Model) -> bool:
+    """FSDP once params+optimizer at TP-only sharding would crowd HBM:
+    ~12 bytes/param over 16 TP shards > ~2 GiB/chip  =>  ~3B params."""
+    return model.cfg.param_count() > 3e9
+
+
+def auto_microbatch(global_batch: int, seq: int, mesh: Mesh,
+                    target_tokens_per_device: Optional[int] = None) -> int:
+    """Gradient-accumulation factor: keep per-device live activation tokens
+    near `target`, constrained to divide the per-device batch."""
+    from .. import tuning
+    if target_tokens_per_device is None:
+        target_tokens_per_device = tuning.get("micro_tokens")
+    dp = 1
+    for a in dp_axes(mesh):
+        dp *= mesh.shape[a]
+    b_local = max(1, global_batch // dp)
+    micro = max(1, (b_local * seq) // target_tokens_per_device)
+    micro = min(micro, b_local)
+    while b_local % micro:
+        micro -= 1
+    return micro
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def build_train_step(model: Model, mesh: Mesh,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None,
+                     fsdp: Optional[bool] = None,
+                     microbatch: int = 1):
+    """Returns (train_step, state_shardings, batch_shardings).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        state_dtype="bfloat16" if model.cfg.param_count() > 2e11 else "float32")
+    fsdp = needs_fsdp(model) if fsdp is None else fsdp
+
+    p_abs = abstract_params(model)
+    p_specs = param_pspecs(p_abs, mesh, fsdp=fsdp)
+    opt_abs = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), p_abs)
+    o_specs = adamw.AdamWState(
+        step=P(),
+        m=param_pspecs(opt_abs.m, mesh, fsdp=fsdp),
+        v=param_pspecs(opt_abs.v, mesh, fsdp=fsdp),
+    )
+
+    dp = dp_axes(mesh)
+
+    def train_step(params, opt_state, batch):
+        with ctx.activation_mesh(mesh):
+            return _train_step_inner(params, opt_state, batch)
+
+    def _train_step_inner(params, opt_state, batch):
+        if microbatch > 1:
+            def micro(carry, mb):
+                gsum = carry
+                loss, g = jax.value_and_grad(model.loss)(params, mb)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return gsum, loss
+            def split(x):
+                x = x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:])
+                return jax.lax.with_sharding_constraint(
+                    x, P(None, dp, *([None] * (x.ndim - 2))))
+            sliced = jax.tree_util.tree_map(split, batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, losses = jax.lax.scan(micro, zeros, sliced)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatch, gsum)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_p, new_o, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics = {**metrics, "loss": loss}
+        return new_p, new_o, metrics
+
+    return train_step, (p_specs, o_specs), opt_cfg
+
+
+def build_serve_prefill(model: Model, mesh: Mesh):
+    """prefill(params, batch) -> last-token logits; returns (fn, p_specs)."""
+    p_abs = abstract_params(model)
+    p_specs = param_pspecs(p_abs, mesh, fsdp=needs_fsdp(model))
+
+    def prefill(params, batch):
+        with ctx.activation_mesh(mesh):
+            return model.prefill(params, batch)
+
+    return prefill, p_specs
+
+
+def build_serve_decode(model: Model, mesh: Mesh, batch: int, max_seq: int):
+    """decode(params, cache, tokens, pos) -> (logits, cache)."""
+    p_abs = abstract_params(model)
+    p_specs = param_pspecs(p_abs, mesh, fsdp=needs_fsdp(model))
+    cache_abs = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+    c_specs = cache_pspecs(cache_abs, mesh)
+
+    def decode(params, cache, tokens, pos):
+        with ctx.activation_mesh(mesh):
+            return model.decode(params, cache, tokens, pos)
+
+    return decode, p_specs, c_specs, cache_abs

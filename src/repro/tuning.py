@@ -1,0 +1,82 @@
+"""Trace-time performance knobs for §Perf hillclimbing.
+
+A tiny global registry read by model code while tracing.  The dry-run's
+``--variant`` flag sets knobs ("q_chunk=1024;scores_dtype=bf16") so every
+hillclimb iteration is a named, reproducible lowering.  Defaults are the
+paper-faithful baseline.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+_DEFAULTS: Dict[str, Any] = {
+    "q_chunk": 512,          # attention query-block size
+    "xent_chunk": 256,       # sequence chunk of the softmax-xent scan
+    "scores_dtype": "f32",   # attention score accumulation dtype
+    "micro_tokens": 8192,    # per-device tokens per microbatch target
+    "remat": "full",         # full | dots | none
+    "seq_shard_mlp": False,  # sequence-parallel MLP activations over `model`
+    "flash_decode": False,   # shard_map partial-softmax decode attention
+    "gqa_native": False,     # score einsum against Kv heads (no K/V repeat)
+    "act_bf16": False,       # norms/gelu: f32 statistics, bf16 application
+    "grad_bf16": False,      # cast the loss cotangent to bf16 at the xent boundary
+    "capacity_factor": 0.0,  # >0 overrides the MoE capacity factor
+}
+
+_STATE = dict(_DEFAULTS)
+
+
+def get(name: str):
+    return _STATE[name]
+
+
+def scores_dtype():
+    return jnp.bfloat16 if _STATE["scores_dtype"] == "bf16" else jnp.float32
+
+
+def remat_wrap(fn):
+    mode = _STATE["remat"]
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+@contextlib.contextmanager
+def overrides(**kwargs):
+    old = dict(_STATE)
+    for k, v in kwargs.items():
+        if k not in _DEFAULTS:
+            raise KeyError(f"unknown tuning knob {k!r}")
+        _STATE[k] = v
+    try:
+        yield
+    finally:
+        _STATE.clear()
+        _STATE.update(old)
+
+
+def parse(spec: str) -> Dict[str, Any]:
+    """'q_chunk=1024;scores_dtype=bf16' -> typed kwargs."""
+    out: Dict[str, Any] = {}
+    if not spec or spec == "baseline":
+        return out
+    for part in spec.split(";"):
+        k, _, v = part.partition("=")
+        k = k.strip()
+        proto = _DEFAULTS[k]
+        if isinstance(proto, bool):
+            out[k] = v.strip().lower() in ("1", "true", "on")
+        elif isinstance(proto, int):
+            out[k] = int(v)
+        elif isinstance(proto, float):
+            out[k] = float(v)
+        else:
+            out[k] = v.strip()
+    return out

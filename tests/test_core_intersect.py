@@ -1,0 +1,203 @@
+"""Unit + property tests for the paper's intersection algorithms."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hashing import (
+    BitMixPermutation, default_permutation, random_hash_family,
+)
+from repro.core.partition import (
+    choose_t, preprocess_fixed, preprocess_multiresolution, preprocess_prefix,
+)
+from repro.core.intersect import hashbin, intgroup, rangroup, rangroupscan
+
+
+def make_sets(rng, k=2, n=2000, overlap=100, universe=1 << 24):
+    common = rng.choice(universe, overlap, replace=False).astype(np.uint32)
+    out = []
+    for _ in range(k):
+        own = rng.choice(universe, n, replace=False).astype(np.uint32)
+        out.append(np.unique(np.concatenate([own, common])))
+    return out
+
+
+def truth_of(sets):
+    out = sets[0]
+    for s in sets[1:]:
+        out = np.intersect1d(out, s)
+    return out
+
+
+@pytest.fixture(scope="module")
+def shared():
+    fam64 = random_hash_family(1, 64, seed=11)
+    fam = random_hash_family(2, 256, seed=12)
+    perm = default_permutation(13)
+    return fam64, fam, perm
+
+
+# ---------------------------------------------------------------- unit tests
+
+@pytest.mark.parametrize("n,overlap", [(100, 5), (3000, 30), (5000, 2500)])
+def test_intgroup_matches_oracle(shared, n, overlap):
+    fam64, _, _ = shared
+    rng = np.random.default_rng(n)
+    a, b = make_sets(rng, 2, n, overlap)
+    ia = preprocess_fixed(a, w=64, family=fam64)
+    ib = preprocess_fixed(b, w=64, family=fam64)
+    res, stats = intgroup(ia, ib)
+    assert np.array_equal(res, truth_of([a, b]))
+    assert stats.r == len(res)
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_rangroup_k_matches_oracle(shared, k):
+    _, fam, perm = shared
+    rng = np.random.default_rng(k)
+    sets = make_sets(rng, k, 2000, 50)
+    idxs = [preprocess_prefix(s, w=256, m=2, family=fam, perm=perm) for s in sets]
+    res, stats = rangroup(idxs)
+    assert np.array_equal(res, truth_of(sets))
+
+
+@pytest.mark.parametrize("k", [2, 3, 4])
+@pytest.mark.parametrize("w,m", [(64, 1), (64, 4), (256, 2), (512, 2)])
+def test_rangroupscan_matches_oracle(shared, k, w, m):
+    _, _, perm = shared
+    fam = random_hash_family(m, w, seed=w + m)
+    rng = np.random.default_rng(k * w + m)
+    sets = make_sets(rng, k, 1500, 40)
+    idxs = [preprocess_prefix(s, w=w, m=m, family=fam, perm=perm) for s in sets]
+    res, stats = rangroupscan(idxs)
+    assert np.array_equal(res, truth_of(sets))
+    # the filter may never produce false negatives:
+    assert stats.r == len(truth_of(sets))
+
+
+@pytest.mark.parametrize("n1,n2", [(100, 50000), (1000, 1000), (17, 9999)])
+def test_hashbin_matches_oracle(shared, n1, n2):
+    _, fam, perm = shared
+    rng = np.random.default_rng(n1 + n2)
+    common = rng.choice(1 << 24, 13, replace=False).astype(np.uint32)
+    a = np.unique(np.concatenate([rng.choice(1 << 24, n1).astype(np.uint32), common]))
+    b = np.unique(np.concatenate([rng.choice(1 << 24, n2).astype(np.uint32), common]))
+    pa = preprocess_prefix(a, w=256, m=2, family=fam, perm=perm)
+    pb = preprocess_prefix(b, w=256, m=2, family=fam, perm=perm)
+    res, stats = hashbin(pa, pb)
+    assert np.array_equal(res, truth_of([a, b]))
+    # Theorem 3.11 comparison budget (generous constant):
+    assert stats.comparisons <= 8 * min(n1, n2) * max(
+        1, math.log2(max(n1, n2) / min(n1, n2) + 2) + 2
+    )
+
+
+def test_permutation_is_bijective():
+    perm = default_permutation(5)
+    x = np.arange(100000, dtype=np.uint32)
+    y = perm.forward(x)
+    assert len(np.unique(y)) == len(x)
+    assert np.array_equal(perm.inverse(y), x)
+
+
+def test_choose_t_matches_theorem():
+    # t_i = ceil(log2(n_i / sqrt(w)))
+    assert choose_t(1024, 64) == math.ceil(math.log2(1024 / 8))
+    assert choose_t(10_000_000, 64) == math.ceil(math.log2(10_000_000 / 8))
+    assert choose_t(4, 256) == 0
+
+
+def test_multiresolution_space_linear():
+    rng = np.random.default_rng(0)
+    vals = rng.choice(1 << 24, 4096, replace=False).astype(np.uint32)
+    mr = preprocess_multiresolution(vals, w=64, m=1)
+    # O(n): images over all resolutions <= 2 * 2^T * (m+1) + n words
+    assert mr.storage_words() <= 6 * len(vals) + 64
+    # every resolution reproduces the same set
+    for t in [0, 2, mr.T // 2, mr.T]:
+        view = mr.at(t)
+        assert np.array_equal(np.sort(view.values), np.sort(vals))
+        assert view.G == 1 << t
+
+
+def test_group_size_optimizer_a11():
+    """A.1.1: optimal group sizes s1*=sqrt(w n1/n2) minimize bytes touched."""
+    w, n1, n2 = 64, 1000, 64000
+    s1 = math.sqrt(w * n1 / n2)
+    s2 = math.sqrt(w * n2 / n1)
+    assert s1 * s2 == pytest.approx(w)
+    t_opt = n1 / s1 + n2 / s2
+    t_fixed = (n1 + n2) / math.sqrt(w)
+    assert t_opt < t_fixed  # skew makes the optimizer strictly better
+
+
+# ------------------------------------------------------------ property tests
+
+small_set = st.lists(
+    st.integers(min_value=0, max_value=(1 << 20) - 1), min_size=1, max_size=300, unique=True
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=small_set, b=small_set, w=st.sampled_from([64, 256]), m=st.integers(1, 3))
+def test_property_rangroupscan_equals_oracle(a, b, w, m):
+    fam = random_hash_family(m, w, seed=m * w)
+    perm = default_permutation(w)
+    a = np.asarray(sorted(a), dtype=np.uint32)
+    b = np.asarray(sorted(b), dtype=np.uint32)
+    pa = preprocess_prefix(a, w=w, m=m, family=fam, perm=perm)
+    pb = preprocess_prefix(b, w=w, m=m, family=fam, perm=perm)
+    res, _ = rangroupscan([pa, pb])
+    assert np.array_equal(res, np.intersect1d(a, b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=small_set, b=small_set)
+def test_property_result_is_subset_and_commutative(a, b):
+    fam = random_hash_family(2, 64, seed=9)
+    perm = default_permutation(9)
+    a = np.asarray(sorted(a), dtype=np.uint32)
+    b = np.asarray(sorted(b), dtype=np.uint32)
+    pa = preprocess_prefix(a, w=64, m=2, family=fam, perm=perm)
+    pb = preprocess_prefix(b, w=64, m=2, family=fam, perm=perm)
+    r1, _ = rangroupscan([pa, pb])
+    r2, _ = rangroupscan([pb, pa])
+    assert np.array_equal(r1, r2)  # commutative
+    assert np.all(np.isin(r1, a)) and np.all(np.isin(r1, b))  # subset
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=small_set, b=small_set)
+def test_property_filter_no_false_negatives(a, b):
+    """If a group tuple contains a common element, its images always pass
+    the AND test (word representations are exact on the hash images)."""
+    fam = random_hash_family(1, 64, seed=4)
+    perm = default_permutation(4)
+    a = np.asarray(sorted(a), dtype=np.uint32)
+    b = np.asarray(sorted(b), dtype=np.uint32)
+    pa = preprocess_prefix(a, w=64, m=1, family=fam, perm=perm)
+    pb = preprocess_prefix(b, w=64, m=1, family=fam, perm=perm)
+    res, stats = rangroupscan([pa, pb])
+    truth = np.intersect1d(a, b)
+    assert np.array_equal(res, truth)
+    if len(truth):
+        assert stats.tuples_survived > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    sets=st.lists(small_set, min_size=2, max_size=4),
+    algo=st.sampled_from(["rangroup", "rangroupscan"]),
+)
+def test_property_k_way(sets, algo):
+    fam = random_hash_family(2, 64, seed=3)
+    perm = default_permutation(3)
+    arrs = [np.asarray(sorted(s), dtype=np.uint32) for s in sets]
+    idxs = [preprocess_prefix(s, w=64, m=2, family=fam, perm=perm) for s in arrs]
+    fn = rangroup if algo == "rangroup" else rangroupscan
+    res, _ = fn(idxs)
+    truth = arrs[0]
+    for s in arrs[1:]:
+        truth = np.intersect1d(truth, s)
+    assert np.array_equal(res, truth)
