@@ -18,12 +18,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=20000)
     ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--device", action="store_true",
+                    help="serve through the batched device engine "
+                         "(plan -> bucket -> one jit execution per shape)")
     args = ap.parse_args()
 
     print(f"building corpus ({args.docs} docs) ...")
     docs = zipf_corpus(args.docs, vocab=20000, mean_len=120, seed=1)
     postings = inverted_index(docs)
-    engine = SearchEngine(postings, w=256, m=2)
+    engine = SearchEngine(postings, w=256, m=2, use_device=args.device)
     print(f"index built: {len(engine.index)} terms in {engine.build_s:.2f}s")
 
     queries = zipf_query_log(sorted(engine.index), args.queries, seed=2)

@@ -1,5 +1,20 @@
 """Device-resident batched intersection engine (the paper's system on TPU).
 
+Module map (the device path, bottom-up):
+
+  kernels/            bitmap_filter / group_match Pallas kernels + jnp oracles;
+                      both accept a leading batch axis folded into the grid.
+  core/engine.py      this file — DeviceSet mirrors, the jit'd batched
+                      two-phase pipeline (``_intersect_k_batch``), the
+                      bucket executor entry point ``intersect_device_batch``,
+                      and the z-sharded variant ``intersect_sharded``.
+  exec/plan.py        query normalization (term dedup, sort by (t, n),
+                      hashbin-vs-device policy) into shape-keyed QueryPlans.
+  exec/batch.py       groups QueryPlans by shape signature, stacks DeviceSet
+                      rows, and drives ``intersect_device_batch`` — one jit
+                      execution per bucket plus rare overflow re-runs.
+  serve/search.py     SearchEngine: plan -> bucket -> execute -> scatter.
+
 Pre-processed sets (``partition.PrefixIndex``) are mirrored to the device as
 dense arrays; intersections run as two fused phases:
 
@@ -9,10 +24,19 @@ dense arrays; intersections run as two fused phases:
                      of the raw groups (kernels.ops.group_match)
 
 Static shapes everywhere: the survivor set is compacted into a fixed
-``capacity`` buffer (overflow flag returned; the serving layer re-runs the
-rare overflowing query with doubled capacity).  This preserves the paper's
-work-saving — the expensive phase 2 runs on ``capacity ≈ E[survivors]``
-group tuples instead of all ``G`` — inside an XLA-compatible regime.
+``capacity`` buffer (per-query overflow flags returned; the executor re-runs
+the rare overflowing subset once at full capacity).  This preserves the
+paper's work-saving — the expensive phase 2 runs on ``capacity ≈
+E[survivors]`` group tuples instead of all ``G`` — inside an XLA-compatible
+regime.
+
+Multi-query batching: the online stage is embarrassingly parallel across
+queries, and real query logs concentrate on a handful of shape signatures
+``(k, ts, gmaxes, capacity)`` (the paper's workload model: 68% 2-word, 23%
+3-word queries).  ``_intersect_k_batch`` therefore takes ``(B, …)`` stacked
+arrays and runs a whole same-signature bucket in ONE jit execution; the
+single-query ``intersect_device`` is just a batch of one through the same
+pipeline, so both paths share one compile cache.
 
 Distribution: :func:`intersect_sharded` shard_maps the z-prefix space over
 the ``model`` mesh axis.  Because every set is partitioned by the *same*
@@ -25,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +59,40 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..kernels import ops
 from .partition import PrefixIndex
 
-__all__ = ["DeviceSet", "intersect_device", "intersect_sharded", "BatchedEngine"]
+__all__ = [
+    "DeviceSet",
+    "default_capacity",
+    "intersect_device",
+    "intersect_device_batch",
+    "intersect_sharded",
+    "BatchedEngine",
+    "EXEC_COUNTERS",
+]
+
+# Telemetry for the batched device path.  ``batch_calls`` counts jit
+# *executions* of the bucketed pipeline (what per-query dispatch would make
+# O(#queries) and bucketing makes O(#signatures)); ``batch_traces`` counts
+# actual retraces (compiles); ``rerun_calls`` counts overflow re-run passes.
+# Tests assert on these; reset with ``reset_exec_counters()``.
+EXEC_COUNTERS: Dict[str, int] = {"batch_calls": 0, "batch_traces": 0, "rerun_calls": 0}
+
+
+def reset_exec_counters() -> None:
+    for key in EXEC_COUNTERS:
+        EXEC_COUNTERS[key] = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class DeviceSet:
-    """Device mirror of a PrefixIndex (sentinel-padded; mask implicit)."""
+    """Device mirror of a PrefixIndex (sentinel-padded; mask implicit).
+
+    ``gmax`` is quantized up to a power of two on mirroring: the exact
+    per-set max group size is what it is on the host, but on the device it
+    is a *static shape* — leaving it exact would give nearly every set its
+    own shape signature and defeat bucketed batching.  Power-of-two tiers
+    cost at most 2x padding on the tiny phase-2 tiles and collapse the
+    signature space to a handful of buckets.
+    """
 
     t: int
     gmax: int
@@ -53,15 +105,40 @@ class DeviceSet:
     @classmethod
     def from_host(cls, idx: PrefixIndex) -> "DeviceSet":
         assert int(idx.values.max(initial=0)) < 0xFFFFFFFF, "sentinel collision"
-        vals = jax.lax.bitcast_convert_type(jnp.asarray(idx.padded_vals), jnp.int32)
+        gmax = gmax_tier(idx.gmax)
+        padded = np.pad(
+            idx.padded_vals, ((0, 0), (0, gmax - idx.gmax)),
+            constant_values=np.uint32(0xFFFFFFFF),
+        )
+        vals = jax.lax.bitcast_convert_type(jnp.asarray(padded), jnp.int32)
         return cls(
-            t=idx.t, gmax=idx.gmax, m=idx.family.m, w=idx.w, n=idx.n,
+            t=idx.t, gmax=gmax, m=idx.family.m, w=idx.w, n=idx.n,
             vals=vals, images=jnp.asarray(idx.images),
         )
 
 
+def gmax_tier(gmax: int) -> int:
+    """Static-shape tier for a set's max group size: next power of two
+    (>= 8).  Device mirrors pad to this, and the planner keys shape
+    signatures by it, so host-exact gmaxes never fragment the buckets."""
+    return 1 << max(3, (int(gmax) - 1).bit_length())
+
+
+def default_capacity(ts: Tuple[int, ...]) -> int:
+    """Survivor-buffer (capacity) tier for a query shape.
+
+    capacity ≈ E[survivors]: non-empty-intersection groups ≲ r_max + the
+    false-positive rate * G; G/4 + floor is conservative for the paper's
+    r << n regime, and preserves the work-saving — phase 2 runs on capacity
+    group tuples, not all G.  Dense queries (frequent-term pairs, survivors
+    ≈ G) overflow and are re-run once at full capacity by the executor.
+    Deterministic in ``ts`` so it can key shape buckets."""
+    return max(64, (1 << ts[-1]) // 4)
+
+
 def _aligned_images(images: Sequence[jnp.ndarray], ts: Tuple[int, ...]) -> jnp.ndarray:
-    """Stack (k, G, m, W) images aligned by prefix (z_i = z_k >> (t_k - t_i)).
+    """Stack per-set images aligned by prefix (z_i = z_k >> (t_k - t_i)):
+    (G_i, m, W) each -> (k, G, m, W), or (B, G_i, m, W) -> (B, k, G, m, W).
 
     The largest set's images are used in place; the others are gathered.  A
     gather of 2^{t_k - t_i} repeated rows is a broadcast in disguise — XLA
@@ -75,39 +152,146 @@ def _aligned_images(images: Sequence[jnp.ndarray], ts: Tuple[int, ...]) -> jnp.n
             out.append(img)
         else:
             rep = 1 << (tk - t)
-            g, m, w = img.shape
-            out.append(jnp.broadcast_to(img[:, None], (g, rep, m, w)).reshape(g * rep, m, w))
-    return jnp.stack(out)
+            *lead, g, m, w = img.shape
+            rep_img = jnp.broadcast_to(
+                img[..., :, None, :, :], (*lead, g, rep, m, w)
+            )
+            out.append(rep_img.reshape(*lead, g * rep, m, w))
+    return jnp.stack(out, axis=-4)
 
 
 @functools.partial(
     jax.jit, static_argnames=("ts", "gmaxes", "capacity", "use_pallas")
 )
-def _intersect_k(
-    vals: Tuple[jnp.ndarray, ...],
-    images: Tuple[jnp.ndarray, ...],
+def _intersect_k_batch(
+    vals: Tuple[Tuple[jnp.ndarray, ...], ...],
+    images: Tuple[Tuple[jnp.ndarray, ...], ...],
     ts: Tuple[int, ...],
     gmaxes: Tuple[int, ...],
     capacity: int,
     use_pallas,
 ):
-    k = len(vals)
+    """One jit execution for a whole same-signature bucket of B queries.
+
+    ``vals[i]``: B arrays of (2^{t_i}, gmax_i) int32; ``images[i]``: B arrays
+    of (2^{t_i}, m, W).  The (B, …) stacking happens INSIDE the jit — the
+    inputs are already device-resident DeviceSet rows, so stacking eagerly
+    would cost 2k extra dispatches per call; fused here it is free.
+    Returns (packed, r, n_surv, overflow) with a leading B axis each.
+    """
+    EXEC_COUNTERS["batch_traces"] += 1  # python side effect: trace-time only
+    vals = tuple(jnp.stack(v) for v in vals)
+    images = tuple(jnp.stack(im) for im in images)
     tk = ts[-1]
     G = 1 << tk
-    imgs = _aligned_images(images, ts)
-    passed = ops.bitmap_filter(imgs, use_pallas)               # (G,) bool
-    n_surv = passed.sum()
-    surv = jnp.nonzero(passed, size=capacity, fill_value=G)[0]
+    B = vals[0].shape[0]
+    imgs = _aligned_images(images, ts)                          # (B, k, G, m, W)
+    passed = ops.bitmap_filter(imgs, use_pallas)                # (B, G)
+    n_surv = passed.sum(axis=1)
+    # survivor compaction without per-query nonzero: sort survivor positions
+    # (non-survivors keyed G) so every row yields its first `capacity`
+    # survivor indices, G-filled past the end — identical to
+    # nonzero(size=capacity, fill_value=G) but trivially batched.
+    pos = jnp.where(passed, jnp.arange(G, dtype=jnp.int32)[None, :], G)
+    surv = jnp.sort(pos, axis=1)
+    if capacity <= G:
+        surv = surv[:, :capacity]
+    else:
+        surv = jnp.pad(surv, ((0, 0), (0, capacity - G)), constant_values=G)
     valid_row = surv < G
     surv_c = jnp.minimum(surv, G - 1)
-    base = vals[0][surv_c >> (tk - ts[0])]                     # (cap, g0)
-    keep = valid_row[:, None] & (base != -1)
+    rows = jnp.arange(B)[:, None]
+    base = vals[0][rows, surv_c >> (tk - ts[0])]                # (B, cap, g0)
+    keep = valid_row[:, :, None] & (base != -1)
     for v, t in zip(vals[1:], ts[1:]):
-        other = v[surv_c >> (tk - t)]
+        other = v[rows, surv_c >> (tk - t)]                     # (B, cap, gi)
         keep = keep & ops.group_match(base, other, use_pallas)
-    r = keep.sum()
+    r = keep.sum(axis=(1, 2))
     overflow = n_surv > capacity
-    return base, keep, r, n_surv, overflow
+    # pack result values and mask into one buffer (-1 = dropped) so the
+    # host round-trip is a single transfer per bucket
+    packed = jnp.where(keep, base, -1)
+    return packed, r, n_surv, overflow
+
+
+def _signature(sets: Sequence[DeviceSet]) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    return tuple(s.t for s in sets), tuple(s.gmax for s in sets)
+
+
+def intersect_device_batch(
+    queries: Sequence[Sequence[DeviceSet]],
+    capacity: Optional[int] = None,
+    use_pallas="auto",
+) -> List[Tuple[np.ndarray, Dict]]:
+    """Intersect B same-signature queries in one jit execution each pass.
+
+    Every query is a list of DeviceSets; all queries must share the shape
+    signature ``(ts, gmaxes)`` after the (t, n)-sort — the exec layer's
+    bucketing guarantees this.  Overflowing queries (survivors > capacity)
+    are re-run as ONE enlarged subset pass at capacity G, where overflow is
+    impossible — a single extra jit execution per bucket, never a cascade
+    of doublings.
+
+    The batch dim is quantized: B pads up to a power of two by repeating
+    the first query's rows (references to the same device arrays — the only
+    cost is the fused in-jit stack).  Without this every distinct
+    (signature, B) pair — including every overflow-subset size — would be
+    its own executable; with it the cache holds at most log2(B_max)
+    executables per signature.  Padding rows are dropped before results
+    materialize.
+
+    Returns a list of (sorted result values, stats dict) in query order.
+    """
+    if not len(queries):
+        return []
+    ordered = [sorted(q, key=lambda s: (s.t, s.n)) for q in queries]
+    ts, gmaxes = _signature(ordered[0])
+    for q in ordered[1:]:
+        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
+    G = 1 << ts[-1]
+    cap = capacity or default_capacity(ts)
+    results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+    active = list(range(len(ordered)))
+    first_pass = True
+    while active:
+        b_tier = 1 << (len(active) - 1).bit_length()  # pad B to a pow2 tier
+        rows = active + [active[0]] * (b_tier - len(active))
+        vals = tuple(
+            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
+        )
+        images = tuple(
+            tuple(ordered[i][j].images for i in rows) for j in range(len(ts))
+        )
+        EXEC_COUNTERS["batch_calls"] += 1
+        if not first_pass:
+            EXEC_COUNTERS["rerun_calls"] += 1
+        packed, r, n_surv, overflow = _intersect_k_batch(
+            vals, images, ts, gmaxes, cap, use_pallas
+        )
+        packed_h, r_h, n_surv_h, over_h = jax.device_get(
+            (packed, r, n_surv, overflow)
+        )
+        rerun = []
+        for row, qi in enumerate(active):
+            if over_h[row]:
+                rerun.append(qi)
+                continue
+            row_vals = packed_h[row].ravel()
+            out = row_vals[row_vals != -1]
+            results[qi] = (
+                np.sort(out.astype(np.uint32)),
+                {
+                    "group_tuples": G,
+                    "tuples_survived": int(n_surv_h[row]),
+                    "capacity": cap,
+                    "r": int(r_h[row]),
+                    "batch_size": len(active),
+                },
+            )
+        active = rerun
+        cap = G  # rare path: one re-run of the overflow subset, never more
+        first_pass = False
+    return results  # type: ignore[return-value]
 
 
 def intersect_device(
@@ -117,32 +301,12 @@ def intersect_device(
 ):
     """Intersect k device sets; returns (values, count) on host + stats.
 
-    ``capacity`` defaults to a survivor estimate: non-empty-intersection
-    groups ≲ r_max/1 + false-positive rate * G; we use G_k/4 + 64 which is
-    conservative for the paper's r << n regime, and double on overflow.
+    A batch of one through :func:`intersect_device_batch` — single queries
+    and bucketed batches share the same jit cache (keyed additionally by B).
     """
-    sets = sorted(sets, key=lambda s: s.t)
-    ts = tuple(s.t for s in sets)
-    gmaxes = tuple(s.gmax for s in sets)
-    vals = tuple(s.vals for s in sets)
-    images = tuple(s.images for s in sets)
-    G = 1 << ts[-1]
-    cap = capacity or max(64, G // 4)
-    while True:
-        base, keep, r, n_surv, overflow = _intersect_k(
-            vals, images, ts, gmaxes, cap, use_pallas
-        )
-        if not bool(overflow):
-            break
-        cap = min(G, cap * 2)  # rare path: re-run with doubled capacity
-    out = np.asarray(base)[np.asarray(keep)]
-    result = np.sort(out.astype(np.uint32))
-    stats = {
-        "group_tuples": G,
-        "tuples_survived": int(n_surv),
-        "capacity": cap,
-        "r": int(r),
-    }
+    (result, stats), = intersect_device_batch(
+        [list(sets)], capacity=capacity, use_pallas=use_pallas
+    )
     return result, stats
 
 
@@ -217,3 +381,10 @@ class BatchedEngine:
     def query(self, names: Sequence[str], capacity: Optional[int] = None):
         dsets = [self.sets[n] for n in names]
         return intersect_device(dsets, capacity=capacity, use_pallas=self.use_pallas)
+
+    def query_many(self, queries: Sequence[Sequence[str]]):
+        """Plan -> bucket by shape signature -> one jit execution per bucket
+        -> scatter back in request order.  Returns [(values, stats), ...]."""
+        from ..exec.batch import execute_name_queries
+
+        return execute_name_queries(self.sets, queries, use_pallas=self.use_pallas)

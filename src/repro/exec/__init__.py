@@ -1,0 +1,18 @@
+"""Batched multi-query execution subsystem.
+
+Dataflow: :mod:`plan` normalizes raw queries into shape-keyed
+:class:`~repro.exec.plan.QueryPlan`\\ s; :mod:`batch` groups plans by
+signature and drives one jit execution per bucket through
+``core.engine.intersect_device_batch``.
+"""
+from .plan import QueryPlan, ShapeSig, plan_query
+from .batch import bucket_plans, execute_name_queries, execute_plan_buckets
+
+__all__ = [
+    "QueryPlan",
+    "ShapeSig",
+    "plan_query",
+    "bucket_plans",
+    "execute_name_queries",
+    "execute_plan_buckets",
+]

@@ -44,7 +44,21 @@ def _pad_lanes(x: jnp.ndarray, fill) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def group_match_pallas(a_vals: jnp.ndarray, b_vals: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
-    """(S, ga) x (S, gb) sentinel-padded int32 -> (S, ga) bool membership."""
+    """(S, ga) x (S, gb) sentinel-padded int32 -> (S, ga) bool membership.
+
+    A leading batch axis ((B, S, ga) x (B, S, gb) -> (B, S, ga)) folds into
+    the row grid: every row is an independent tuple regardless of which
+    query it came from, so the batch flattens onto the sublane axis and the
+    kernel is unchanged.
+    """
+    if a_vals.ndim == 3:
+        bsz, s, ga = a_vals.shape
+        gb = b_vals.shape[-1]
+        flat = group_match_pallas(
+            a_vals.reshape(bsz * s, ga), b_vals.reshape(bsz * s, gb),
+            interpret=interpret,
+        )
+        return flat.reshape(bsz, s, ga)
     s, ga = a_vals.shape
     _, gb = b_vals.shape
     a = _pad_lanes(a_vals.astype(jnp.int32), -1)

@@ -23,7 +23,12 @@ def _on_tpu() -> bool:
 
 
 def bitmap_filter(images: jnp.ndarray, use_pallas="auto") -> jnp.ndarray:
-    """(k, G, m, W) stacked images -> (G,) survivor mask (bool)."""
+    """(k, G, m, W) stacked images -> (G,) survivor mask (bool).
+
+    A leading batch axis — (B, k, G, m, W) -> (B, G) — runs B queries of
+    identical static shape in one call (the exec subsystem's bucketed
+    batches); the Pallas path folds the batch into the kernel grid.
+    """
     if use_pallas == "auto":
         use_pallas = _on_tpu()
     if use_pallas:
@@ -32,7 +37,11 @@ def bitmap_filter(images: jnp.ndarray, use_pallas="auto") -> jnp.ndarray:
 
 
 def group_match(a_vals: jnp.ndarray, b_vals: jnp.ndarray, use_pallas="auto") -> jnp.ndarray:
-    """(S, ga), (S, gb) sentinel-padded -> (S, ga) membership mask (bool)."""
+    """(S, ga), (S, gb) sentinel-padded -> (S, ga) membership mask (bool).
+
+    Leading batch axis supported: (B, S, ga) x (B, S, gb) -> (B, S, ga);
+    the Pallas path flattens it onto the row grid.
+    """
     if use_pallas == "auto":
         use_pallas = _on_tpu()
     if use_pallas:

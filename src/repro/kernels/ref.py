@@ -14,19 +14,22 @@ def bitmap_filter_ref(images: jnp.ndarray) -> jnp.ndarray:
     """Word-representation AND filter (Alg. 5 line 3), batched over groups.
 
     Args:
-      images: (k, G, m, W) uint32/int32 — for each of the k sets, the m
-        packed hash images of the group aligned to each of the G tuples.
+      images: (k, G, m, W) or (B, k, G, m, W) uint32/int32 — for each of the
+        k sets, the m packed hash images of the group aligned to each of the
+        G tuples; an optional leading batch axis runs B independent queries.
 
     Returns:
-      (G,) bool — True where the tuple SURVIVES the filter, i.e. for every
-      j in [m] the k-way AND of the j-th images is non-zero.  (A tuple is
-      *skipped* when any image-AND is all-zero — the paper's test.)
+      (G,) / (B, G) bool — True where the tuple SURVIVES the filter, i.e. for
+      every j in [m] the k-way AND of the j-th images is non-zero.  (A tuple
+      is *skipped* when any image-AND is all-zero — the paper's test.)
     """
-    h = images[0]
-    for i in range(1, images.shape[0]):
-        h = h & images[i]                       # (G, m, W)
-    nonzero = (h != 0).any(axis=-1)             # (G, m)
-    return nonzero.all(axis=-1)                 # (G,)
+    k_axis = images.ndim - 4                    # 0 unbatched, 1 batched
+    imgs = jnp.moveaxis(images, k_axis, 0)
+    h = imgs[0]
+    for i in range(1, imgs.shape[0]):
+        h = h & imgs[i]                         # (..., G, m, W)
+    nonzero = (h != 0).any(axis=-1)             # (..., G, m)
+    return nonzero.all(axis=-1)                 # (..., G)
 
 
 def group_match_ref(a_vals: jnp.ndarray, b_vals: jnp.ndarray) -> jnp.ndarray:
@@ -36,9 +39,11 @@ def group_match_ref(a_vals: jnp.ndarray, b_vals: jnp.ndarray) -> jnp.ndarray:
     Args:
       a_vals: (S, ga) int32 — survivor groups of set A, sentinel-padded (-1).
       b_vals: (S, gb) int32 — aligned survivor groups of set B.
+        Both accept an optional leading batch axis: (B, S, ga) x (B, S, gb).
 
     Returns:
-      (S, ga) bool — True where a real element of ``a`` is present in ``b``.
+      (S, ga) / (B, S, ga) bool — True where a real element of ``a`` is
+      present in ``b``.
     """
-    eq = a_vals[:, :, None] == b_vals[:, None, :]
+    eq = a_vals[..., :, None] == b_vals[..., None, :]
     return eq.any(axis=-1) & (a_vals != SENTINEL32)

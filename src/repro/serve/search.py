@@ -1,10 +1,15 @@
 """Conjunctive-query search serving — the paper's own application.
 
 Builds the pre-processed index (one PrefixIndex per term posting list) and
-serves batched k-word AND-queries through the device engine.  Algorithm
-selection follows the paper's online policy (Section 3.4): HashBin when
-the size ratio is extreme, RanGroupScan otherwise; both run off the same
-pre-processed structures.
+serves conjunctive AND-queries through the batched execution subsystem
+(``repro.exec``): every request batch is **planned** (terms deduped,
+resolved, routed per the paper's §3.4 online policy — HashBin when the size
+ratio is extreme, RanGroupScan otherwise), **bucketed** by static shape
+signature, **executed** one jit call per bucket on the device engine, and
+the results **scattered** back in request order.  Host-path plans (HashBin,
+or RanGroupScan without a device) run per query off the same normalized
+plans, so all paths agree on term dedup and set ordering.  Single-query
+``query`` is just a batch of one.
 """
 from __future__ import annotations
 
@@ -14,11 +19,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.baselines import merge
-from ..core.engine import BatchedEngine, DeviceSet, intersect_device
+from ..core.engine import BatchedEngine
 from ..core.hashing import default_permutation, random_hash_family
 from ..core.intersect import hashbin, rangroupscan
 from ..core.partition import preprocess_prefix
+from ..exec.batch import execute_plan_buckets
+from ..exec.plan import QueryPlan, plan_query
 
 
 @dataclasses.dataclass
@@ -52,26 +58,53 @@ class SearchEngine:
             for t, idx in self.index.items():
                 self.device.add(str(t), idx)
 
+    def plan(self, terms: Sequence[int]) -> QueryPlan:
+        """Normalize + route one query (dedup, §3.4 policy, shape sig)."""
+        return plan_query(self.index, terms,
+                          hashbin_ratio=self.hashbin_ratio,
+                          device=self.device is not None)
+
     def query(self, terms: Sequence[int]) -> QueryResult:
-        idxs = [self.index[t] for t in terms if t in self.index]
-        if len(idxs) < len(terms):
-            return QueryResult(np.empty(0, np.uint32), 0.0, "empty", {})
-        idxs.sort(key=lambda i: i.n)
-        t0 = time.perf_counter()
-        if len(idxs) == 2 and idxs[-1].n / max(1, idxs[0].n) > self.hashbin_ratio:
-            res, stats = hashbin(idxs[0], idxs[1])
-            algo = "hashbin"
-        elif self.device is not None:
-            res, stats = self.device.query([str(t) for t in terms])
-            algo = "rangroupscan/device"
-        else:
-            res, stats = rangroupscan(idxs)
-            algo = "rangroupscan"
-        dt = (time.perf_counter() - t0) * 1e6
-        return QueryResult(res, dt, algo, stats if isinstance(stats, dict) else stats.__dict__)
+        return self.query_batch([terms])[0]
 
     def query_batch(self, queries: Sequence[Sequence[int]]) -> List[QueryResult]:
-        return [self.query(q) for q in queries]
+        """Plan -> bucket -> execute -> scatter (request order preserved).
+
+        Device-routed plans are grouped by shape signature and each bucket
+        runs as ONE jit execution (plus rare overflow re-runs) — the number
+        of device dispatches is O(#distinct signatures), not O(#queries).
+        Host-routed plans (HashBin / no device) run per query.
+        """
+        plans = [self.plan(q) for q in queries]
+        results: List[Optional[QueryResult]] = [None] * len(queries)
+        for i, plan in enumerate(plans):
+            if plan.algorithm == "empty":
+                results[i] = QueryResult(np.empty(0, np.uint32), 0.0, "empty", {})
+            elif plan.algorithm == "hashbin":
+                idxs = [self.index[t] for t in plan.terms]
+                t0 = time.perf_counter()
+                res, stats = hashbin(idxs[0], idxs[1])
+                dt = (time.perf_counter() - t0) * 1e6
+                results[i] = QueryResult(res, dt, "hashbin", stats.__dict__)
+            elif plan.algorithm == "host":
+                idxs = [self.index[t] for t in plan.terms]
+                t0 = time.perf_counter()
+                res, stats = rangroupscan(idxs)
+                dt = (time.perf_counter() - t0) * 1e6
+                results[i] = QueryResult(res, dt, "rangroupscan", stats.__dict__)
+        device_plans = [(i, p) for i, p in enumerate(plans)
+                        if p.algorithm == "device"]
+        if device_plans:
+            by_index = execute_plan_buckets(
+                lambda term: self.device.sets[str(term)],
+                device_plans,
+                use_pallas=self.device.use_pallas,
+            )
+            for i, _ in device_plans:
+                res, stats = by_index[i]
+                results[i] = QueryResult(res, stats.get("batch_us", 0.0),
+                                         "rangroupscan/device", stats)
+        return results  # type: ignore[return-value]
 
 
 def zipf_query_log(index_terms: Sequence[int], n_queries: int = 1000,

@@ -1,0 +1,43 @@
+"""Optional-import shim for hypothesis.
+
+When hypothesis is installed the real ``given``/``settings``/``st`` are
+re-exported unchanged.  When it is missing (minimal CI images), property
+tests degrade to clean per-test skips instead of killing collection of the
+whole module — the unit tests in the same files still run.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``strategies``: tolerates any attribute access /
+        call chain used at module scope (st.lists(st.integers(...), ...))."""
+
+        def __getattr__(self, _name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg replacement so pytest doesn't hunt for fixtures
+            # matching the property's parameter names
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco

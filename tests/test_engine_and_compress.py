@@ -1,7 +1,7 @@
 """Device engine, baselines, and compression tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.baselines import BASELINES
 from repro.core.compress import (
@@ -54,7 +54,7 @@ def test_engine_overflow_rerun(corpus):
         [DeviceSet.from_host(idxs["alpha"]), DeviceSet.from_host(idxs["beta"])],
         capacity=4, use_pallas=False)
     assert np.array_equal(res, truth)
-    assert stats["capacity"] > 4  # doubled until it fit
+    assert stats["capacity"] > 4  # re-run once at full capacity
 
 
 def test_batched_engine_api(corpus):

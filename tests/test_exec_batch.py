@@ -1,0 +1,171 @@
+"""Tests for the batched multi-query execution subsystem (repro.exec).
+
+Covers: planner normalization (dedup, routing, shape signatures), the
+bucketed batch executor against per-query and host oracles over mixed-shape
+batches, the overflow -> single full-capacity re-run path, and the
+acceptance bound that a 256-query zipf log issues O(#signatures) jit
+executions, not O(#queries).
+"""
+import numpy as np
+import pytest
+
+from repro.core import engine as engine_mod
+from repro.core.engine import (
+    BatchedEngine, DeviceSet, intersect_device, intersect_device_batch,
+    reset_exec_counters, EXEC_COUNTERS,
+)
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.intersect import rangroupscan
+from repro.core.partition import preprocess_prefix
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.exec.plan import plan_query
+from repro.serve.search import SearchEngine, zipf_query_log
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    """Sets of assorted sizes -> assorted (t, gmax) shapes."""
+    rng = np.random.default_rng(7)
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    common = rng.choice(1 << 24, 80, replace=False).astype(np.uint32)
+    raw, idxs = {}, {}
+    for name, n in [("a", 900), ("b", 1100), ("c", 4000),
+                    ("d", 4300), ("e", 9000)]:
+        s = np.unique(np.concatenate(
+            [rng.choice(1 << 24, n, replace=False).astype(np.uint32), common]))
+        raw[name] = s
+        idxs[name] = preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+    return raw, idxs
+
+
+def truth_of(sets):
+    out = sets[0]
+    for s in sets[1:]:
+        out = np.intersect1d(out, s)
+    return out
+
+
+MIXED_QUERIES = [
+    ["a", "b"], ["c", "d"], ["a", "e"], ["a", "b", "c"],
+    ["c", "d", "e"], ["b", "a"], ["a", "b", "c", "d"], ["e", "c", "d"],
+    ["a"], ["a", "a", "b"],
+]
+
+
+def test_query_many_matches_per_query_and_host(corpus):
+    raw, idxs = corpus
+    eng = BatchedEngine(use_pallas=False)
+    for k, v in idxs.items():
+        eng.add(k, v)
+    batched = eng.query_many(MIXED_QUERIES)
+    assert len(batched) == len(MIXED_QUERIES)
+    for q, (res, stats) in zip(MIXED_QUERIES, batched):
+        names = sorted(set(q))
+        truth = truth_of([raw[n] for n in names])
+        # host oracle (Alg. 5 reference)
+        host, _ = rangroupscan([idxs[n] for n in names])
+        # per-query device path (batch of one)
+        single, _ = intersect_device([eng.sets[n] for n in names],
+                                     use_pallas=False)
+        assert np.array_equal(res, truth), f"batched wrong for {q}"
+        assert np.array_equal(host, truth)
+        assert np.array_equal(single, truth)
+        assert stats["r"] == len(truth)
+
+
+def test_query_many_pallas_path(corpus):
+    raw, idxs = corpus
+    eng = BatchedEngine(use_pallas=True)
+    for k in ("a", "b", "c"):
+        eng.add(k, idxs[k])
+    out = eng.query_many([["a", "b"], ["a", "c"], ["a", "b", "c"]])
+    assert np.array_equal(out[0][0], truth_of([raw["a"], raw["b"]]))
+    assert np.array_equal(out[1][0], truth_of([raw["a"], raw["c"]]))
+    assert np.array_equal(out[2][0], truth_of([raw["a"], raw["b"], raw["c"]]))
+
+
+def test_batched_overflow_rerun(corpus):
+    raw, idxs = corpus
+    dsets = {k: DeviceSet.from_host(v) for k, v in idxs.items()}
+    queries = [[dsets["a"], dsets["b"]], [dsets["b"], dsets["a"]]]
+    reset_exec_counters()
+    out = intersect_device_batch(queries, capacity=4, use_pallas=False)
+    truth = truth_of([raw["a"], raw["b"]])
+    for res, stats in out:
+        assert np.array_equal(res, truth)
+        assert stats["capacity"] > 4  # re-run at full capacity G
+    # overflow triggers exactly ONE re-run pass (straight to capacity G)
+    assert EXEC_COUNTERS["rerun_calls"] == 1
+    assert EXEC_COUNTERS["batch_calls"] == 2
+
+
+def test_batch_mixed_signature_rejected(corpus):
+    _, idxs = corpus
+    dsets = {k: DeviceSet.from_host(v) for k, v in idxs.items()}
+    with pytest.raises(AssertionError):
+        intersect_device_batch(
+            [[dsets["a"], dsets["b"]], [dsets["a"], dsets["e"]]],
+            use_pallas=False)
+
+
+def test_planner_dedup_and_routing(corpus):
+    _, idxs = corpus
+    plan = plan_query(idxs, ["a", "a", "b", "a"])
+    assert plan.terms == ("a", "b") or set(plan.terms) == {"a", "b"}
+    assert len(plan.terms) == 2
+    assert plan.algorithm == "device"
+    assert plan.sig.k == 2
+    # same signature regardless of request order -> same bucket
+    assert plan.sig == plan_query(idxs, ["b", "a"]).sig
+    # missing term -> empty
+    assert plan_query(idxs, ["a", "zz"]).algorithm == "empty"
+    # k == 1 after dedup still plans
+    assert plan_query(idxs, ["a", "a"]).terms == ("a",)
+    # host routing when no device
+    assert plan_query(idxs, ["a", "b"], device=False).algorithm == "host"
+    # extreme ratio -> hashbin
+    assert plan_query(idxs, ["a", "e"], hashbin_ratio=2.0).algorithm == "hashbin"
+
+
+def _small_search_engine(n_docs=3000, vocab=600, use_device=True):
+    docs = zipf_corpus(n_docs, vocab=vocab, mean_len=40, seed=3)
+    postings = inverted_index(docs)
+    return SearchEngine(postings, w=256, m=2, seed=3, use_device=use_device)
+
+
+def test_search_engine_query_dedup():
+    eng = _small_search_engine(use_device=False)
+    term = sorted(eng.index)[0]
+    single = eng.query([term])
+    doubled = eng.query([term, term])
+    assert np.array_equal(single.doc_ids, doubled.doc_ids)
+    assert np.array_equal(np.sort(doubled.doc_ids), np.sort(eng.index[term].values))
+
+
+def test_query_batch_zipf_jit_executions_bounded():
+    """Acceptance: a 256-query zipf log issues <= (#distinct device shape
+    signatures + overflow re-runs) jit executions — not 256."""
+    eng = _small_search_engine(use_device=True)
+    log = zipf_query_log(sorted(eng.index), 256, seed=11)
+    plans = [eng.plan(q) for q in log]
+    device_sigs = {p.sig for p in plans if p.algorithm == "device"}
+    assert device_sigs, "zipf log produced no device-routed queries"
+    reset_exec_counters()
+    results = eng.query_batch(log)
+    assert EXEC_COUNTERS["batch_calls"] <= len(device_sigs) + EXEC_COUNTERS["rerun_calls"]
+    assert EXEC_COUNTERS["batch_calls"] < len(log)
+    # and the batch is correct: spot-check every 8th query vs the host truth
+    for q, r in list(zip(log, results))[::8]:
+        truth = truth_of([eng.index[t].values for t in dict.fromkeys(q)])
+        assert np.array_equal(r.doc_ids, np.sort(truth).astype(np.uint32)), q
+
+
+def test_query_batch_matches_per_query_results():
+    eng = _small_search_engine(use_device=True)
+    log = zipf_query_log(sorted(eng.index), 48, seed=5)
+    batched = eng.query_batch(log)
+    for q, br in zip(log, batched):
+        single = eng.query(q)
+        assert np.array_equal(br.doc_ids, single.doc_ids), q
+        assert br.algorithm == single.algorithm

@@ -51,6 +51,40 @@ def test_group_match_sweep(S, ga, gb):
     np.testing.assert_array_equal(out_ref, out_pal)
 
 
+@pytest.mark.parametrize("B", [1, 3, 9])
+@pytest.mark.parametrize("G", [7, 128, 300])
+def test_bitmap_filter_batched_folds_grid(B, G):
+    """(B, k, G, m, W) batch axis == B independent unbatched calls."""
+    rng = np.random.default_rng(B * 17 + G)
+    imgs = rng.integers(0, 1 << 32, size=(B, 3, G, 2, 8), dtype=np.uint64).astype(np.uint32)
+    imgs[rng.random(imgs.shape) < 0.6] = 0
+    x = jnp.asarray(imgs)
+    out_ref = np.asarray(ref.bitmap_filter_ref(x))
+    assert out_ref.shape == (B, G)
+    out_pal = np.asarray(bitmap_filter_pallas(x, interpret=True))
+    np.testing.assert_array_equal(out_ref, out_pal)
+    for b in range(B):
+        np.testing.assert_array_equal(
+            out_ref[b], np.asarray(bitmap_filter_pallas(x[b], interpret=True)))
+
+
+@pytest.mark.parametrize("B,S", [(1, 8), (4, 13), (6, 64)])
+def test_group_match_batched_folds_rows(B, S):
+    rng = np.random.default_rng(B * 31 + S)
+    a = rng.integers(0, 300, size=(B, S, 16)).astype(np.int32)
+    b = rng.integers(0, 300, size=(B, S, 24)).astype(np.int32)
+    a[rng.random(a.shape) < 0.25] = -1
+    b[rng.random(b.shape) < 0.25] = -1
+    out_ref = np.asarray(ref.group_match_ref(jnp.asarray(a), jnp.asarray(b)))
+    assert out_ref.shape == (B, S, 16)
+    out_pal = np.asarray(group_match_pallas(jnp.asarray(a), jnp.asarray(b), interpret=True))
+    np.testing.assert_array_equal(out_ref, out_pal)
+    for i in range(B):
+        np.testing.assert_array_equal(
+            out_ref[i],
+            np.asarray(group_match_pallas(jnp.asarray(a[i]), jnp.asarray(b[i]), interpret=True)))
+
+
 def test_group_match_sentinel_never_matches():
     a = jnp.full((4, 8), -1, dtype=jnp.int32)
     b = jnp.full((4, 8), -1, dtype=jnp.int32)
