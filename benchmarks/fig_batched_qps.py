@@ -88,7 +88,9 @@ def main():
     args = ap.parse_args()
     res = run(args.docs, args.vocab, args.queries)
     print(json.dumps(res, indent=2))
-    pathlib.Path(args.out).write_text(json.dumps(res, indent=2) + "\n")
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2) + "\n")
     print(f"wrote {args.out}")
 
 

@@ -65,21 +65,60 @@ __all__ = [
     "intersect_device",
     "intersect_device_batch",
     "intersect_sharded",
+    "pow2_tiers",
+    "warm_executables",
+    "warm_from_plans",
+    "clear_exec_jit_cache",
     "BatchedEngine",
     "EXEC_COUNTERS",
+    "ExecCounters",
+    "reset_exec_counters",
 ]
 
-# Telemetry for the batched device path.  ``batch_calls`` counts jit
-# *executions* of the bucketed pipeline (what per-query dispatch would make
-# O(#queries) and bucketing makes O(#signatures)); ``batch_traces`` counts
-# actual retraces (compiles); ``rerun_calls`` counts overflow re-run passes.
-# Tests assert on these; reset with ``reset_exec_counters()``.
-EXEC_COUNTERS: Dict[str, int] = {"batch_calls": 0, "batch_traces": 0, "rerun_calls": 0}
+class ExecCounters(dict):
+    """Telemetry for the batched device path and the serving front-end.
+
+    A plain ``dict`` subclass so existing ``EXEC_COUNTERS["key"]`` reads and
+    writes keep working; ``reset()`` zeroes every counter (test setup calls
+    it autouse so counter-asserting tests are order-independent).
+
+    Keys:
+
+    - ``batch_calls``     jit *executions* of the bucketed pipeline (what
+      per-query dispatch would make O(#queries) and bucketing makes
+      O(#signatures)).
+    - ``batch_traces``    actual retraces (compiles) of the pipeline — one
+      per distinct ``(ShapeSig, B-tier)`` pair over the process lifetime.
+    - ``rerun_calls``     overflow re-run passes (survivors > capacity).
+    - ``warm_executions`` pipeline executions issued by compile warming
+      (:func:`warm_executables`) at index-build time.
+    - ``result_cache_hits`` / ``result_cache_misses`` — lookups in the
+      normalized-plan result cache (``exec/cache.py``).
+    - ``tier_flushes`` / ``deadline_flushes`` — admission-queue bucket
+      flushes by cause: reached the full power-of-two tier vs. the oldest
+      query's deadline budget expired (``serve/admission.py``).
+    """
+
+    _KEYS = (
+        "batch_calls", "batch_traces", "rerun_calls", "warm_executions",
+        "result_cache_hits", "result_cache_misses",
+        "tier_flushes", "deadline_flushes",
+    )
+
+    def __init__(self):
+        super().__init__({k: 0 for k in self._KEYS})
+
+    def reset(self) -> None:
+        for key in self._KEYS:
+            self[key] = 0
+
+
+EXEC_COUNTERS = ExecCounters()
 
 
 def reset_exec_counters() -> None:
-    for key in EXEC_COUNTERS:
-        EXEC_COUNTERS[key] = 0
+    """Back-compat alias for :meth:`ExecCounters.reset`."""
+    EXEC_COUNTERS.reset()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -310,6 +349,93 @@ def intersect_device(
     return result, stats
 
 
+def pow2_tiers(up_to: int) -> Tuple[int, ...]:
+    """All power-of-two batch tiers ``(1, 2, 4, …, up_to)``.
+
+    Warming these covers every partial-flush size in ``[1, up_to]`` (the
+    executor pads B up to the next power of two), so a front-end with
+    ``flush_tier = up_to`` compiles nothing at serve time.
+    """
+    assert up_to >= 1 and (up_to & (up_to - 1)) == 0, "up_to must be pow2"
+    tiers, b = [], 1
+    while b <= up_to:
+        tiers.append(b)
+        b <<= 1
+    return tuple(tiers)
+
+
+def warm_executables(
+    representatives: Sequence[Sequence[DeviceSet]],
+    b_tiers: Sequence[int] = (1,),
+    capacity: Optional[int] = None,
+    use_pallas="auto",
+) -> int:
+    """Pre-trace the bucketed pipeline so first live requests don't compile.
+
+    ``representatives`` holds ONE query row (list of DeviceSets) per shape
+    signature worth warming — typically the top-K signatures of a sample
+    workload, extracted at index-build time.  For each row and each batch
+    tier ``b`` in ``b_tiers`` the row is replicated ``b`` times and pushed
+    through :func:`intersect_device_batch`, populating the jit cache for the
+    ``(ShapeSig, B-tier)`` executable that a live bucket of up to ``b``
+    queries will hit (the executor pads B up to a power of two, so warming
+    tier ``b`` covers every partial flush of size in ``(b/2, b]``).
+
+    Results are discarded — this warms the *compile* cache, not the result
+    cache.  Increments ``EXEC_COUNTERS["warm_executions"]`` once per
+    (row, tier) execution; the underlying ``batch_calls`` / ``batch_traces``
+    bumps happen at build time, before serving counters are read.
+
+    Returns the number of pipeline executions issued.
+    """
+    issued = 0
+    for row in representatives:
+        for b in b_tiers:
+            assert b >= 1 and (b & (b - 1)) == 0, "b_tiers must be powers of two"
+            intersect_device_batch(
+                [list(row)] * b, capacity=capacity, use_pallas=use_pallas
+            )
+            EXEC_COUNTERS["warm_executions"] += 1
+            issued += 1
+    return issued
+
+
+def warm_from_plans(plans, get_set, top_k: int = 8,
+                    b_tiers: Sequence[int] = (1,), use_pallas="auto"):
+    """Shared warming policy over already-planned queries.
+
+    Counts device-routed shape signatures in ``plans`` (objects with
+    ``.algorithm`` / ``.sig`` / ``.terms`` — i.e. ``exec.plan.QueryPlan``),
+    picks the ``top_k`` most frequent, and pre-traces one representative
+    row per signature at every batch tier in ``b_tiers`` via
+    :func:`warm_executables`.  ``get_set`` maps a planned term to its
+    DeviceSet.  Returns the warmed signatures, most frequent first.
+    """
+    from collections import Counter
+
+    freq = Counter(p.sig for p in plans if p.algorithm == "device")
+    rep = {}
+    for p in plans:
+        if p.algorithm == "device" and p.sig not in rep:
+            rep[p.sig] = [get_set(t) for t in p.terms]
+    warmed = [sig for sig, _ in freq.most_common(top_k)]
+    warm_executables([rep[sig] for sig in warmed], b_tiers=b_tiers,
+                     use_pallas=use_pallas)
+    return warmed
+
+
+def clear_exec_jit_cache() -> None:
+    """Drop every compiled executable of the bucketed pipeline.
+
+    Test hook: makes "warming traces, serving doesn't" assertions
+    deterministic regardless of what earlier tests compiled (the jit cache
+    is process-global).  No-op if the jax version lacks ``clear_cache``.
+    """
+    clear = getattr(_intersect_k_batch, "clear_cache", None)
+    if clear is not None:
+        clear()
+
+
 # --------------------------------------------------------------------------
 # shard_map distribution over the z-prefix space
 # --------------------------------------------------------------------------
@@ -388,3 +514,19 @@ class BatchedEngine:
         from ..exec.batch import execute_name_queries
 
         return execute_name_queries(self.sets, queries, use_pallas=self.use_pallas)
+
+    def warm(self, sample_queries: Sequence[Sequence[str]], top_k: int = 8,
+             b_tiers: Sequence[int] = (1,)):
+        """Compile-cache warming from a name-keyed sample workload
+        (index-build time).  Plans the sample and delegates the policy to
+        :func:`warm_from_plans`.  Returns the warmed
+        :class:`~repro.exec.plan.ShapeSig`\\ s, most frequent first.
+        """
+        from ..exec.plan import plan_query
+
+        plans = [
+            plan_query(self.sets, q, hashbin_ratio=float("inf"), device=True)
+            for q in sample_queries
+        ]
+        return warm_from_plans(plans, lambda t: self.sets[t], top_k=top_k,
+                               b_tiers=b_tiers, use_pallas=self.use_pallas)

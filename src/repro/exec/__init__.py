@@ -3,16 +3,27 @@
 Dataflow: :mod:`plan` normalizes raw queries into shape-keyed
 :class:`~repro.exec.plan.QueryPlan`\\ s; :mod:`batch` groups plans by
 signature and drives one jit execution per bucket through
-``core.engine.intersect_device_batch``.
+``core.engine.intersect_device_batch`` (:func:`~repro.exec.batch.
+execute_bucket` is the single-bucket entry the async admission front-end
+flushes into); :mod:`cache` remembers results of repeated normalized plans
+so hits skip the device entirely.
 """
 from .plan import QueryPlan, ShapeSig, plan_query
-from .batch import bucket_plans, execute_name_queries, execute_plan_buckets
+from .batch import (
+    bucket_plans,
+    execute_bucket,
+    execute_name_queries,
+    execute_plan_buckets,
+)
+from .cache import ResultCache
 
 __all__ = [
     "QueryPlan",
     "ShapeSig",
     "plan_query",
     "bucket_plans",
+    "execute_bucket",
     "execute_name_queries",
     "execute_plan_buckets",
+    "ResultCache",
 ]

@@ -24,13 +24,23 @@ import numpy as np
 from ..core.engine import DeviceSet, intersect_device_batch
 from .plan import QueryPlan, ShapeSig, plan_query
 
-__all__ = ["bucket_plans", "execute_plan_buckets", "execute_name_queries"]
+__all__ = [
+    "bucket_plans",
+    "execute_bucket",
+    "execute_plan_buckets",
+    "execute_name_queries",
+]
 
 
 def bucket_plans(
     indexed_plans: Iterable[Tuple[int, QueryPlan]],
 ) -> Dict[ShapeSig, List[Tuple[int, QueryPlan]]]:
-    """Group (query_index, plan) pairs by shape signature (insertion order)."""
+    """Group (query_index, plan) pairs by shape signature (insertion order).
+
+    Accepts device plans only (asserts); pure bookkeeping, no counters.
+    Each returned bucket is shape-uniform: stacking its rows yields
+    ``(B, 2^t_i, …)`` arrays ready for one jit execution.
+    """
     buckets: Dict[ShapeSig, List[Tuple[int, QueryPlan]]] = defaultdict(list)
     for qi, plan in indexed_plans:
         assert plan.algorithm == "device" and plan.sig is not None, (
@@ -40,24 +50,61 @@ def bucket_plans(
     return dict(buckets)
 
 
+def execute_bucket(
+    get_set: Callable[[object], DeviceSet],
+    sig: ShapeSig,
+    items: Sequence[Tuple[int, QueryPlan]],
+    use_pallas="auto",
+) -> Dict[int, Tuple[np.ndarray, Dict]]:
+    """Execute ONE same-signature bucket; returns {query_index: (values,
+    stats)}.
+
+    This is the partial-bucket flush path: the admission queue calls it
+    directly with however many queries have accumulated under ``sig`` when
+    a flush fires (full power-of-two tier reached, or the oldest query's
+    deadline expired) — the executor pads B up to the next power-of-two
+    tier, so a partial bucket reuses the same small family of compiled
+    executables as a full one.  ``get_set`` resolves a planned term to its
+    DeviceSet.
+
+    Shapes: every plan in ``items`` must carry ``sig`` (the executor
+    asserts signature uniformity); the bucket runs as one ``(B, …)`` jit
+    execution plus a rare overflow re-run.  Counters: one
+    ``EXEC_COUNTERS["batch_calls"]`` bump per pass (see
+    ``core.engine.intersect_device_batch``); each result's stats carry
+    ``batch_us`` — bucket wall time divided by bucket size, the honest
+    amortized per-query cost.
+    """
+    rows = [[get_set(t) for t in plan.terms] for _, plan in items]
+    t0 = time.perf_counter()
+    results = intersect_device_batch(
+        rows, capacity=sig.capacity_tier, use_pallas=use_pallas
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    out: Dict[int, Tuple[np.ndarray, Dict]] = {}
+    for (qi, _), (values, stats) in zip(items, results):
+        stats["batch_us"] = us / len(items)
+        out[qi] = (values, stats)
+    return out
+
+
 def execute_plan_buckets(
     get_set: Callable[[object], DeviceSet],
     indexed_plans: Iterable[Tuple[int, QueryPlan]],
     use_pallas="auto",
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute device plans bucket-by-bucket; returns {query_index: (values,
-    stats)}.  ``get_set`` resolves a planned term to its DeviceSet."""
+    stats)}.
+
+    Synchronous whole-batch entry: groups ``indexed_plans`` by shape
+    signature and runs each bucket through :func:`execute_bucket` — one jit
+    execution per distinct signature (plus rare overflow re-runs), i.e.
+    O(#signatures) device dispatches for the whole batch.  ``get_set``
+    resolves a planned term to its DeviceSet.
+    """
     out: Dict[int, Tuple[np.ndarray, Dict]] = {}
     for sig, items in bucket_plans(indexed_plans).items():
-        rows = [[get_set(t) for t in plan.terms] for _, plan in items]
-        t0 = time.perf_counter()
-        results = intersect_device_batch(
-            rows, capacity=sig.capacity_tier, use_pallas=use_pallas
-        )
-        us = (time.perf_counter() - t0) * 1e6
-        for (qi, _), (values, stats) in zip(items, results):
-            stats["batch_us"] = us / len(items)
-            out[qi] = (values, stats)
+        out.update(execute_bucket(get_set, sig, items, use_pallas=use_pallas))
     return out
 
 
@@ -70,7 +117,10 @@ def execute_name_queries(
 
     ``queries`` are lists of set names; unknown names raise KeyError (same
     contract as single-query ``BatchedEngine.query``).  Duplicate names
-    within a query are deduped by the planner.
+    within a query are deduped by the planner.  Results return in request
+    order regardless of bucketing.  Counters: one ``batch_calls`` per
+    distinct signature (plus ``rerun_calls`` on overflow) via
+    :func:`execute_bucket`.
     """
     for q in queries:
         for name in q:

@@ -1,0 +1,73 @@
+"""LRU result cache keyed on the normalized plan.
+
+Real query logs repeat themselves — Zipf term popularity means the same
+conjunction arrives over and over — so the cheapest "execution" path of all
+is remembering the answer.  The cache key is
+:meth:`~repro.exec.plan.QueryPlan.cache_key` (routing algorithm + the
+dedup'd, deterministically sorted term tuple), so every surface form of a
+repeated query hits the same entry and a cached hit skips planning's
+downstream entirely: no bucket, no device dispatch, no jit execution.
+
+Hit/miss telemetry is folded into ``EXEC_COUNTERS``
+(``result_cache_hits`` / ``result_cache_misses``) next to the jit-execution
+counters, so a serving run can report "N queries = H cache hits + B bucket
+executions" from one place.
+
+The cache is policy-free about *what* is cacheable: callers decide (the
+serving layer skips ``"empty"`` plans — a miss counter bumping on every
+unresolvable query would skew hit-rate telemetry for no saved work).
+Stored values are treated as immutable; callers must not mutate a returned
+result's arrays.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Optional
+
+from ..core.engine import EXEC_COUNTERS
+from .plan import QueryPlan
+
+__all__ = ["ResultCache"]
+
+
+class ResultCache:
+    """Bounded LRU mapping ``QueryPlan.cache_key() -> result``.
+
+    ``get`` bumps ``EXEC_COUNTERS["result_cache_hits"]`` /
+    ``["result_cache_misses"]``; ``put`` evicts least-recently-used entries
+    past ``capacity``.  A ``capacity`` of 0 disables the cache (every
+    ``get`` is a silent miss that touches no counter, so a disabled cache
+    is telemetry-invisible).
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = int(capacity)
+        self._entries: "OrderedDict[Any, Any]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, plan: QueryPlan) -> Optional[Any]:
+        """Return the cached result for ``plan``, or None (counted miss)."""
+        if self.capacity <= 0:
+            return None
+        key = plan.cache_key()
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            EXEC_COUNTERS["result_cache_hits"] += 1
+            return self._entries[key]
+        EXEC_COUNTERS["result_cache_misses"] += 1
+        return None
+
+    def put(self, plan: QueryPlan, value: Any) -> None:
+        """Insert/refresh ``plan``'s result; evict LRU past capacity."""
+        if self.capacity <= 0:
+            return
+        key = plan.cache_key()
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+
+    def clear(self) -> None:
+        self._entries.clear()

@@ -55,6 +55,19 @@ class QueryPlan:
     algorithm: str
     sig: Optional[ShapeSig] = None
 
+    def cache_key(self) -> Tuple[str, Tuple]:
+        """Canonical result-cache key for this plan.
+
+        Because planning dedups terms and sorts them deterministically (by
+        ``(t, n, term)``), every surface form of the same conjunction —
+        ``[a, b]``, ``[b, a]``, ``[a, a, b]`` — normalizes to the same
+        ``terms`` tuple, so one cache entry serves them all.  The routing
+        algorithm is part of the key: host and device paths return
+        identical values, but keying on it keeps an entry from outliving a
+        routing change (e.g. a device attaching between requests).
+        """
+        return (self.algorithm, self.terms)
+
 
 def plan_query(
     index: Mapping,
@@ -62,7 +75,15 @@ def plan_query(
     hashbin_ratio: float = 100.0,
     device: bool = True,
 ) -> QueryPlan:
-    """Plan one query against ``index`` (term -> set with .t/.gmax/.n)."""
+    """Plan one query against ``index`` (term -> set with .t/.gmax/.n).
+
+    Pure metadata work — touches no arrays, runs no device code, and
+    increments no ``EXEC_COUNTERS``.  For device-routed plans the returned
+    ``sig.gmaxes`` are power-of-two tiers (``gmax_tier``) and
+    ``sig.capacity_tier`` is ``default_capacity(ts)``, so the signature
+    matches the static shapes the executor will stack into ``(B, …)``
+    arrays exactly.
+    """
     uniq = []
     seen = set()
     for term in terms:

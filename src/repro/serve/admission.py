@@ -1,0 +1,192 @@
+"""Async admission & micro-batching front-end primitives.
+
+The batched executor (``repro.exec``) wants signature-coherent ``(B, …)``
+buckets; live traffic arrives as single queries from many concurrent
+callers.  This module is the adapter between the two: an
+:class:`AdmissionQueue` accumulates submissions into per-key micro-batches
+(the key is a :class:`~repro.exec.plan.ShapeSig` in the search front-end,
+but the queue is generic) and hands a bucket back for execution when
+
+- **tier flush** — the bucket reaches the configured power-of-two
+  ``flush_tier`` (a full bucket pads to exactly its own size, zero waste), or
+- **deadline flush** — the *oldest* queued submission's deadline budget
+  expires (default 2 ms), bounding the tail latency a query can lose to
+  waiting for batch-mates,
+
+whichever comes first.  Flush causes are counted in
+``EXEC_COUNTERS["tier_flushes"]`` / ``["deadline_flushes"]``.
+
+Each submission returns a :class:`Ticket` — a minimal future: callers poll
+``ticket.done`` / read ``ticket.value`` after the owning engine flushes.
+Tickets also carry queue-wait telemetry (``wait_us``), which is exactly the
+quantity the deadline budget bounds (total latency = wait + bucket
+execution).
+
+The queue itself does no execution and holds no device state; an engine
+(e.g. ``serve.search.AsyncSearchEngine``) drives it: ``submit`` into it,
+``take_due(now)`` out of it, execute, resolve tickets.  All methods are
+lock-protected so many caller threads can submit concurrently; the clock is
+injectable so tests can fire deadlines deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+
+from ..core.engine import EXEC_COUNTERS
+
+__all__ = ["Ticket", "AdmissionQueue"]
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Minimal future for one admitted request.
+
+    ``submitted_at`` / ``deadline_us`` define the flush budget; after
+    resolution ``value`` holds the engine's result, ``wait_us`` the time the
+    request sat in the queue (0 for requests answered at submit time, e.g.
+    result-cache hits), and ``done`` flips True.  Reading ``value`` before
+    resolution raises.  A ticket whose bucket failed to execute resolves
+    with the error instead: ``done`` is True, ``error`` holds the
+    exception, and ``value`` re-raises it — callers polling ``done`` never
+    hang on a failed bucket.
+    """
+
+    submitted_at: float
+    deadline_us: float
+    done: bool = False
+    wait_us: float = 0.0
+    error: Optional[BaseException] = None
+    _value: Any = None
+
+    @property
+    def value(self) -> Any:
+        if not self.done:
+            raise RuntimeError("ticket not resolved yet — flush/drain first")
+        if self.error is not None:
+            raise self.error
+        return self._value
+
+    def resolve(self, value: Any, wait_us: float = 0.0) -> None:
+        self._value = value
+        self.wait_us = wait_us
+        self.done = True
+
+    def resolve_error(self, exc: BaseException, wait_us: float = 0.0) -> None:
+        self.error = exc
+        self.wait_us = wait_us
+        self.done = True
+
+    def deadline_at(self) -> float:
+        """Absolute clock time at which this ticket forces a flush."""
+        return self.submitted_at + self.deadline_us * 1e-6
+
+
+class AdmissionQueue:
+    """Deadline-aware per-key micro-batch accumulator (execution-free).
+
+    Buckets are keyed by any hashable (the search engine uses ``ShapeSig``);
+    each bucket remembers insertion order, and its binding deadline is the
+    *earliest* entry deadline — normally the oldest entry's, unless a later
+    submission carried a tighter per-query budget.  Thread-safe.
+    """
+
+    def __init__(self, flush_tier: int = 64, deadline_us: float = 2000.0,
+                 clock: Callable[[], float] = time.perf_counter):
+        assert flush_tier >= 1 and (flush_tier & (flush_tier - 1)) == 0, (
+            "flush_tier must be a power of two (bucket pads to pow2 tiers)"
+        )
+        self.flush_tier = flush_tier
+        self.deadline_us = float(deadline_us)
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._buckets: Dict[Hashable, List[Tuple[Ticket, Any]]] = {}
+
+    def submit(self, key: Hashable, item: Any,
+               deadline_us: Optional[float] = None) -> Ticket:
+        """Queue ``item`` under ``key``; returns its unresolved Ticket.
+
+        The per-submission ``deadline_us`` overrides the queue default.
+        Submission never flushes by itself — call :meth:`take_full` /
+        :meth:`take_due` afterwards so the engine (which owns execution)
+        controls when device work happens.
+        """
+        ticket = Ticket(
+            submitted_at=self.clock(),
+            deadline_us=self.deadline_us if deadline_us is None else float(deadline_us),
+        )
+        with self._lock:
+            self._buckets.setdefault(key, []).append((ticket, item))
+        return ticket
+
+    def take_full(self) -> List[Tuple[Hashable, List[Tuple[Ticket, Any]]]]:
+        """Remove and return buckets that reached the full flush tier."""
+        out = []
+        with self._lock:
+            for key in [k for k, b in self._buckets.items()
+                        if len(b) >= self.flush_tier]:
+                out.append((key, self._buckets.pop(key)))
+                EXEC_COUNTERS["tier_flushes"] += 1
+        return out
+
+    @staticmethod
+    def _bucket_deadline(bucket) -> float:
+        """Earliest absolute deadline in a bucket.  Usually the oldest
+        entry's, but a later submission with a tighter per-query budget
+        (``submit(..., deadline_us=...)``) can be the binding one."""
+        return min(t.deadline_at() for t, _ in bucket)
+
+    def take_due(self, now: Optional[float] = None
+                 ) -> List[Tuple[Hashable, List[Tuple[Ticket, Any]]]]:
+        """Remove and return buckets whose earliest deadline has expired.
+
+        Full-tier buckets are also taken (counted as tier flushes) — a
+        caller that only ever calls ``take_due`` still flushes correctly.
+        """
+        now = self.clock() if now is None else now
+        out = []
+        with self._lock:
+            for key in list(self._buckets):
+                bucket = self._buckets[key]
+                if len(bucket) >= self.flush_tier:
+                    out.append((key, self._buckets.pop(key)))
+                    EXEC_COUNTERS["tier_flushes"] += 1
+                elif bucket and self._bucket_deadline(bucket) <= now:
+                    out.append((key, self._buckets.pop(key)))
+                    EXEC_COUNTERS["deadline_flushes"] += 1
+        return out
+
+    def take_all(self) -> List[Tuple[Hashable, List[Tuple[Ticket, Any]]]]:
+        """Remove and return every pending bucket (drain path).
+
+        Counted as deadline flushes for partial buckets and tier flushes
+        for full ones — drain is "the deadline is now".
+        """
+        out = []
+        with self._lock:
+            for key in list(self._buckets):
+                bucket = self._buckets.pop(key)
+                cause = ("tier_flushes" if len(bucket) >= self.flush_tier
+                         else "deadline_flushes")
+                EXEC_COUNTERS[cause] += 1
+                out.append((key, bucket))
+        return out
+
+    def pending(self) -> int:
+        """Number of queued, not-yet-flushed submissions."""
+        with self._lock:
+            return sum(len(b) for b in self._buckets.values())
+
+    def next_deadline_in_us(self, now: Optional[float] = None) -> Optional[float]:
+        """Microseconds until the earliest pending deadline (<= 0 = overdue);
+        None when nothing is queued.  Lets a serving loop sleep exactly as
+        long as the latency budget allows instead of busy-polling."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            if not self._buckets:
+                return None
+            soonest = min(self._bucket_deadline(b)
+                          for b in self._buckets.values() if b)
+            return (soonest - now) * 1e6

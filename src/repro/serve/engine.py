@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..models.model import Model, build_model
+from .admission import Ticket
 from .constrain import ConstraintSet, apply_mask_to_logits
 
 
@@ -43,9 +44,19 @@ class DecodeServer:
         self._decode = jax.jit(model.decode)
         self.queue: List[Request] = []
         self.ticks = 0
+        self._tickets: Dict[int, List[Ticket]] = {}
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Ticket:
+        """Queue a request; returns a Ticket (same future type as the
+        search front-end's admission queue) that resolves to the generated
+        token list when the request completes.  Callers may keep polling
+        ``req.done`` instead — the ticket is additive.  Submitting the
+        same Request object twice returns a second ticket; both resolve
+        at its first completion."""
         self.queue.append(req)
+        ticket = Ticket(submitted_at=time.perf_counter(), deadline_us=0.0)
+        self._tickets.setdefault(id(req), []).append(ticket)
+        return ticket
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
@@ -85,6 +96,9 @@ class DecodeServer:
             if len(req.out) >= req.max_new or self.pos[i] >= self.max_seq - 1:
                 req.done = True
                 self.slots[i] = None
+                for ticket in self._tickets.pop(id(req), []):
+                    wait_us = (time.perf_counter() - ticket.submitted_at) * 1e6
+                    ticket.resolve(req.out, wait_us=wait_us)
 
     def run_until_drained(self, max_ticks: int = 1000) -> None:
         while (self.queue or any(s is not None for s in self.slots)):

@@ -10,25 +10,56 @@ the results **scattered** back in request order.  Host-path plans (HashBin,
 or RanGroupScan without a device) run per query off the same normalized
 plans, so all paths agree on term dedup and set ordering.  Single-query
 ``query`` is just a batch of one.
+
+Two front-ends share that pipeline:
+
+- :class:`SearchEngine` — synchronous: the caller hands over a pre-formed
+  batch (``query_batch``) and blocks for all results.
+- :class:`AsyncSearchEngine` — online: many concurrent callers ``submit``
+  single queries; an admission queue accumulates them into per-signature
+  micro-batches and flushes each bucket when it fills a power-of-two tier
+  or the oldest query's deadline budget (default 2 ms) expires, so tail
+  latency is bounded while jit executions stay O(#signatures).
+
+Both consult an LRU result cache keyed on the normalized plan (repeated
+conjunctions answer without touching the device) and can pre-trace the
+hot shape signatures of a sample workload at index-build time
+(:meth:`SearchEngine.warm`), so first live requests pay no compile.
+See ``docs/ARCHITECTURE.md`` for the full dataflow.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.engine import BatchedEngine
+from ..core.engine import BatchedEngine, pow2_tiers, warm_from_plans
 from ..core.hashing import default_permutation, random_hash_family
 from ..core.intersect import hashbin, rangroupscan
 from ..core.partition import preprocess_prefix
-from ..exec.batch import execute_plan_buckets
-from ..exec.plan import QueryPlan, plan_query
+from ..exec.batch import execute_bucket, execute_plan_buckets
+from ..exec.cache import ResultCache
+from ..exec.plan import QueryPlan, ShapeSig, plan_query
+from .admission import AdmissionQueue, Ticket
 
 
 @dataclasses.dataclass
 class QueryResult:
+    """One served query: sorted doc ids + how they were produced.
+
+    ``latency_us`` is per-query wall time for host paths and the amortized
+    ``batch_us`` (bucket wall / bucket size) for device buckets;
+    ``algorithm`` names the executed path (``"rangroupscan"``,
+    ``"rangroupscan/device"``, ``"hashbin"``, ``"empty"``); ``stats`` is
+    path-specific (device stats include ``r``, ``tuples_survived``,
+    ``capacity``, ``batch_size``; cache hits carry ``{"cached": True}``).
+    ``doc_ids`` may be shared with the result cache — treat it as
+    immutable.
+    """
+
     doc_ids: np.ndarray
     latency_us: float
     algorithm: str
@@ -36,11 +67,17 @@ class QueryResult:
 
 
 class SearchEngine:
-    """In-memory conjunctive search over an inverted index."""
+    """In-memory conjunctive search over an inverted index.
+
+    ``result_cache`` (entries; 0 disables) adds an LRU cache keyed on the
+    normalized plan — hits bump ``EXEC_COUNTERS["result_cache_hits"]`` and
+    skip execution entirely.  With ``use_device`` the batched device engine
+    mirrors every posting list at build time.
+    """
 
     def __init__(self, postings: Dict[int, np.ndarray], w: int = 256,
                  m: int = 2, seed: int = 0, use_device: bool = False,
-                 hashbin_ratio: float = 100.0):
+                 hashbin_ratio: float = 100.0, result_cache: int = 0):
         self.family = random_hash_family(m, w, seed=seed)
         self.perm = default_permutation(seed)
         self.w, self.m = w, m
@@ -57,6 +94,8 @@ class SearchEngine:
         if self.device:
             for t, idx in self.index.items():
                 self.device.add(str(t), idx)
+        self.cache = ResultCache(result_cache)
+        self.warmed_sigs: List[ShapeSig] = []
 
     def plan(self, terms: Sequence[int]) -> QueryPlan:
         """Normalize + route one query (dedup, §3.4 policy, shape sig)."""
@@ -64,7 +103,58 @@ class SearchEngine:
                           hashbin_ratio=self.hashbin_ratio,
                           device=self.device is not None)
 
+    def warm(self, sample_queries: Sequence[Sequence[int]], top_k: int = 8,
+             b_tiers: Sequence[int] = (1,)) -> List[ShapeSig]:
+        """Pre-trace the hot shape signatures of a sample workload.
+
+        Index-build-time compile warming: plans ``sample_queries`` with the
+        engine's own routing, counts device-routed signatures, and traces
+        the ``top_k`` most frequent ones at every batch tier in ``b_tiers``
+        (see ``core.engine.warm_executables`` — tier ``b`` covers live
+        flushes of size in ``(b/2, b]``), so first live requests on a
+        warmed signature hit a compiled executable instead of eating
+        trace+compile latency.  Bumps ``EXEC_COUNTERS["warm_executions"]``
+        per traced (signature, tier).  Returns the warmed signatures, most
+        frequent first, and records them on ``self.warmed_sigs``.
+        """
+        assert self.device is not None, "warming is a device-path concept"
+        plans = [self.plan(q) for q in sample_queries]
+        self.warmed_sigs = warm_from_plans(
+            plans, lambda t: self.device.sets[str(t)], top_k=top_k,
+            b_tiers=b_tiers, use_pallas=self.device.use_pallas)
+        return self.warmed_sigs
+
+    def _cached_result(self, plan: QueryPlan) -> Optional[QueryResult]:
+        """Result-cache lookup; ``"empty"`` plans bypass the cache (no work
+        to save, and their misses would skew hit-rate telemetry)."""
+        if plan.algorithm == "empty":
+            return None
+        hit = self.cache.get(plan)
+        if hit is None:
+            return None
+        doc_ids, algorithm = hit
+        return QueryResult(doc_ids, 0.0, algorithm,
+                           {"cached": True, "r": len(doc_ids)})
+
+    def _execute_host_plan(self, plan: QueryPlan) -> QueryResult:
+        """Run one non-device plan (``empty`` / ``hashbin`` / ``host``) to a
+        QueryResult.  Per-query wall time lands in ``latency_us``; no
+        EXEC_COUNTERS are touched (those count device work)."""
+        if plan.algorithm == "empty":
+            return QueryResult(np.empty(0, np.uint32), 0.0, "empty", {})
+        idxs = [self.index[t] for t in plan.terms]
+        t0 = time.perf_counter()
+        if plan.algorithm == "hashbin":
+            res, stats = hashbin(idxs[0], idxs[1])
+            name = "hashbin"
+        else:
+            res, stats = rangroupscan(idxs)
+            name = "rangroupscan"
+        dt = (time.perf_counter() - t0) * 1e6
+        return QueryResult(res, dt, name, stats.__dict__)
+
     def query(self, terms: Sequence[int]) -> QueryResult:
+        """Serve one query — a batch of one through :meth:`query_batch`."""
         return self.query_batch([terms])[0]
 
     def query_batch(self, queries: Sequence[Sequence[int]]) -> List[QueryResult]:
@@ -72,39 +162,181 @@ class SearchEngine:
 
         Device-routed plans are grouped by shape signature and each bucket
         runs as ONE jit execution (plus rare overflow re-runs) — the number
-        of device dispatches is O(#distinct signatures), not O(#queries).
-        Host-routed plans (HashBin / no device) run per query.
+        of device dispatches is O(#distinct signatures), not O(#queries);
+        each bumps ``EXEC_COUNTERS["batch_calls"]``.  Host-routed plans
+        (HashBin / no device) run per query.  When the result cache is
+        enabled, hits (any path) are answered in place and misses are
+        inserted after execution.
         """
         plans = [self.plan(q) for q in queries]
         results: List[Optional[QueryResult]] = [None] * len(queries)
+        device_plans: List[Tuple[int, QueryPlan]] = []
         for i, plan in enumerate(plans):
-            if plan.algorithm == "empty":
-                results[i] = QueryResult(np.empty(0, np.uint32), 0.0, "empty", {})
-            elif plan.algorithm == "hashbin":
-                idxs = [self.index[t] for t in plan.terms]
-                t0 = time.perf_counter()
-                res, stats = hashbin(idxs[0], idxs[1])
-                dt = (time.perf_counter() - t0) * 1e6
-                results[i] = QueryResult(res, dt, "hashbin", stats.__dict__)
-            elif plan.algorithm == "host":
-                idxs = [self.index[t] for t in plan.terms]
-                t0 = time.perf_counter()
-                res, stats = rangroupscan(idxs)
-                dt = (time.perf_counter() - t0) * 1e6
-                results[i] = QueryResult(res, dt, "rangroupscan", stats.__dict__)
-        device_plans = [(i, p) for i, p in enumerate(plans)
-                        if p.algorithm == "device"]
+            cached = self._cached_result(plan)
+            if cached is not None:
+                results[i] = cached
+            elif plan.algorithm == "device":
+                device_plans.append((i, plan))
+            else:
+                results[i] = self._execute_host_plan(plan)
+                self._store(plan, results[i])
         if device_plans:
             by_index = execute_plan_buckets(
                 lambda term: self.device.sets[str(term)],
                 device_plans,
                 use_pallas=self.device.use_pallas,
             )
-            for i, _ in device_plans:
+            for i, plan in device_plans:
                 res, stats = by_index[i]
                 results[i] = QueryResult(res, stats.get("batch_us", 0.0),
                                          "rangroupscan/device", stats)
+                self._store(plan, results[i])
         return results  # type: ignore[return-value]
+
+    def _store(self, plan: QueryPlan, result: QueryResult) -> None:
+        if plan.algorithm != "empty":
+            self.cache.put(plan, (result.doc_ids, result.algorithm))
+
+
+class AsyncSearchEngine(SearchEngine):
+    """Online front-end: single-query admission, deadline-bounded flushing.
+
+    Callers :meth:`submit` one query at a time and get a
+    :class:`~repro.serve.admission.Ticket` back immediately.  Device-routed
+    plans accumulate in an :class:`~repro.serve.admission.AdmissionQueue`
+    keyed by shape signature; a bucket executes when it fills the
+    power-of-two ``flush_tier`` (at submit time) or when its oldest query's
+    ``deadline_us`` budget expires (at the next :meth:`pump`).  Host-routed
+    and cache-hit queries resolve synchronously inside ``submit`` — they
+    gain nothing from batching.
+
+    A serving loop looks like::
+
+        eng = AsyncSearchEngine(postings, deadline_us=2000, warm_queries=log)
+        tickets = [eng.submit(q) for q in incoming]   # any thread(s)
+        eng.pump()        # flush deadline-due buckets; call on a timer or
+                          # sleep admission.next_deadline_in_us()
+        eng.drain()       # shutdown / test path: flush everything now
+
+    The result cache defaults ON here (1024 entries) — repeated
+    conjunctions are the common case in live logs — and ``use_device``
+    defaults True because micro-batching exists for the device path.
+    Thread-safety covers the async API: ``submit`` / ``pump`` / ``drain``
+    serialize on one internal lock.  The inherited synchronous paths
+    (``query`` / ``query_batch`` / ``warm``) touch the shared result cache
+    unlocked — don't interleave them with concurrent submits on the same
+    engine.
+    """
+
+    def __init__(self, postings: Dict[int, np.ndarray],
+                 deadline_us: float = 2000.0, flush_tier: int = 64,
+                 result_cache: int = 1024,
+                 clock: Callable[[], float] = time.perf_counter,
+                 warm_queries: Optional[Sequence[Sequence[int]]] = None,
+                 warm_top_k: int = 8,
+                 warm_b_tiers: Optional[Sequence[int]] = None,
+                 **kw):
+        kw.setdefault("use_device", True)
+        super().__init__(postings, result_cache=result_cache, **kw)
+        self.clock = clock
+        self.admission = AdmissionQueue(flush_tier=flush_tier,
+                                        deadline_us=deadline_us, clock=clock)
+        self._lock = threading.RLock()
+        if warm_queries is not None:
+            # default tiers cover every partial-flush size up to flush_tier
+            # — otherwise a live micro-batch of 2..flush_tier queries would
+            # pad to an unwarmed executable and compile at serve time
+            if warm_b_tiers is None:
+                warm_b_tiers = pow2_tiers(flush_tier)
+            self.warm(warm_queries, top_k=warm_top_k, b_tiers=warm_b_tiers)
+
+    def submit(self, terms: Sequence[int],
+               deadline_us: Optional[float] = None) -> Ticket:
+        """Admit one query; returns a Ticket resolving to a QueryResult.
+
+        Resolution timing by path: ``empty`` / host-routed / result-cache
+        hit — already resolved on return (``wait_us`` 0); device-routed —
+        resolved when its signature bucket flushes (full tier at some
+        ``submit``, deadline at a ``pump``, or a ``drain``).  ``wait_us``
+        on the ticket is the queue wait the deadline budget bounds.
+        """
+        with self._lock:
+            plan = self.plan(terms)
+            cached = self._cached_result(plan)
+            if cached is not None:
+                return self._resolved_now(cached)
+            if plan.algorithm != "device":
+                result = self._execute_host_plan(plan)
+                self._store(plan, result)
+                return self._resolved_now(result)
+            ticket = self.admission.submit(plan.sig, plan, deadline_us)
+            self._flush(self.admission.take_full())
+            return ticket
+
+    def pump(self) -> int:
+        """Flush buckets whose deadline budget has expired (and any that
+        filled their tier since the last call).  Returns #buckets flushed.
+        Call this from the serving loop's timer; the deadline guarantee is
+        only as fine-grained as the pump cadence."""
+        with self._lock:
+            return self._flush(self.admission.take_due())
+
+    def drain(self) -> int:
+        """Flush every pending bucket now (shutdown / end-of-batch / test
+        path).  Returns #buckets flushed; afterwards every issued ticket is
+        resolved."""
+        with self._lock:
+            return self._flush(self.admission.take_all())
+
+    def pending(self) -> int:
+        """Queued-but-unflushed submission count (device path only)."""
+        return self.admission.pending()
+
+    def _resolved_now(self, result: QueryResult) -> Ticket:
+        ticket = Ticket(submitted_at=self.clock(), deadline_us=0.0)
+        ticket.resolve(result, wait_us=0.0)
+        return ticket
+
+    def _flush(self, buckets) -> int:
+        """Execute flushed buckets and resolve their tickets.
+
+        One ``execute_bucket`` call per (partial) bucket — one jit
+        execution plus rare overflow re-runs; ``wait_us`` is measured from
+        submit to flush start, the quantity ``deadline_us`` bounds.
+        Between bucket executions the queue is re-polled for newly-due
+        buckets, so a deadline expiring while an earlier bucket runs waits
+        at most ONE bucket execution, not a whole flush burst.  A bucket
+        whose execution raises resolves its tickets with the error
+        (``ticket.value`` re-raises; nobody hangs on ``done``) and the
+        remaining buckets still flush.
+        """
+        count = 0
+        pending = list(buckets)
+        while pending:
+            sig, entries = pending.pop(0)
+            flush_at = self.clock()
+            items = [(row, plan) for row, (_, plan) in enumerate(entries)]
+            try:
+                by_row = execute_bucket(
+                    lambda term: self.device.sets[str(term)], sig, items,
+                    use_pallas=self.device.use_pallas,
+                )
+            except Exception as exc:
+                for ticket, _ in entries:
+                    ticket.resolve_error(
+                        exc, wait_us=(flush_at - ticket.submitted_at) * 1e6)
+            else:
+                for row, (ticket, plan) in enumerate(entries):
+                    res, stats = by_row[row]
+                    result = QueryResult(res, stats.get("batch_us", 0.0),
+                                         "rangroupscan/device", stats)
+                    self._store(plan, result)
+                    wait_us = (flush_at - ticket.submitted_at) * 1e6
+                    ticket.resolve(result, wait_us=wait_us)
+            count += 1
+            if not pending:
+                pending.extend(self.admission.take_due())
+        return count
 
 
 def zipf_query_log(index_terms: Sequence[int], n_queries: int = 1000,
@@ -123,3 +355,16 @@ def zipf_query_log(index_terms: Sequence[int], n_queries: int = 1000,
                          (rng.pareto(1.0, size=k) * 10).astype(int))
         out.append(sorted(set(terms[idx].tolist())) or [int(terms[0])])
     return out
+
+
+def repeated_query_log(index_terms: Sequence[int], n_queries: int = 1000,
+                       n_distinct: int = 64, seed: int = 1) -> List[List[int]]:
+    """A live-traffic-shaped log: ``n_queries`` drawn Zipf-style from a pool
+    of ``n_distinct`` conjunctions, so exact repeats occur (the regime where
+    the result cache pays).  The pool itself follows the paper's
+    keyword-count mix via :func:`zipf_query_log`."""
+    pool = zipf_query_log(index_terms, n_distinct, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ranks = np.arange(1, len(pool) + 1, dtype=np.float64)
+    p = (1.0 / ranks) / (1.0 / ranks).sum()
+    return [pool[i] for i in rng.choice(len(pool), size=n_queries, p=p)]

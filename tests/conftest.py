@@ -1,0 +1,17 @@
+"""Shared test fixtures.
+
+The autouse counter reset keeps every counter-asserting test
+order-independent: ``EXEC_COUNTERS`` is process-global telemetry, so
+without this a test that executes device buckets would leak counts into
+the next test's assertions (the pre-PR-2 failure mode was exactly that —
+tests had to remember to call ``reset_exec_counters()`` inline).
+"""
+import pytest
+
+from repro.core.engine import EXEC_COUNTERS
+
+
+@pytest.fixture(autouse=True)
+def _reset_exec_counters():
+    EXEC_COUNTERS.reset()
+    yield

@@ -1,0 +1,262 @@
+"""Tests for the async admission & micro-batching front-end.
+
+Covers: deadline flush firing on a lone query (fake clock), tier flush at
+the power-of-two bucket size, result-cache hits skipping device execution
+(counter-verified), compile warming leaving zero traces for the first live
+query on a warmed signature, async results matching the synchronous
+``query_batch`` oracle, and AdmissionQueue bookkeeping.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    EXEC_COUNTERS, clear_exec_jit_cache, warm_executables,
+)
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.exec.cache import ResultCache
+from repro.exec.plan import plan_query
+from repro.serve.admission import AdmissionQueue, Ticket
+from repro.serve.search import (
+    AsyncSearchEngine, SearchEngine, repeated_query_log, zipf_query_log,
+)
+
+
+class FakeClock:
+    """Injectable clock: tests advance time explicitly (seconds)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_us(self, us):
+        self.t += us * 1e-6
+
+
+@pytest.fixture(scope="module")
+def postings():
+    docs = zipf_corpus(2500, vocab=500, mean_len=30, seed=3)
+    return inverted_index(docs)
+
+
+def _async_engine(postings, clock, **kw):
+    kw.setdefault("deadline_us", 2000.0)
+    kw.setdefault("flush_tier", 8)
+    return AsyncSearchEngine(postings, clock=clock, seed=3, **kw)
+
+
+# ---------------------------------------------------------------------------
+# AdmissionQueue unit behavior
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_deadline_and_tier():
+    clk = FakeClock()
+    q = AdmissionQueue(flush_tier=4, deadline_us=1000.0, clock=clk)
+    t1 = q.submit("sig", "a")
+    assert isinstance(t1, Ticket) and not t1.done
+    assert q.take_due() == []                  # budget not yet expired
+    clk.advance_us(999)
+    assert q.take_due() == []
+    clk.advance_us(2)
+    (key, bucket), = q.take_due()              # oldest deadline expired
+    assert key == "sig" and [it for _, it in bucket] == ["a"]
+    assert EXEC_COUNTERS["deadline_flushes"] == 1
+    assert q.pending() == 0
+
+    for x in range(4):                         # full tier flushes without pump
+        q.submit("sig", x)
+    (_, bucket), = q.take_full()
+    assert len(bucket) == 4
+    assert EXEC_COUNTERS["tier_flushes"] == 1
+
+
+def test_admission_queue_next_deadline():
+    clk = FakeClock()
+    q = AdmissionQueue(flush_tier=4, deadline_us=500.0, clock=clk)
+    assert q.next_deadline_in_us() is None
+    q.submit("s1", 1)
+    clk.advance_us(100)
+    q.submit("s2", 2)                          # younger bucket
+    assert q.next_deadline_in_us() == pytest.approx(400.0, abs=1e-6)
+
+
+def test_tighter_per_query_deadline_binds():
+    """A later submission with a smaller budget must drive the flush."""
+    clk = FakeClock()
+    q = AdmissionQueue(flush_tier=8, deadline_us=2000.0, clock=clk)
+    q.submit("sig", "a")                       # due at t=2000us
+    clk.advance_us(50)
+    q.submit("sig", "b", deadline_us=100.0)    # due at t=150us — binding
+    assert q.next_deadline_in_us() == pytest.approx(100.0, abs=1e-6)
+    clk.advance_us(99)
+    assert q.take_due() == []
+    clk.advance_us(2)
+    (_, bucket), = q.take_due()                # both flush together
+    assert [it for _, it in bucket] == ["a", "b"]
+
+
+def test_ticket_value_before_resolve_raises():
+    t = Ticket(submitted_at=0.0, deadline_us=100.0)
+    with pytest.raises(RuntimeError):
+        _ = t.value
+
+
+# ---------------------------------------------------------------------------
+# Result cache
+# ---------------------------------------------------------------------------
+
+def test_result_cache_lru_and_counters(postings):
+    idx = SearchEngine(postings, seed=3).index
+    terms = sorted(idx)
+    cache = ResultCache(capacity=2)
+    plans = [plan_query(idx, [t], device=False) for t in terms[:3]]
+    assert cache.get(plans[0]) is None
+    assert EXEC_COUNTERS["result_cache_misses"] == 1
+    cache.put(plans[0], "r0")
+    cache.put(plans[1], "r1")
+    assert cache.get(plans[0]) == "r0"         # refreshes recency
+    cache.put(plans[2], "r2")                  # evicts plans[1] (LRU)
+    assert cache.get(plans[1]) is None
+    assert cache.get(plans[2]) == "r2"
+    assert EXEC_COUNTERS["result_cache_hits"] == 2
+    # surface-form invariance: [a, b], [b, a], [a, a, b] share one key
+    a, b = terms[0], terms[1]
+    k = plan_query(idx, [a, b], device=False).cache_key()
+    assert plan_query(idx, [b, a], device=False).cache_key() == k
+    assert plan_query(idx, [a, a, b], device=False).cache_key() == k
+
+
+def test_cache_hit_skips_device_execution(postings):
+    clk = FakeClock()
+    eng = _async_engine(postings, clk, result_cache=64)
+    q = zipf_query_log(sorted(eng.index), 8, seed=9)[0]
+    t1 = eng.submit(q)
+    eng.drain()
+    assert t1.done
+    EXEC_COUNTERS.reset()
+    t2 = eng.submit(q)                         # repeat: must not touch device
+    assert t2.done                             # resolved at submit time
+    assert EXEC_COUNTERS["result_cache_hits"] == 1
+    assert EXEC_COUNTERS["batch_calls"] == 0
+    assert t2.value.stats.get("cached") is True
+    assert np.array_equal(t2.value.doc_ids, t1.value.doc_ids)
+
+
+# ---------------------------------------------------------------------------
+# Async engine flush semantics
+# ---------------------------------------------------------------------------
+
+def test_deadline_flush_fires_on_lone_query(postings):
+    clk = FakeClock()
+    eng = _async_engine(postings, clk, result_cache=0)
+    q = zipf_query_log(sorted(eng.index), 4, seed=2)[0]
+    ticket = eng.submit(q)
+    assert not ticket.done and eng.pending() == 1
+    assert eng.pump() == 0                     # budget not exhausted yet
+    clk.advance_us(2001)
+    assert eng.pump() == 1                     # lone query force-flushed
+    assert ticket.done
+    assert EXEC_COUNTERS["deadline_flushes"] == 1
+    assert ticket.wait_us >= 2000.0            # waited out its full budget
+    oracle = SearchEngine(postings, use_device=True, seed=3).query(q)
+    assert np.array_equal(ticket.value.doc_ids, oracle.doc_ids)
+
+
+def test_tier_flush_fires_without_pump(postings):
+    clk = FakeClock()
+    eng = _async_engine(postings, clk, result_cache=0, flush_tier=2)
+    # two same-signature queries: second submit fills the tier
+    qs = [q for q in zipf_query_log(sorted(eng.index), 64, seed=7)
+          if eng.plan(q).algorithm == "device"]
+    sig_of = {i: eng.plan(q).sig for i, q in enumerate(qs)}
+    pair = None
+    for i in range(len(qs)):
+        for j in range(i + 1, len(qs)):
+            if sig_of[i] == sig_of[j] and qs[i] != qs[j]:
+                pair = (qs[i], qs[j])
+                break
+        if pair:
+            break
+    assert pair, "log produced no same-signature pair"
+    t1 = eng.submit(pair[0])
+    assert not t1.done
+    t2 = eng.submit(pair[1])                   # tier reached -> inline flush
+    assert t1.done and t2.done
+    assert EXEC_COUNTERS["tier_flushes"] == 1
+    assert EXEC_COUNTERS["deadline_flushes"] == 0
+    assert t1.value.stats["batch_size"] == 2
+
+
+def test_bucket_failure_resolves_tickets_with_error(postings, monkeypatch):
+    """A failing bucket must not strand its tickets unresolved."""
+    import repro.serve.search as search_mod
+
+    clk = FakeClock()
+    eng = _async_engine(postings, clk, result_cache=0)
+
+    def boom(*a, **k):
+        raise RuntimeError("device exploded")
+
+    monkeypatch.setattr(search_mod, "execute_bucket", boom)
+    q = zipf_query_log(sorted(eng.index), 4, seed=2)[0]
+    ticket = eng.submit(q)
+    clk.advance_us(2001)
+    eng.pump()                                 # flush executes and fails
+    assert ticket.done and ticket.error is not None
+    with pytest.raises(RuntimeError, match="device exploded"):
+        _ = ticket.value
+    assert eng.pending() == 0                  # nothing stuck in the queue
+
+
+def test_async_results_match_query_batch_oracle(postings):
+    clk = FakeClock()
+    eng = _async_engine(postings, clk, result_cache=128, flush_tier=8)
+    log = repeated_query_log(sorted(eng.index), 48, n_distinct=12, seed=5)
+    tickets = []
+    for i, q in enumerate(log):
+        tickets.append(eng.submit(q))
+        clk.advance_us(300)
+        eng.pump()
+    eng.drain()
+    assert all(t.done for t in tickets)
+    oracle = SearchEngine(postings, use_device=True, seed=3).query_batch(log)
+    for q, t, o in zip(log, tickets, oracle):
+        assert np.array_equal(t.value.doc_ids, o.doc_ids), q
+    # repeats existed, so the cache must have fired
+    assert EXEC_COUNTERS["result_cache_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Compile warming
+# ---------------------------------------------------------------------------
+
+def test_warmed_signature_zero_traces_on_first_query(postings):
+    clk = FakeClock()
+    eng = _async_engine(postings, clk, result_cache=0)
+    sample = zipf_query_log(sorted(eng.index), 64, seed=13)
+    clear_exec_jit_cache()                     # deterministic: forget history
+    EXEC_COUNTERS.reset()
+    warmed = eng.warm(sample, top_k=32, b_tiers=(1,))
+    assert warmed and EXEC_COUNTERS["batch_traces"] >= len(warmed)
+    assert EXEC_COUNTERS["warm_executions"] == len(warmed)
+    # first live query on a warmed signature: executes, but compiles nothing
+    q = next(q for q in sample if eng.plan(q).algorithm == "device"
+             and eng.plan(q).sig == warmed[0])
+    EXEC_COUNTERS.reset()
+    ticket = eng.submit(q)
+    clk.advance_us(2001)
+    eng.pump()
+    assert ticket.done
+    assert EXEC_COUNTERS["batch_calls"] >= 1   # it did run on the device
+    # zero compiles — warming executed a real representative of this
+    # signature, so even the overflow re-run variant (if the hot signature
+    # overflows, the representative did too) was traced at build time
+    assert EXEC_COUNTERS["batch_traces"] == 0
+
+
+def test_warm_executables_counts():
+    # pure counter contract, no engine: empty representative list is a no-op
+    EXEC_COUNTERS.reset()
+    assert warm_executables([]) == 0
+    assert EXEC_COUNTERS["warm_executions"] == 0

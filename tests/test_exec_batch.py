@@ -12,7 +12,7 @@ import pytest
 from repro.core import engine as engine_mod
 from repro.core.engine import (
     BatchedEngine, DeviceSet, intersect_device, intersect_device_batch,
-    reset_exec_counters, EXEC_COUNTERS,
+    EXEC_COUNTERS,
 )
 from repro.core.hashing import default_permutation, random_hash_family
 from repro.core.intersect import rangroupscan
@@ -89,7 +89,7 @@ def test_batched_overflow_rerun(corpus):
     raw, idxs = corpus
     dsets = {k: DeviceSet.from_host(v) for k, v in idxs.items()}
     queries = [[dsets["a"], dsets["b"]], [dsets["b"], dsets["a"]]]
-    reset_exec_counters()
+    EXEC_COUNTERS.reset()
     out = intersect_device_batch(queries, capacity=4, use_pallas=False)
     truth = truth_of([raw["a"], raw["b"]])
     for res, stats in out:
@@ -151,7 +151,7 @@ def test_query_batch_zipf_jit_executions_bounded():
     plans = [eng.plan(q) for q in log]
     device_sigs = {p.sig for p in plans if p.algorithm == "device"}
     assert device_sigs, "zipf log produced no device-routed queries"
-    reset_exec_counters()
+    EXEC_COUNTERS.reset()
     results = eng.query_batch(log)
     assert EXEC_COUNTERS["batch_calls"] <= len(device_sigs) + EXEC_COUNTERS["rerun_calls"]
     assert EXEC_COUNTERS["batch_calls"] < len(log)

@@ -1,0 +1,106 @@
+"""Docs checker: validate fenced code blocks and internal links in markdown.
+
+Checks, per file:
+
+- ```python fenced blocks must be syntactically valid (compiled, not run);
+- inline markdown links ``[text](target)`` with a relative target must
+  point at an existing file or directory (resolved against the md file's
+  directory; ``#anchor`` suffixes are stripped; absolute URLs and pure
+  in-page anchors are skipped);
+- fenced blocks must be balanced (every ``` opener has a closer).
+
+Exit code 0 = clean, 1 = any failure (failures are listed).
+
+Run:  python tools/check_docs.py README.md docs/ARCHITECTURE.md
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# inline links; excludes images ![..](..) by requiring no leading !
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def iter_fences(lines):
+    """Yield (language, start_line, [code lines]) per fenced block.
+
+    Any line starting with ``` toggles fence state — the same rule for
+    openers and closers, so an opener with trailing info text (e.g.
+    ```python title=x) can't desync the parser.  Language is the first
+    word after the opening backticks.
+    """
+    block, lang, start = None, None, 0
+    for i, line in enumerate(lines, 1):
+        s = line.strip()
+        if s.startswith("```"):
+            if block is None:
+                info = s[3:].strip()
+                block, lang, start = [], info.split()[0] if info else "", i
+            else:
+                yield lang, start, block
+                block = None
+        elif block is not None:
+            block.append(line)
+    if block is not None:
+        yield "<unclosed>", start, block
+
+
+def check_file(path: pathlib.Path):
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    lines = text.splitlines()
+
+    in_code = False
+    for lang, start, code in iter_fences(lines):
+        if lang == "<unclosed>":
+            errors.append(f"{path}:{start}: unclosed code fence")
+            continue
+        if lang == "python":
+            try:
+                compile("\n".join(code), f"{path}:{start}", "exec")
+            except SyntaxError as e:
+                errors.append(f"{path}:{start}: python block does not "
+                              f"compile: {e.msg} (block line {e.lineno})")
+
+    # strip fenced blocks before link checking (code may contain brackets)
+    stripped, in_code = [], False
+    for line in lines:
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if not in_code:
+            stripped.append(line)
+    for i, line in enumerate(stripped, 1):
+        for target in LINK_RE.findall(line):
+            if re.match(r"^[a-z]+://", target) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv):
+    if not argv:
+        print("usage: check_docs.py FILE.md [FILE.md ...]")
+        return 2
+    all_errors = []
+    for name in argv:
+        p = pathlib.Path(name)
+        if not p.exists():
+            all_errors.append(f"{p}: file not found")
+            continue
+        all_errors.extend(check_file(p))
+    for e in all_errors:
+        print(f"FAIL {e}")
+    if not all_errors:
+        print(f"docs OK ({len(argv)} files)")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
