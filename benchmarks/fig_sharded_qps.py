@@ -1,0 +1,129 @@
+"""Throughput benchmark: z-sharded batched execution over a device mesh vs
+the single-device bucketed engine.
+
+Runs the same paper-mix zipf query log through a ``SearchEngine`` without a
+mesh (the PR-1 bucketed baseline) and with 1-D meshes of increasing shard
+count, all on FORCED host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set below before
+jax initializes) — so on CPU this measures the *structure* of the sharded
+path (QPS, per-bucket jit executions, overflow re-runs, routed fraction)
+rather than real accelerator scaling; on a TPU slice the same script
+measures both.  Results are cross-checked query-by-query against the
+unsharded baseline, which is itself oracle-checked by the tier-1 suite.
+
+Run:  PYTHONPATH=src python benchmarks/fig_sharded_qps.py [--docs N]
+      [--queries N] [--shards 2,4] [--out BENCH_sharded_qps.json]
+"""
+from __future__ import annotations
+
+import os
+
+# before the first jax import: forced host devices to shard over, and the
+# CPU backend explicitly (with libtpu on the image a concurrently running
+# jax process would otherwise serialize on the TPU lockfile)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engine import EXEC_COUNTERS, make_shard_mesh
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.serve.search import SearchEngine, zipf_query_log
+
+
+def _run_engine(engine, log, baseline_results=None):
+    """Warm (compile) then time one query_batch pass; returns metrics."""
+    engine.query_batch(log)  # compile warming pass, untimed
+    EXEC_COUNTERS.reset()
+    t0 = time.perf_counter()
+    results = engine.query_batch(log)
+    wall_s = time.perf_counter() - t0
+    if baseline_results is not None:
+        for q, a, b in zip(log, results, baseline_results):
+            assert np.array_equal(a.doc_ids, b.doc_ids), f"mismatch for {q}"
+    plans = [engine.plan(q) for q in log]
+    sharded_q = sum(1 for p in plans
+                    if p.algorithm == "device" and p.sig.shards > 1)
+    return results, {
+        "n_shards": engine.device.n_shards,
+        "queries": len(log),
+        "sharded_routed_queries": sharded_q,
+        "jit_executions": (EXEC_COUNTERS["batch_calls"]
+                           + EXEC_COUNTERS["sharded_calls"]),
+        "single_device_calls": EXEC_COUNTERS["batch_calls"],
+        "sharded_calls": EXEC_COUNTERS["sharded_calls"],
+        "overflow_reruns": (EXEC_COUNTERS["rerun_calls"]
+                            + EXEC_COUNTERS["sharded_rerun_calls"]),
+        "wall_s": wall_s,
+        "qps": len(log) / wall_s,
+    }
+
+
+def run(n_docs: int = 20000, vocab: int = 15000, n_queries: int = 256,
+        shard_counts=(2, 4), shard_min_g: int = 64,
+        min_df: int = 32, max_df_frac: float = 0.04, seed: int = 11):
+    docs = zipf_corpus(n_docs, vocab=vocab, mean_len=60, seed=seed)
+    postings = {t: p for t, p in inverted_index(docs).items()
+                if min_df <= len(p) <= max_df_frac * n_docs}
+    avail = len(jax.devices())
+    shard_counts = [s for s in shard_counts if s <= avail]
+    assert len(shard_counts) >= 2, (
+        f"need >= 2 viable shard counts, have {avail} devices"
+    )
+
+    baseline = SearchEngine(postings, w=256, m=2, seed=seed, use_device=True)
+    log = zipf_query_log(sorted(baseline.index), n_queries, seed=seed + 1)
+    base_results, base_metrics = _run_engine(baseline, log)
+
+    sharded_metrics = []
+    for n_shards in shard_counts:
+        eng = SearchEngine(postings, w=256, m=2, seed=seed,
+                           mesh=make_shard_mesh(n_shards),
+                           shard_min_g=shard_min_g)
+        _, metrics = _run_engine(eng, log, baseline_results=base_results)
+        metrics["speedup_vs_unsharded"] = base_metrics["wall_s"] / metrics["wall_s"]
+        sharded_metrics.append(metrics)
+
+    return {
+        "n_docs": n_docs,
+        "vocab": vocab,
+        "queries": len(log),
+        "devices": avail,
+        "shard_min_g": shard_min_g,
+        "unsharded_baseline": base_metrics,
+        "sharded": sharded_metrics,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--vocab", type=int, default=15000)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--shards", type=str, default="2,4",
+                    help="comma-separated shard counts to sweep")
+    ap.add_argument("--shard-min-g", type=int, default=64,
+                    help="route queries sharded when largest set has >= this "
+                         "many z-groups (low default: CPU-sized corpora)")
+    ap.add_argument("--out", type=str,
+                    default=str(pathlib.Path(__file__).resolve().parent.parent
+                                / "BENCH_sharded_qps.json"))
+    args = ap.parse_args()
+    shard_counts = tuple(int(s) for s in args.shards.split(","))
+    res = run(args.docs, args.vocab, args.queries, shard_counts=shard_counts,
+              shard_min_g=args.shard_min_g)
+    print(json.dumps(res, indent=2))
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,12 +38,17 @@ arrays and runs a whole same-signature bucket in ONE jit execution; the
 single-query ``intersect_device`` is just a batch of one through the same
 pipeline, so both paths share one compile cache.
 
-Distribution: :func:`intersect_sharded` shard_maps the z-prefix space over
-the ``model`` mesh axis.  Because every set is partitioned by the *same*
+Distribution: :func:`intersect_sharded_batch` shard_maps the z-prefix space
+over a 1-D device mesh.  Because every set is partitioned by the *same*
 permutation ``g`` (Theorem 3.7's alignment), equal z-range blocks of every
 set land on the same shard and both phases are entirely local; only the
 per-shard result buffers are concatenated at the end.  The paper's
-partitioning function doubles as the sharding function.
+partitioning function doubles as the sharding function.  The sharded path
+is the same ``(B, …)`` bucketed pipeline as :func:`intersect_device_batch`
+— sort-compaction survivor selection, packed single-transfer results,
+per-(query, shard) overflow flags with ONE enlarged re-run pass — so
+sharded results are bit-identical to the unsharded and host paths.
+:func:`intersect_sharded` is a batch of one through it.
 """
 from __future__ import annotations
 
@@ -61,11 +66,17 @@ from .partition import PrefixIndex
 
 __all__ = [
     "DeviceSet",
+    "SHARD_AXIS",
+    "SHARD_MIN_G",
     "default_capacity",
+    "default_capacity_per_shard",
     "intersect_device",
     "intersect_device_batch",
     "intersect_sharded",
+    "intersect_sharded_batch",
+    "make_shard_mesh",
     "pow2_tiers",
+    "set_sort_key",
     "warm_executables",
     "warm_from_plans",
     "clear_exec_jit_cache",
@@ -74,6 +85,14 @@ __all__ = [
     "ExecCounters",
     "reset_exec_counters",
 ]
+
+SHARD_AXIS = "shard"  # canonical name of the 1-D z-sharding mesh axis
+
+# Default sharding threshold: route a query z-sharded only when its largest
+# set has at least this many group tuples.  2^12 groups ≈ a 65k-element set
+# at w=256 — below that, a single device finishes a bucket faster than the
+# mesh can dispatch it.  (Single source of truth; exec.plan re-exports it.)
+SHARD_MIN_G = 4096
 
 class ExecCounters(dict):
     """Telemetry for the batched device path and the serving front-end.
@@ -90,6 +109,10 @@ class ExecCounters(dict):
     - ``batch_traces``    actual retraces (compiles) of the pipeline — one
       per distinct ``(ShapeSig, B-tier)`` pair over the process lifetime.
     - ``rerun_calls``     overflow re-run passes (survivors > capacity).
+    - ``sharded_calls`` / ``sharded_traces`` / ``sharded_rerun_calls`` —
+      the same three for the z-sharded pipeline
+      (:func:`intersect_sharded_batch`); kept separate so a mixed workload
+      reports single-device and mesh executions independently.
     - ``warm_executions`` pipeline executions issued by compile warming
       (:func:`warm_executables`) at index-build time.
     - ``result_cache_hits`` / ``result_cache_misses`` — lookups in the
@@ -100,7 +123,9 @@ class ExecCounters(dict):
     """
 
     _KEYS = (
-        "batch_calls", "batch_traces", "rerun_calls", "warm_executions",
+        "batch_calls", "batch_traces", "rerun_calls",
+        "sharded_calls", "sharded_traces", "sharded_rerun_calls",
+        "warm_executions",
         "result_cache_hits", "result_cache_misses",
         "tier_flushes", "deadline_flushes",
     )
@@ -155,6 +180,38 @@ class DeviceSet:
             vals=vals, images=jnp.asarray(idx.images),
         )
 
+    def shardable(self, n_shards: int) -> bool:
+        """True when the z axis splits evenly over ``n_shards`` — the
+        Theorem 3.7 alignment condition (every shard holds at least one
+        whole z-group of this set)."""
+        return n_shards >= 1 and (1 << self.t) % n_shards == 0
+
+    def shard(self, mesh: Mesh, axis: str = SHARD_AXIS) -> "DeviceSet":
+        """Z-sharded mirror: both arrays placed with their leading (z) axis
+        partitioned over ``mesh[axis]``.  Built once at index time so the
+        sharded pipeline never pays a per-call reshard; the unsharded
+        mirror stays as-is for single-device buckets."""
+        assert self.shardable(mesh.shape[axis]), (
+            f"2^{self.t} z-groups do not split over {mesh.shape[axis]} shards"
+        )
+        return dataclasses.replace(
+            self,
+            vals=jax.device_put(self.vals, NamedSharding(mesh, P(axis, None))),
+            images=jax.device_put(
+                self.images, NamedSharding(mesh, P(axis, None, None))),
+        )
+
+
+def set_sort_key(s) -> Tuple[int, int]:
+    """THE canonical set ordering key, ``(t, n)``: ascending partition depth
+    (prefix alignment needs t ascending) with set size breaking ties, so the
+    base set (index 0 after sorting) is the smallest.  Every layer — the
+    planner (which appends the term as a final tie-break), the batched
+    executor, and the sharded pipeline — must sort with this one helper;
+    diverging keys let equal-``t`` sets pick a different base set than the
+    plan's cache key and stats assume."""
+    return (s.t, s.n)
+
 
 def gmax_tier(gmax: int) -> int:
     """Static-shape tier for a set's max group size: next power of two
@@ -173,6 +230,19 @@ def default_capacity(ts: Tuple[int, ...]) -> int:
     ≈ G) overflow and are re-run once at full capacity by the executor.
     Deterministic in ``ts`` so it can key shape buckets."""
     return max(64, (1 << ts[-1]) // 4)
+
+
+def default_capacity_per_shard(ts: Tuple[int, ...], n_shards: int) -> int:
+    """Per-shard survivor-buffer tier for the sharded pipeline.
+
+    The whole-query capacity budget (:func:`default_capacity`) divided over
+    the shards (survivors distribute ~uniformly because ``g`` randomizes z),
+    floored, and never beyond the local group count ``G / n_shards``
+    (overflow past that is impossible).  Deterministic in ``(ts, n_shards)``
+    so ``(ShapeSig, shards)`` fully determines the executable's shapes.
+    """
+    local_g = (1 << ts[-1]) // n_shards
+    return min(local_g, max(16, default_capacity(ts) // n_shards))
 
 
 def _aligned_images(images: Sequence[jnp.ndarray], ts: Tuple[int, ...]) -> jnp.ndarray:
@@ -283,7 +353,7 @@ def intersect_device_batch(
     """
     if not len(queries):
         return []
-    ordered = [sorted(q, key=lambda s: (s.t, s.n)) for q in queries]
+    ordered = [sorted(q, key=set_sort_key) for q in queries]
     ts, gmaxes = _signature(ordered[0])
     for q in ordered[1:]:
         assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
@@ -369,6 +439,8 @@ def warm_executables(
     b_tiers: Sequence[int] = (1,),
     capacity: Optional[int] = None,
     use_pallas="auto",
+    mesh: Optional[Mesh] = None,
+    axis: str = SHARD_AXIS,
 ) -> int:
     """Pre-trace the bucketed pipeline so first live requests don't compile.
 
@@ -381,10 +453,16 @@ def warm_executables(
     queries will hit (the executor pads B up to a power of two, so warming
     tier ``b`` covers every partial flush of size in ``(b/2, b]``).
 
+    With ``mesh`` set, the rows are pushed through
+    :func:`intersect_sharded_batch` instead, warming the sharded
+    ``(ShapeSig, B-tier, shards)`` executables — pass the z-sharded mirrors
+    as representatives so the warmed executable sees serving-time shardings.
+
     Results are discarded — this warms the *compile* cache, not the result
     cache.  Increments ``EXEC_COUNTERS["warm_executions"]`` once per
     (row, tier) execution; the underlying ``batch_calls`` / ``batch_traces``
-    bumps happen at build time, before serving counters are read.
+    (or ``sharded_*``) bumps happen at build time, before serving counters
+    are read.
 
     Returns the number of pipeline executions issued.
     """
@@ -392,16 +470,24 @@ def warm_executables(
     for row in representatives:
         for b in b_tiers:
             assert b >= 1 and (b & (b - 1)) == 0, "b_tiers must be powers of two"
-            intersect_device_batch(
-                [list(row)] * b, capacity=capacity, use_pallas=use_pallas
-            )
+            if mesh is not None:
+                intersect_sharded_batch(
+                    [list(row)] * b, mesh, axis=axis,
+                    capacity_per_shard=capacity, use_pallas=use_pallas,
+                )
+            else:
+                intersect_device_batch(
+                    [list(row)] * b, capacity=capacity, use_pallas=use_pallas
+                )
             EXEC_COUNTERS["warm_executions"] += 1
             issued += 1
     return issued
 
 
 def warm_from_plans(plans, get_set, top_k: int = 8,
-                    b_tiers: Sequence[int] = (1,), use_pallas="auto"):
+                    b_tiers: Sequence[int] = (1,), use_pallas="auto",
+                    mesh: Optional[Mesh] = None, axis: str = SHARD_AXIS,
+                    get_sharded_set=None):
     """Shared warming policy over already-planned queries.
 
     Counts device-routed shape signatures in ``plans`` (objects with
@@ -409,7 +495,10 @@ def warm_from_plans(plans, get_set, top_k: int = 8,
     picks the ``top_k`` most frequent, and pre-traces one representative
     row per signature at every batch tier in ``b_tiers`` via
     :func:`warm_executables`.  ``get_set`` maps a planned term to its
-    DeviceSet.  Returns the warmed signatures, most frequent first.
+    DeviceSet; signatures routed sharded (``sig.shards > 1``) resolve
+    through ``get_sharded_set`` (falling back to ``get_set``) and warm the
+    ``(ShapeSig, B-tier, shards)`` executable on ``mesh`` instead.  Returns
+    the warmed signatures, most frequent first.
     """
     from collections import Counter
 
@@ -417,10 +506,15 @@ def warm_from_plans(plans, get_set, top_k: int = 8,
     rep = {}
     for p in plans:
         if p.algorithm == "device" and p.sig not in rep:
-            rep[p.sig] = [get_set(t) for t in p.terms]
+            sharded = getattr(p.sig, "shards", 1) > 1
+            resolve = (get_sharded_set or get_set) if sharded else get_set
+            rep[p.sig] = [resolve(t) for t in p.terms]
     warmed = [sig for sig, _ in freq.most_common(top_k)]
-    warm_executables([rep[sig] for sig in warmed], b_tiers=b_tiers,
-                     use_pallas=use_pallas)
+    for sig in warmed:
+        warm_executables(
+            [rep[sig]], b_tiers=b_tiers, use_pallas=use_pallas,
+            mesh=mesh if getattr(sig, "shards", 1) > 1 else None, axis=axis,
+        )
     return warmed
 
 
@@ -429,80 +523,262 @@ def clear_exec_jit_cache() -> None:
 
     Test hook: makes "warming traces, serving doesn't" assertions
     deterministic regardless of what earlier tests compiled (the jit cache
-    is process-global).  No-op if the jax version lacks ``clear_cache``.
+    is process-global).  Clears the sharded pipeline's cache too.  No-op if
+    the jax version lacks ``clear_cache``.
     """
-    clear = getattr(_intersect_k_batch, "clear_cache", None)
-    if clear is not None:
-        clear()
+    for fn in (_intersect_k_batch, _intersect_k_sharded_batch):
+        clear = getattr(fn, "clear_cache", None)
+        if clear is not None:
+            clear()
 
 
 # --------------------------------------------------------------------------
 # shard_map distribution over the z-prefix space
 # --------------------------------------------------------------------------
 
-def intersect_sharded(
-    sets: Sequence[DeviceSet],
-    mesh: Mesh,
-    axis: str = "model",
-    capacity_per_shard: int = 256,
-    use_pallas=False,
-):
-    """Zero-communication sharded intersection.
+def make_shard_mesh(n_shards: Optional[int] = None,
+                    axis: str = SHARD_AXIS) -> Mesh:
+    """1-D mesh over the first ``n_shards`` local devices (all by default),
+    named ``axis`` — the mesh shape :func:`intersect_sharded_batch` and the
+    engines' ``mesh=`` parameters expect.  On CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax call to get N host devices to shard over."""
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    assert 1 <= n <= len(devices), f"need {n} devices, have {len(devices)}"
+    return Mesh(np.asarray(devices[:n]), (axis,))
 
-    Every set's group arrays are sharded along z over ``axis``.  Alignment
-    (z_i = z_k >> shift) maps a shard's z_k range into the *same* shard's
-    z_i range whenever n_shards <= 2^{t_1} — guaranteed by construction for
-    corpus-scale sets.  Phase 1+2 run locally per shard; per-shard result
-    buffers are returned still sharded (callers all-gather only the final
-    compact results, never the posting data).
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "ts", "gmaxes", "capacity_per_shard",
+                     "use_pallas"),
+)
+def _intersect_k_sharded_batch(
+    vals: Tuple[Tuple[jnp.ndarray, ...], ...],
+    images: Tuple[Tuple[jnp.ndarray, ...], ...],
+    mesh: Mesh,
+    axis: str,
+    ts: Tuple[int, ...],
+    gmaxes: Tuple[int, ...],
+    capacity_per_shard: int,
+    use_pallas,
+):
+    """One jit execution of a same-signature bucket, z-sharded over ``mesh``.
+
+    The sharded twin of :func:`_intersect_k_batch`: inputs are B
+    device-resident DeviceSet rows per set (z-sharded mirrors), stacked
+    inside the jit to ``(B, 2^t_i, …)`` arrays whose z axis is partitioned
+    over ``mesh[axis]``.  Both phases run per shard with NO communication —
+    Theorem 3.7's alignment means a shard's local z_k range maps into the
+    same shard's z_i range (valid whenever n_shards divides 2^{t_0}) — and
+    each shard compacts its own survivors into a local
+    ``capacity_per_shard`` buffer by the same sort-compaction as the
+    unsharded path.
+
+    Returns (packed, r, n_surv, overflow):
+
+    - ``packed``  (B, n_shards * capacity_per_shard, gmax_0) — per-shard
+      result buffers concatenated along the capacity axis (-1 = dropped);
+      one transfer materializes the whole bucket.
+    - ``r`` / ``n_surv`` / ``overflow`` — (n_shards, B) per-(shard, query):
+      exact-match count, phase-1 survivor count, and the overflow flag
+      ``n_surv > capacity_per_shard`` that drives the host-side re-run.
     """
-    sets = sorted(sets, key=lambda s: s.t)
-    n_shards = mesh.shape[axis]
-    ts = tuple(s.t for s in sets)
-    assert (1 << ts[0]) % n_shards == 0, "smallest set must split over shards"
-    vals = tuple(s.vals for s in sets)
-    images = tuple(s.images for s in sets)
+    EXEC_COUNTERS["sharded_traces"] += 1  # python side effect: trace-time only
+    vals = tuple(jnp.stack(v) for v in vals)        # (B, 2^t_i, gmax_i)
+    images = tuple(jnp.stack(im) for im in images)  # (B, 2^t_i, m, W)
     tk = ts[-1]
+    k = len(ts)
+
+    def local_fn(*flat):
+        lvals, limages = flat[:k], flat[k:]
+        G_local = limages[-1].shape[1]
+        B = lvals[0].shape[0]
+        imgs = _aligned_images(limages, ts)                 # (B, k, Gl, m, W)
+        passed = ops.bitmap_filter(imgs, use_pallas)        # (B, Gl)
+        n_surv = passed.sum(axis=1)
+        pos = jnp.where(passed, jnp.arange(G_local, dtype=jnp.int32)[None, :],
+                        G_local)
+        # the caller clamps capacity_per_shard to the local group count, so a
+        # plain slice always suffices (no pad branch, unlike the unsharded
+        # pipeline where capacity may exceed G)
+        assert capacity_per_shard <= G_local, "caller must clamp to local G"
+        surv = jnp.sort(pos, axis=1)[:, :capacity_per_shard]
+        valid_row = surv < G_local
+        surv_c = jnp.minimum(surv, G_local - 1)
+        rows = jnp.arange(B)[:, None]
+        base = lvals[0][rows, surv_c >> (tk - ts[0])]       # (B, cap, g0)
+        keep = valid_row[:, :, None] & (base != -1)
+        for v, t in zip(lvals[1:], ts[1:]):
+            other = v[rows, surv_c >> (tk - t)]
+            keep = keep & ops.group_match(base, other, use_pallas)
+        r = keep.sum(axis=(1, 2))
+        overflow = n_surv > capacity_per_shard
+        packed = jnp.where(keep, base, -1)
+        # leading length-1 shard axis on the per-shard scalars so out_specs
+        # can concatenate them into (n_shards, B) without communication
+        return packed, r[None], n_surv[None], overflow[None]
 
     from jax.experimental.shard_map import shard_map
 
-    def local_fn(*flat):
-        lvals, limages = flat[: len(sets)], flat[len(sets):]
-        G_local = limages[-1].shape[0]
-        imgs = _aligned_images(limages, ts)
-        passed = ops.bitmap_filter(imgs, use_pallas)
-        n_surv = passed.sum()
-        surv = jnp.nonzero(passed, size=capacity_per_shard, fill_value=G_local)[0]
-        valid = surv < G_local
-        surv_c = jnp.minimum(surv, G_local - 1)
-        base = lvals[0][surv_c >> (tk - ts[0])]
-        keep = valid[:, None] & (base != -1)
-        for v, t in zip(lvals[1:], ts[1:]):
-            other = v[surv_c >> (tk - t)]
-            keep = keep & ops.group_match(base, other, use_pallas)
-        # local padded results; -1 where dropped
-        out = jnp.where(keep, base, -1)
-        return out, n_surv[None], passed.sum()[None]
+    in_specs = tuple([P(None, axis)] * (2 * k))
+    out_specs = (P(None, axis), P(axis), P(axis), P(axis))
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(*vals, *images)
 
-    in_specs = tuple([P(axis)] * (2 * len(sets)))
-    out_specs = (P(axis), P(axis), P(axis))
-    fn = shard_map(
-        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=False,
+
+def intersect_sharded_batch(
+    queries: Sequence[Sequence[DeviceSet]],
+    mesh: Mesh,
+    axis: str = SHARD_AXIS,
+    capacity_per_shard: Optional[int] = None,
+    use_pallas="auto",
+) -> List[Tuple[np.ndarray, Dict]]:
+    """Intersect B same-signature queries z-sharded over a device mesh.
+
+    The sharded bucket executor: same contract as
+    :func:`intersect_device_batch` (signature-uniform queries, pow2 B-tier
+    padding, packed single-transfer results, list of (sorted values, stats)
+    in query order) with the z-prefix space partitioned over
+    ``mesh[axis]``.  Communication-free by Theorem 3.7's alignment; only
+    the compact per-shard result buffers leave their shard.
+
+    Overflow is tracked per (query, shard): a query whose survivors exceed
+    ``capacity_per_shard`` on ANY shard is re-run as ONE enlarged subset
+    pass at the local group count ``G / n_shards``, where per-shard
+    overflow is impossible — so results are always exact, never silently
+    truncated.  Counters: ``sharded_calls`` per pass,
+    ``sharded_rerun_calls`` per overflow pass, ``sharded_traces`` per
+    compile — the sharded twins of the ``batch_*`` counters.
+
+    Pass z-sharded mirrors (:meth:`DeviceSet.shard`) to keep posting data
+    resident on its shard across calls; plain mirrors also work but are
+    re-partitioned on entry.
+    """
+    if not len(queries):
+        return []
+    n_shards = mesh.shape[axis]
+    ordered = [sorted(q, key=set_sort_key) for q in queries]
+    ts, gmaxes = _signature(ordered[0])
+    for q in ordered[1:]:
+        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
+    assert (1 << ts[0]) % n_shards == 0, (
+        f"smallest set (t={ts[0]}) must split over {n_shards} shards"
     )
-    out, n_surv, _ = fn(*vals, *images)
-    return out, n_surv
+    G = 1 << ts[-1]
+    G_local = G // n_shards
+    cap = capacity_per_shard or default_capacity_per_shard(ts, n_shards)
+    cap = min(cap, G_local)
+    results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+    active = list(range(len(ordered)))
+    first_pass = True
+    while active:
+        b_tier = 1 << (len(active) - 1).bit_length()  # pad B to a pow2 tier
+        rows = active + [active[0]] * (b_tier - len(active))
+        vals = tuple(
+            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
+        )
+        images = tuple(
+            tuple(ordered[i][j].images for i in rows) for j in range(len(ts))
+        )
+        EXEC_COUNTERS["sharded_calls"] += 1
+        if not first_pass:
+            EXEC_COUNTERS["sharded_rerun_calls"] += 1
+        packed, r, n_surv, overflow = _intersect_k_sharded_batch(
+            vals, images, mesh, axis, ts, gmaxes, cap, use_pallas
+        )
+        packed_h, r_h, n_surv_h, over_h = jax.device_get(
+            (packed, r, n_surv, overflow)
+        )
+        rerun = []
+        for row, qi in enumerate(active):
+            if over_h[:, row].any():
+                rerun.append(qi)
+                continue
+            row_vals = packed_h[row].ravel()
+            out = row_vals[row_vals != -1]
+            results[qi] = (
+                np.sort(out.astype(np.uint32)),
+                {
+                    "group_tuples": G,
+                    "tuples_survived": int(n_surv_h[:, row].sum()),
+                    "max_shard_survivors": int(n_surv_h[:, row].max()),
+                    "capacity_per_shard": cap,
+                    "n_shards": n_shards,
+                    "r": int(r_h[:, row].sum()),
+                    "batch_size": len(active),
+                },
+            )
+        active = rerun
+        cap = G_local  # rare path: one re-run at local G, overflow impossible
+        first_pass = False
+    return results  # type: ignore[return-value]
+
+
+def intersect_sharded(
+    sets: Sequence[DeviceSet],
+    mesh: Mesh,
+    axis: str = SHARD_AXIS,
+    capacity_per_shard: Optional[int] = None,
+    use_pallas="auto",
+):
+    """Intersect k device sets z-sharded over ``mesh``; returns (values,
+    stats) on host.
+
+    A batch of one through :func:`intersect_sharded_batch` — the historical
+    single-query sharded entry point, now overflow-exact (per-shard
+    survivor counts past ``capacity_per_shard`` trigger the enlarged re-run
+    instead of silently truncating results) and ordered by the shared
+    ``(t, n)`` sort key the planner and batched executor use.
+    """
+    (result, stats), = intersect_sharded_batch(
+        [list(sets)], mesh, axis=axis, capacity_per_shard=capacity_per_shard,
+        use_pallas=use_pallas,
+    )
+    return result, stats
 
 
 class BatchedEngine:
-    """Corpus-level engine: name -> DeviceSet, query bucketing, jit reuse."""
+    """Corpus-level engine: name -> DeviceSet, query bucketing, jit reuse.
 
-    def __init__(self, use_pallas="auto"):
-        self.sets = {}
+    With a ``mesh`` (1-D, axis ``shard_axis``), :meth:`add` also builds a
+    z-sharded mirror of every shardable set at index time and the planner
+    routes huge-G queries (``2^t_k >= shard_min_g``) through
+    :func:`intersect_sharded_batch` — small queries stay single-device,
+    where the shard_map overhead would dominate.  Mutation hooks
+    (:meth:`on_mutate`) fire on every :meth:`add` so owners of derived
+    state — notably the serving layer's result cache — can invalidate.
+    """
+
+    def __init__(self, use_pallas="auto", mesh: Optional[Mesh] = None,
+                 shard_axis: str = SHARD_AXIS, shard_min_g: int = SHARD_MIN_G):
+        self.sets: Dict[str, DeviceSet] = {}
+        self.sharded_sets: Dict[str, DeviceSet] = {}
         self.use_pallas = use_pallas
+        self.mesh = mesh
+        self.shard_axis = shard_axis
+        self.shard_min_g = shard_min_g
+        self.generation = 0
+        self._mutation_hooks: List = []
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.shard_axis] if self.mesh is not None else 1
+
+    def on_mutate(self, hook) -> None:
+        """Register a zero-arg callback fired after every index mutation."""
+        self._mutation_hooks.append(hook)
 
     def add(self, name: str, idx: PrefixIndex) -> None:
-        self.sets[name] = DeviceSet.from_host(idx)
+        ds = DeviceSet.from_host(idx)
+        self.sets[name] = ds
+        if self.mesh is not None and ds.shardable(self.n_shards):
+            self.sharded_sets[name] = ds.shard(self.mesh, self.shard_axis)
+        self.generation += 1
+        for hook in self._mutation_hooks:
+            hook()
 
     def query(self, names: Sequence[str], capacity: Optional[int] = None):
         dsets = [self.sets[n] for n in names]
@@ -510,23 +786,34 @@ class BatchedEngine:
 
     def query_many(self, queries: Sequence[Sequence[str]]):
         """Plan -> bucket by shape signature -> one jit execution per bucket
-        -> scatter back in request order.  Returns [(values, stats), ...]."""
+        -> scatter back in request order.  Returns [(values, stats), ...].
+        With a mesh attached, huge-G buckets run z-sharded."""
         from ..exec.batch import execute_name_queries
 
-        return execute_name_queries(self.sets, queries, use_pallas=self.use_pallas)
+        return execute_name_queries(
+            self.sets, queries, use_pallas=self.use_pallas, mesh=self.mesh,
+            shard_axis=self.shard_axis, shard_min_g=self.shard_min_g,
+            sharded_sets=self.sharded_sets,
+        )
 
     def warm(self, sample_queries: Sequence[Sequence[str]], top_k: int = 8,
              b_tiers: Sequence[int] = (1,)):
         """Compile-cache warming from a name-keyed sample workload
-        (index-build time).  Plans the sample and delegates the policy to
-        :func:`warm_from_plans`.  Returns the warmed
-        :class:`~repro.exec.plan.ShapeSig`\\ s, most frequent first.
+        (index-build time).  Plans the sample (with this engine's sharded
+        routing, so sharded signatures warm sharded executables) and
+        delegates the policy to :func:`warm_from_plans`.  Returns the
+        warmed :class:`~repro.exec.plan.ShapeSig`\\ s, most frequent first.
         """
         from ..exec.plan import plan_query
 
         plans = [
-            plan_query(self.sets, q, hashbin_ratio=float("inf"), device=True)
+            plan_query(self.sets, q, hashbin_ratio=float("inf"), device=True,
+                       mesh_shards=self.n_shards,
+                       shard_min_g=self.shard_min_g)
             for q in sample_queries
         ]
-        return warm_from_plans(plans, lambda t: self.sets[t], top_k=top_k,
-                               b_tiers=b_tiers, use_pallas=self.use_pallas)
+        return warm_from_plans(
+            plans, lambda t: self.sets[t], top_k=top_k, b_tiers=b_tiers,
+            use_pallas=self.use_pallas, mesh=self.mesh, axis=self.shard_axis,
+            get_sharded_set=lambda t: self.sharded_sets[t],
+        )

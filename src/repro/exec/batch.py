@@ -2,9 +2,11 @@
 DeviceSet rows into (B, …) arrays, and run each bucket in ONE jit execution.
 
 The contract with the planner: every plan in a bucket shares
-``ShapeSig(k, ts, gmaxes, capacity_tier)``, so the stacked arrays are
-shape-uniform and the whole bucket hits a single compiled executable
-(``core.engine._intersect_k_batch``).  Queries whose survivor count exceeds
+``ShapeSig(k, ts, gmaxes, capacity_tier, shards)``, so the stacked arrays
+are shape-uniform and the whole bucket hits a single compiled executable
+(``core.engine._intersect_k_batch``, or its z-sharded twin
+``_intersect_k_sharded_batch`` when ``sig.shards > 1``).  Queries whose
+survivor count exceeds
 the capacity tier raise per-query overflow flags; the engine re-runs just
 the overflowing subset once at full capacity — a second (rare) jit
 execution, not a recompile of the bucket.
@@ -17,11 +19,16 @@ from __future__ import annotations
 
 import time
 from collections import defaultdict
-from typing import Callable, Dict, Iterable, List, Mapping, Sequence, Tuple
+from typing import (
+    Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple,
+)
 
 import numpy as np
 
-from ..core.engine import DeviceSet, intersect_device_batch
+from ..core.engine import (
+    SHARD_AXIS, DeviceSet, default_capacity_per_shard, intersect_device_batch,
+    intersect_sharded_batch,
+)
 from .plan import QueryPlan, ShapeSig, plan_query
 
 __all__ = [
@@ -55,6 +62,9 @@ def execute_bucket(
     sig: ShapeSig,
     items: Sequence[Tuple[int, QueryPlan]],
     use_pallas="auto",
+    mesh=None,
+    shard_axis: str = SHARD_AXIS,
+    get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute ONE same-signature bucket; returns {query_index: (values,
     stats)}.
@@ -67,19 +77,37 @@ def execute_bucket(
     executables as a full one.  ``get_set`` resolves a planned term to its
     DeviceSet.
 
+    Buckets whose signature carries ``shards > 1`` run through the
+    z-sharded pipeline on ``mesh`` (required then), resolving terms via
+    ``get_sharded_set`` (the engine's z-sharded mirrors; falls back to
+    ``get_set``, at a per-call reshard cost).  The per-shard capacity is
+    derived deterministically from the signature
+    (``default_capacity_per_shard``), so ``(sig, B-tier)`` fully keys the
+    sharded executable too.
+
     Shapes: every plan in ``items`` must carry ``sig`` (the executor
     asserts signature uniformity); the bucket runs as one ``(B, …)`` jit
     execution plus a rare overflow re-run.  Counters: one
-    ``EXEC_COUNTERS["batch_calls"]`` bump per pass (see
-    ``core.engine.intersect_device_batch``); each result's stats carry
-    ``batch_us`` — bucket wall time divided by bucket size, the honest
-    amortized per-query cost.
+    ``EXEC_COUNTERS["batch_calls"]`` (or ``"sharded_calls"``) bump per pass
+    (see ``core.engine``); each result's stats carry ``batch_us`` — bucket
+    wall time divided by bucket size, the honest amortized per-query cost.
     """
-    rows = [[get_set(t) for t in plan.terms] for _, plan in items]
+    shards = getattr(sig, "shards", 1)
     t0 = time.perf_counter()
-    results = intersect_device_batch(
-        rows, capacity=sig.capacity_tier, use_pallas=use_pallas
-    )
+    if shards > 1:
+        assert mesh is not None, "sharded bucket needs the engine's mesh"
+        resolve = get_sharded_set or get_set
+        rows = [[resolve(t) for t in plan.terms] for _, plan in items]
+        results = intersect_sharded_batch(
+            rows, mesh, axis=shard_axis,
+            capacity_per_shard=default_capacity_per_shard(sig.ts, shards),
+            use_pallas=use_pallas,
+        )
+    else:
+        rows = [[get_set(t) for t in plan.terms] for _, plan in items]
+        results = intersect_device_batch(
+            rows, capacity=sig.capacity_tier, use_pallas=use_pallas
+        )
     us = (time.perf_counter() - t0) * 1e6
     out: Dict[int, Tuple[np.ndarray, Dict]] = {}
     for (qi, _), (values, stats) in zip(items, results):
@@ -92,6 +120,9 @@ def execute_plan_buckets(
     get_set: Callable[[object], DeviceSet],
     indexed_plans: Iterable[Tuple[int, QueryPlan]],
     use_pallas="auto",
+    mesh=None,
+    shard_axis: str = SHARD_AXIS,
+    get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute device plans bucket-by-bucket; returns {query_index: (values,
     stats)}.
@@ -100,11 +131,15 @@ def execute_plan_buckets(
     signature and runs each bucket through :func:`execute_bucket` — one jit
     execution per distinct signature (plus rare overflow re-runs), i.e.
     O(#signatures) device dispatches for the whole batch.  ``get_set``
-    resolves a planned term to its DeviceSet.
+    resolves a planned term to its DeviceSet; sharded-signature buckets
+    resolve via ``get_sharded_set`` and run on ``mesh``.
     """
     out: Dict[int, Tuple[np.ndarray, Dict]] = {}
     for sig, items in bucket_plans(indexed_plans).items():
-        out.update(execute_bucket(get_set, sig, items, use_pallas=use_pallas))
+        out.update(execute_bucket(
+            get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
+            shard_axis=shard_axis, get_sharded_set=get_sharded_set,
+        ))
     return out
 
 
@@ -112,28 +147,44 @@ def execute_name_queries(
     sets: Mapping[str, DeviceSet],
     queries: Sequence[Sequence[str]],
     use_pallas="auto",
+    mesh=None,
+    shard_axis: str = SHARD_AXIS,
+    shard_min_g: Optional[int] = None,
+    sharded_sets: Optional[Mapping[str, DeviceSet]] = None,
 ) -> List[Tuple[np.ndarray, Dict]]:
     """BatchedEngine.query_many backend: plan -> bucket -> execute -> scatter.
 
     ``queries`` are lists of set names; unknown names raise KeyError (same
     contract as single-query ``BatchedEngine.query``).  Duplicate names
     within a query are deduped by the planner.  Results return in request
-    order regardless of bucketing.  Counters: one ``batch_calls`` per
-    distinct signature (plus ``rerun_calls`` on overflow) via
-    :func:`execute_bucket`.
+    order regardless of bucketing.  With a ``mesh`` (plus the engine's
+    ``sharded_sets`` mirrors), huge-G plans route z-sharded per the
+    planner's ``shard_min_g`` threshold.  Counters: one ``batch_calls`` /
+    ``sharded_calls`` per distinct signature (plus ``*rerun_calls`` on
+    overflow) via :func:`execute_bucket`.
     """
     for q in queries:
         for name in q:
             if name not in sets:
                 raise KeyError(name)
+    mesh_shards = mesh.shape[shard_axis] if mesh is not None else 1
+    plan_kw = {} if shard_min_g is None else {"shard_min_g": shard_min_g}
     plans = [
-        plan_query(sets, q, hashbin_ratio=float("inf"), device=True)
+        plan_query(sets, q, hashbin_ratio=float("inf"), device=True,
+                   mesh_shards=mesh_shards, **plan_kw)
         for q in queries
     ]
+    # no sharded mirrors supplied -> let execute_bucket fall back to the
+    # plain mirrors (correct, at a per-call reshard cost)
+    get_sharded = ((lambda name: sharded_sets[name])
+                   if sharded_sets else None)
     by_index = execute_plan_buckets(
         lambda name: sets[name],
         [(i, p) for i, p in enumerate(plans) if p.algorithm == "device"],
         use_pallas=use_pallas,
+        mesh=mesh,
+        shard_axis=shard_axis,
+        get_sharded_set=get_sharded,
     )
     # fresh objects per miss: callers annotate stats dicts in place
     return [

@@ -18,6 +18,15 @@ serving layer skips ``"empty"`` plans — a miss counter bumping on every
 unresolvable query would skew hit-rate telemetry for no saved work).
 Stored values are treated as immutable; callers must not mutate a returned
 result's arrays.
+
+Index mutation safety: the cache key is only ``(algorithm, terms)`` — it
+cannot see that a term's postings changed underneath it.  Owners of a
+mutable index therefore bump the cache's **generation** on every mutation
+(``bump_generation``; the serving layer registers it as a
+``BatchedEngine.on_mutate`` hook): entries stamped with an older
+generation are treated as misses and evicted lazily on lookup, so a
+repeated conjunction can never serve postings from before the mutation.
+``invalidate()`` is the explicit everything-now hook.
 """
 from __future__ import annotations
 
@@ -31,43 +40,81 @@ __all__ = ["ResultCache"]
 
 
 class ResultCache:
-    """Bounded LRU mapping ``QueryPlan.cache_key() -> result``.
+    """Bounded LRU mapping ``QueryPlan.cache_key() -> result``, with a
+    generation stamp per entry for index-mutation invalidation.
 
     ``get`` bumps ``EXEC_COUNTERS["result_cache_hits"]`` /
     ``["result_cache_misses"]``; ``put`` evicts least-recently-used entries
     past ``capacity``.  A ``capacity`` of 0 disables the cache (every
     ``get`` is a silent miss that touches no counter, so a disabled cache
     is telemetry-invisible).
+
+    Entries are stamped with the cache's current ``generation`` at ``put``
+    time; ``bump_generation()`` (called on every index mutation) makes all
+    older entries stale — a stale lookup counts as a miss and evicts the
+    entry, so invalidation is O(1) at mutation time and lazy thereafter.
     """
 
     def __init__(self, capacity: int = 1024):
         self.capacity = int(capacity)
+        self.generation = 0
         self._entries: "OrderedDict[Any, Any]" = OrderedDict()
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def get(self, plan: QueryPlan) -> Optional[Any]:
-        """Return the cached result for ``plan``, or None (counted miss)."""
+        """Return the cached result for ``plan``, or None (counted miss).
+        Entries from an older generation are stale: evicted, counted as a
+        miss."""
         if self.capacity <= 0:
             return None
         key = plan.cache_key()
         if key in self._entries:
-            self._entries.move_to_end(key)
-            EXEC_COUNTERS["result_cache_hits"] += 1
-            return self._entries[key]
+            gen, value = self._entries[key]
+            if gen != self.generation:
+                del self._entries[key]
+            else:
+                self._entries.move_to_end(key)
+                EXEC_COUNTERS["result_cache_hits"] += 1
+                return value
         EXEC_COUNTERS["result_cache_misses"] += 1
         return None
 
-    def put(self, plan: QueryPlan, value: Any) -> None:
-        """Insert/refresh ``plan``'s result; evict LRU past capacity."""
+    def put(self, plan: QueryPlan, value: Any,
+            generation: Optional[int] = None) -> None:
+        """Insert/refresh ``plan``'s result; evict LRU past capacity.
+
+        ``generation`` is the generation the result was computed *against*
+        — callers capture it before executing and pass it here, so a result
+        computed against a pre-mutation index but stored after a
+        ``bump_generation`` is rejected instead of being stamped fresh
+        (the flush-races-with-mutation hazard).  ``None`` means "computed
+        just now" and uses the current generation.
+        """
         if self.capacity <= 0:
             return
+        stamp = self.generation if generation is None else generation
+        if stamp != self.generation:
+            return  # computed against a mutated-away index: never cache
         key = plan.cache_key()
-        self._entries[key] = value
+        self._entries[key] = (stamp, value)
         self._entries.move_to_end(key)
         while len(self._entries) > self.capacity:
             self._entries.popitem(last=False)
+
+    def bump_generation(self) -> None:
+        """Mark every current entry stale (index mutated).  O(1): stale
+        entries are evicted lazily by ``get``.  Registered as the engine's
+        ``on_mutate`` hook by the serving layer."""
+        self.generation += 1
+
+    def invalidate(self) -> None:
+        """Explicit hook: drop everything now AND advance the generation
+        (so in-flight results whose callers captured the old generation
+        are rejected by ``put`` instead of re-entering as fresh)."""
+        self.generation += 1
+        self._entries.clear()
 
     def clear(self) -> None:
         self._entries.clear()

@@ -11,11 +11,19 @@ A query arrives as a bag of terms.  Planning does, in order:
      group machinery when n2/n1 is large); everything else runs
      RanGroupScan, on the device when one is attached.
   3. **Shape signature** — device-bound plans are keyed by
-     ``ShapeSig(k, ts, gmaxes, capacity_tier)``.  Two queries with the same
-     signature stack into the same ``(B, …)`` arrays and share one compiled
-     executable; real logs concentrate on a handful of signatures (68% of
-     queries are 2-word, 23% 3-word — §4), which is what makes bucketed
-     compilation pay.
+     ``ShapeSig(k, ts, gmaxes, capacity_tier, shards)``.  Two queries with
+     the same signature stack into the same ``(B, …)`` arrays and share one
+     compiled executable; real logs concentrate on a handful of signatures
+     (68% of queries are 2-word, 23% 3-word — §4), which is what makes
+     bucketed compilation pay.
+  4. **Shard routing** — with a device mesh attached (``mesh_shards > 1``),
+     queries whose largest set has ``2^t_k >= shard_min_g`` group tuples
+     route to the z-sharded pipeline (``sig.shards = mesh_shards``); the
+     z-prefix space then splits over the mesh with zero communication
+     (Theorem 3.7 alignment).  Small queries stay single-device
+     (``shards = 1``) where the shard_map dispatch overhead would dominate,
+     and so do queries whose smallest set doesn't split evenly over the
+     mesh (``2^t_0 % mesh_shards != 0``) — the alignment precondition.
 
 The planner only reads cheap per-set metadata (``t``, ``gmax``, ``n``), so
 it works identically over host ``PrefixIndex`` objects and device
@@ -26,19 +34,27 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Optional, Sequence, Tuple
 
-from ..core.engine import default_capacity, gmax_tier
+from ..core.engine import (
+    SHARD_MIN_G, default_capacity, gmax_tier, set_sort_key,
+)
 
-__all__ = ["ShapeSig", "QueryPlan", "plan_query"]
+__all__ = ["SHARD_MIN_G", "ShapeSig", "QueryPlan", "plan_query"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSig:
-    """Static shape signature of a device execution — the jit cache key."""
+    """Static shape signature of a device execution — the jit cache key.
+
+    ``shards`` is 1 for single-device buckets and the mesh size for
+    z-sharded ones; it is part of the signature because the two compile
+    different executables (and must not mix in one stacked bucket).
+    """
 
     k: int
     ts: Tuple[int, ...]
     gmaxes: Tuple[int, ...]
     capacity_tier: int
+    shards: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +90,8 @@ def plan_query(
     terms: Sequence,
     hashbin_ratio: float = 100.0,
     device: bool = True,
+    mesh_shards: int = 1,
+    shard_min_g: int = SHARD_MIN_G,
 ) -> QueryPlan:
     """Plan one query against ``index`` (term -> set with .t/.gmax/.n).
 
@@ -82,7 +100,9 @@ def plan_query(
     ``sig.gmaxes`` are power-of-two tiers (``gmax_tier``) and
     ``sig.capacity_tier`` is ``default_capacity(ts)``, so the signature
     matches the static shapes the executor will stack into ``(B, …)``
-    arrays exactly.
+    arrays exactly.  With ``mesh_shards > 1``, huge-G queries
+    (``2^t_k >= shard_min_g``) whose smallest set splits evenly over the
+    mesh get ``sig.shards = mesh_shards`` and execute z-sharded.
     """
     uniq = []
     seen = set()
@@ -93,7 +113,9 @@ def plan_query(
         uniq.append(term)
     if not uniq or any(t not in index for t in uniq):
         return QueryPlan(terms=tuple(uniq), algorithm="empty")
-    uniq.sort(key=lambda t: (index[t].t, index[t].n, t))
+    # the shared (t, n) set ordering, with the term itself as a final
+    # tie-break so equal-(t, n) sets still order deterministically
+    uniq.sort(key=lambda t: (*set_sort_key(index[t]), t))
     ns = [index[t].n for t in uniq]
     if len(uniq) == 2 and max(ns) / max(1, min(ns)) > hashbin_ratio:
         return QueryPlan(terms=tuple(uniq), algorithm="hashbin")
@@ -101,7 +123,12 @@ def plan_query(
         return QueryPlan(terms=tuple(uniq), algorithm="host")
     ts = tuple(index[t].t for t in uniq)
     gmaxes = tuple(gmax_tier(index[t].gmax) for t in uniq)
+    shards = 1
+    if (mesh_shards > 1 and (1 << ts[-1]) >= shard_min_g
+            and (1 << ts[0]) % mesh_shards == 0):
+        shards = mesh_shards
     sig = ShapeSig(
-        k=len(uniq), ts=ts, gmaxes=gmaxes, capacity_tier=default_capacity(ts)
+        k=len(uniq), ts=ts, gmaxes=gmaxes,
+        capacity_tier=default_capacity(ts), shards=shards,
     )
     return QueryPlan(terms=tuple(uniq), algorithm="device", sig=sig)

@@ -52,32 +52,57 @@ class Ticket:
     with the error instead: ``done`` is True, ``error`` holds the
     exception, and ``value`` re-raises it — callers polling ``done`` never
     hang on a failed bucket.
+
+    Cross-thread contract: resolution is published through a
+    ``threading.Event`` — the payload fields are written *before* the event
+    is set, and the Event's internal lock gives the release/acquire pairing
+    a bare bool would lack, so a caller thread that observes ``done`` (or
+    returns from :meth:`wait`) is guaranteed to see the resolved value.
+    Resolution is single-shot: a second ``resolve`` / ``resolve_error``
+    raises instead of clobbering a result some caller may already have
+    read (the failed-then-retried-bucket hazard).
     """
 
     submitted_at: float
     deadline_us: float
-    done: bool = False
     wait_us: float = 0.0
     error: Optional[BaseException] = None
     _value: Any = None
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+
+    @property
+    def done(self) -> bool:
+        """True once resolved (value or error) — Event-backed, safe to poll
+        from any thread."""
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until resolved (or ``timeout`` seconds); returns ``done``.
+        The blocking complement of polling ``done`` for caller threads."""
+        return self._done.wait(timeout)
 
     @property
     def value(self) -> Any:
-        if not self.done:
+        if not self._done.is_set():
             raise RuntimeError("ticket not resolved yet — flush/drain first")
         if self.error is not None:
             raise self.error
         return self._value
 
     def resolve(self, value: Any, wait_us: float = 0.0) -> None:
+        if self._done.is_set():
+            raise RuntimeError("ticket already resolved — single-shot")
         self._value = value
         self.wait_us = wait_us
-        self.done = True
+        self._done.set()  # publish AFTER the payload writes
 
     def resolve_error(self, exc: BaseException, wait_us: float = 0.0) -> None:
+        if self._done.is_set():
+            raise RuntimeError("ticket already resolved — single-shot")
         self.error = exc
         self.wait_us = wait_us
-        self.done = True
+        self._done.set()  # publish AFTER the payload writes
 
     def deadline_at(self) -> float:
         """Absolute clock time at which this ticket forces a flush."""
@@ -180,13 +205,21 @@ class AdmissionQueue:
             return sum(len(b) for b in self._buckets.values())
 
     def next_deadline_in_us(self, now: Optional[float] = None) -> Optional[float]:
-        """Microseconds until the earliest pending deadline (<= 0 = overdue);
-        None when nothing is queued.  Lets a serving loop sleep exactly as
-        long as the latency budget allows instead of busy-polling."""
+        """Microseconds until the next flush is due (<= 0 = overdue); None
+        when nothing is queued.  Lets a serving loop sleep exactly as long
+        as the latency budget allows instead of busy-polling.
+
+        A bucket that already reached ``flush_tier`` is ready NOW — the
+        hint is 0 regardless of any deadline, so a sleep-based pump loop
+        never idles on a full, flushable bucket (deadlines alone would let
+        it sleep a whole budget with work queued).
+        """
         now = self.clock() if now is None else now
         with self._lock:
             if not self._buckets:
                 return None
+            if any(len(b) >= self.flush_tier for b in self._buckets.values()):
+                return 0.0
             soonest = min(self._bucket_deadline(b)
                           for b in self._buckets.values() if b)
             return (soonest - now) * 1e6

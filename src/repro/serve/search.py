@@ -37,6 +37,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.engine import BatchedEngine, pow2_tiers, warm_from_plans
+from ..exec.plan import SHARD_MIN_G
 from ..core.hashing import default_permutation, random_hash_family
 from ..core.intersect import hashbin, rangroupscan
 from ..core.partition import preprocess_prefix
@@ -53,7 +54,8 @@ class QueryResult:
     ``latency_us`` is per-query wall time for host paths and the amortized
     ``batch_us`` (bucket wall / bucket size) for device buckets;
     ``algorithm`` names the executed path (``"rangroupscan"``,
-    ``"rangroupscan/device"``, ``"hashbin"``, ``"empty"``); ``stats`` is
+    ``"rangroupscan/device"``, ``"rangroupscan/sharded"``, ``"hashbin"``,
+    ``"empty"``); ``stats`` is
     path-specific (device stats include ``r``, ``tuples_survived``,
     ``capacity``, ``batch_size``; cache hits carry ``{"cached": True}``).
     ``doc_ids`` may be shared with the result cache — treat it as
@@ -72,17 +74,24 @@ class SearchEngine:
     ``result_cache`` (entries; 0 disables) adds an LRU cache keyed on the
     normalized plan — hits bump ``EXEC_COUNTERS["result_cache_hits"]`` and
     skip execution entirely.  With ``use_device`` the batched device engine
-    mirrors every posting list at build time.
+    mirrors every posting list at build time.  A 1-D ``mesh`` (implies
+    ``use_device``) additionally builds z-sharded mirrors and routes
+    huge-G queries (largest set with ``2^t >= shard_min_g`` group tuples)
+    through the zero-communication sharded pipeline; everything else stays
+    single-device.  The cache registers itself on the device engine's
+    mutation hook, so index changes (:meth:`add_postings`, or direct
+    ``device.add``) can never serve stale cached results.
     """
 
     def __init__(self, postings: Dict[int, np.ndarray], w: int = 256,
                  m: int = 2, seed: int = 0, use_device: bool = False,
-                 hashbin_ratio: float = 100.0, result_cache: int = 0):
+                 hashbin_ratio: float = 100.0, result_cache: int = 0,
+                 mesh=None, shard_min_g: int = SHARD_MIN_G):
         self.family = random_hash_family(m, w, seed=seed)
         self.perm = default_permutation(seed)
         self.w, self.m = w, m
         self.hashbin_ratio = hashbin_ratio
-        self.use_device = use_device
+        self.use_device = use_device or mesh is not None
         t0 = time.perf_counter()
         self.index = {
             t: preprocess_prefix(p, w=w, m=m, family=self.family,
@@ -90,18 +99,52 @@ class SearchEngine:
             for t, p in postings.items() if len(p)
         }
         self.build_s = time.perf_counter() - t0
-        self.device = BatchedEngine(use_pallas="auto") if use_device else None
+        self.device = (BatchedEngine(use_pallas="auto", mesh=mesh,
+                                     shard_min_g=shard_min_g)
+                       if self.use_device else None)
         if self.device:
             for t, idx in self.index.items():
                 self.device.add(str(t), idx)
         self.cache = ResultCache(result_cache)
+        if self.device:
+            # build-time adds are done; from here on every index mutation
+            # stales the result cache
+            self.device.on_mutate(self.cache.bump_generation)
         self.warmed_sigs: List[ShapeSig] = []
 
     def plan(self, terms: Sequence[int]) -> QueryPlan:
-        """Normalize + route one query (dedup, §3.4 policy, shape sig)."""
+        """Normalize + route one query (dedup, §3.4 policy, shape sig,
+        shard routing when a mesh is attached)."""
         return plan_query(self.index, terms,
                           hashbin_ratio=self.hashbin_ratio,
-                          device=self.device is not None)
+                          device=self.device is not None,
+                          mesh_shards=(self.device.n_shards
+                                       if self.device else 1),
+                          shard_min_g=(self.device.shard_min_g
+                                       if self.device else SHARD_MIN_G))
+
+    def add_postings(self, term: int, postings: np.ndarray) -> None:
+        """Add or replace one term's posting list after build.
+
+        Re-runs preprocessing for the term, refreshes the device mirrors
+        (plain + sharded), and — via the engine's mutation hook — bumps the
+        result-cache generation so every previously cached conjunction
+        involving any term is stale.  Without a device the cache generation
+        is bumped directly.
+        """
+        idx = preprocess_prefix(np.asarray(postings, dtype=np.uint32),
+                                w=self.w, m=self.m, family=self.family,
+                                perm=self.perm)
+        self.index[term] = idx
+        if self.device:
+            self.device.add(str(term), idx)  # fires the cache hook
+        else:
+            self.cache.bump_generation()
+
+    def invalidate_cache(self) -> None:
+        """Explicit result-cache invalidation hook (e.g. after mutating
+        postings through some path the engine can't observe)."""
+        self.cache.invalidate()
 
     def warm(self, sample_queries: Sequence[Sequence[int]], top_k: int = 8,
              b_tiers: Sequence[int] = (1,)) -> List[ShapeSig]:
@@ -121,7 +164,9 @@ class SearchEngine:
         plans = [self.plan(q) for q in sample_queries]
         self.warmed_sigs = warm_from_plans(
             plans, lambda t: self.device.sets[str(t)], top_k=top_k,
-            b_tiers=b_tiers, use_pallas=self.device.use_pallas)
+            b_tiers=b_tiers, use_pallas=self.device.use_pallas,
+            mesh=self.device.mesh, axis=self.device.shard_axis,
+            get_sharded_set=lambda t: self.device.sharded_sets[str(t)])
         return self.warmed_sigs
 
     def _cached_result(self, plan: QueryPlan) -> Optional[QueryResult]:
@@ -168,6 +213,7 @@ class SearchEngine:
         enabled, hits (any path) are answered in place and misses are
         inserted after execution.
         """
+        gen = self.cache.generation  # results compute against THIS index
         plans = [self.plan(q) for q in queries]
         results: List[Optional[QueryResult]] = [None] * len(queries)
         device_plans: List[Tuple[int, QueryPlan]] = []
@@ -179,23 +225,34 @@ class SearchEngine:
                 device_plans.append((i, plan))
             else:
                 results[i] = self._execute_host_plan(plan)
-                self._store(plan, results[i])
+                self._store(plan, results[i], generation=gen)
         if device_plans:
             by_index = execute_plan_buckets(
                 lambda term: self.device.sets[str(term)],
                 device_plans,
                 use_pallas=self.device.use_pallas,
+                mesh=self.device.mesh,
+                shard_axis=self.device.shard_axis,
+                get_sharded_set=lambda term: self.device.sharded_sets[str(term)],
             )
             for i, plan in device_plans:
                 res, stats = by_index[i]
+                name = ("rangroupscan/sharded"
+                        if stats.get("n_shards", 1) > 1
+                        else "rangroupscan/device")
                 results[i] = QueryResult(res, stats.get("batch_us", 0.0),
-                                         "rangroupscan/device", stats)
-                self._store(plan, results[i])
+                                         name, stats)
+                self._store(plan, results[i], generation=gen)
         return results  # type: ignore[return-value]
 
-    def _store(self, plan: QueryPlan, result: QueryResult) -> None:
+    def _store(self, plan: QueryPlan, result: QueryResult,
+               generation: Optional[int] = None) -> None:
+        """Cache a computed result.  ``generation`` is the cache generation
+        captured before execution started — the cache rejects the entry if
+        a mutation landed in between (see ``ResultCache.put``)."""
         if plan.algorithm != "empty":
-            self.cache.put(plan, (result.doc_ids, result.algorithm))
+            self.cache.put(plan, (result.doc_ids, result.algorithm),
+                           generation=generation)
 
 
 class AsyncSearchEngine(SearchEngine):
@@ -266,8 +323,9 @@ class AsyncSearchEngine(SearchEngine):
             if cached is not None:
                 return self._resolved_now(cached)
             if plan.algorithm != "device":
+                gen = self.cache.generation
                 result = self._execute_host_plan(plan)
-                self._store(plan, result)
+                self._store(plan, result, generation=gen)
                 return self._resolved_now(result)
             ticket = self.admission.submit(plan.sig, plan, deadline_us)
             self._flush(self.admission.take_full())
@@ -315,11 +373,39 @@ class AsyncSearchEngine(SearchEngine):
         while pending:
             sig, entries = pending.pop(0)
             flush_at = self.clock()
+            # an index mutation between submit and flush can re-tier a
+            # queued term, so the entry's frozen sig no longer matches the
+            # arrays resolved NOW — executing it here would trip the
+            # bucket's signature-uniformity assert and fail every ticket.
+            # Re-validate each plan against the current index and route
+            # stale entries through the synchronous path (which re-plans).
+            live = []
+            for ticket, plan in entries:
+                if self.plan(plan.terms).sig == sig:
+                    live.append((ticket, plan))
+                    continue
+                wait_us = (flush_at - ticket.submitted_at) * 1e6
+                try:
+                    result = self.query(list(plan.terms))
+                except Exception as exc:
+                    ticket.resolve_error(exc, wait_us=wait_us)
+                else:
+                    ticket.resolve(result, wait_us=wait_us)
+            entries = live
+            if not entries:
+                count += 1
+                if not pending:
+                    pending.extend(self.admission.take_due())
+                continue
             items = [(row, plan) for row, (_, plan) in enumerate(entries)]
+            gen = self.cache.generation  # capture before executing
             try:
                 by_row = execute_bucket(
                     lambda term: self.device.sets[str(term)], sig, items,
                     use_pallas=self.device.use_pallas,
+                    mesh=self.device.mesh,
+                    shard_axis=self.device.shard_axis,
+                    get_sharded_set=lambda term: self.device.sharded_sets[str(term)],
                 )
             except Exception as exc:
                 for ticket, _ in entries:
@@ -328,9 +414,12 @@ class AsyncSearchEngine(SearchEngine):
             else:
                 for row, (ticket, plan) in enumerate(entries):
                     res, stats = by_row[row]
+                    name = ("rangroupscan/sharded"
+                            if stats.get("n_shards", 1) > 1
+                            else "rangroupscan/device")
                     result = QueryResult(res, stats.get("batch_us", 0.0),
-                                         "rangroupscan/device", stats)
-                    self._store(plan, result)
+                                         name, stats)
+                    self._store(plan, result, generation=gen)
                     wait_us = (flush_at - ticket.submitted_at) * 1e6
                     ticket.resolve(result, wait_us=wait_us)
             count += 1

@@ -102,6 +102,54 @@ def test_ticket_value_before_resolve_raises():
         _ = t.value
 
 
+def test_next_deadline_zero_when_bucket_full():
+    """Regression: a bucket at flush_tier is ready NOW — the sleep hint must
+    be 0, not the (possibly full) deadline budget, or a sleep-based pump
+    loop idles on flushable work."""
+    clk = FakeClock()
+    q = AdmissionQueue(flush_tier=2, deadline_us=5000.0, clock=clk)
+    q.submit("sig", "a")
+    assert q.next_deadline_in_us() == pytest.approx(5000.0, abs=1e-6)
+    q.submit("sig", "b")                       # tier reached
+    assert q.next_deadline_in_us() == 0.0
+    # a different, partial bucket doesn't mask the full one
+    q.submit("other", "c")
+    assert q.next_deadline_in_us() == 0.0
+    q.take_full()
+    assert q.next_deadline_in_us() == pytest.approx(5000.0, abs=1e-6)
+
+
+def test_ticket_resolution_is_single_shot_and_event_backed():
+    """Regression: ``done`` is Event-backed (cross-thread visibility) and
+    resolution is single-shot — a failed-then-retried bucket must raise on
+    the second resolve instead of clobbering a delivered result."""
+    import threading
+
+    t = Ticket(submitted_at=0.0, deadline_us=100.0)
+    assert not t.done and not t.wait(timeout=0.0)
+    seen = []
+    waiter = threading.Thread(target=lambda: seen.append(
+        (t.wait(timeout=5.0), t.value)))
+    waiter.start()
+    t.resolve("result", wait_us=7.0)
+    waiter.join(timeout=5.0)
+    assert seen == [(True, "result")]          # waiter observed the payload
+    assert t.done and t.value == "result" and t.wait(timeout=0.0)
+    with pytest.raises(RuntimeError, match="already resolved"):
+        t.resolve("clobber")
+    with pytest.raises(RuntimeError, match="already resolved"):
+        t.resolve_error(ValueError("late failure"))
+    assert t.value == "result"                 # first resolution stands
+
+    t2 = Ticket(submitted_at=0.0, deadline_us=100.0)
+    t2.resolve_error(ValueError("boom"), wait_us=1.0)
+    assert t2.done
+    with pytest.raises(RuntimeError, match="already resolved"):
+        t2.resolve("too late")
+    with pytest.raises(ValueError, match="boom"):
+        _ = t2.value
+
+
 # ---------------------------------------------------------------------------
 # Result cache
 # ---------------------------------------------------------------------------
@@ -125,6 +173,94 @@ def test_result_cache_lru_and_counters(postings):
     k = plan_query(idx, [a, b], device=False).cache_key()
     assert plan_query(idx, [b, a], device=False).cache_key() == k
     assert plan_query(idx, [a, a, b], device=False).cache_key() == k
+
+
+def test_result_cache_generation_invalidates_stale_entries(postings):
+    """Regression: the cache key is only (algorithm, terms) — after an index
+    mutation, old entries must read as misses, not serve old postings."""
+    idx = SearchEngine(postings, seed=3).index
+    terms = sorted(idx)
+    cache = ResultCache(capacity=8)
+    plan = plan_query(idx, [terms[0]], device=False)
+    cache.put(plan, "old-postings")
+    assert cache.get(plan) == "old-postings"
+    cache.bump_generation()
+    EXEC_COUNTERS.reset()
+    assert cache.get(plan) is None             # stale -> miss + evicted
+    assert EXEC_COUNTERS["result_cache_misses"] == 1
+    assert len(cache) == 0
+    cache.put(plan, "new-postings")            # fresh entry at the new gen
+    assert cache.get(plan) == "new-postings"
+    cache.invalidate()                         # explicit hook: drop now
+    assert len(cache) == 0
+    assert cache.get(plan) is None
+
+
+def test_index_mutation_invalidates_served_results(postings):
+    """End-to-end: add_postings after serving must bump the generation (via
+    the device engine's mutation hook) so the old result can't be served."""
+    eng = SearchEngine(postings, seed=3, use_device=True, result_cache=64)
+    term = sorted(eng.index)[0]
+    before = eng.query([term])
+    assert np.array_equal(np.sort(before.doc_ids),
+                          np.sort(eng.index[term].values))
+    cached = eng.query([term])
+    assert cached.stats.get("cached") is True  # primed
+    new_postings = np.array([5, 17, 99], dtype=np.uint32)
+    eng.add_postings(term, new_postings)
+    after = eng.query([term])
+    assert not after.stats.get("cached")
+    assert np.array_equal(after.doc_ids, new_postings)
+    # and the fresh result re-enters the cache under the new generation
+    again = eng.query([term])
+    assert again.stats.get("cached") is True
+    assert np.array_equal(again.doc_ids, new_postings)
+    # host-path engines (no device) bump the generation directly
+    host_eng = SearchEngine(postings, seed=3, result_cache=64)
+    assert host_eng.query([term]).stats.get("cached") is None
+    assert host_eng.query([term]).stats.get("cached") is True
+    host_eng.add_postings(term, new_postings)
+    refreshed = host_eng.query([term])
+    assert not refreshed.stats.get("cached")
+    assert np.array_equal(refreshed.doc_ids, new_postings)
+
+
+def test_put_rejects_results_computed_against_old_generation(postings):
+    """Regression: a result computed before a mutation but stored after the
+    generation bump must NOT re-enter the cache as fresh."""
+    idx = SearchEngine(postings, seed=3).index
+    cache = ResultCache(capacity=8)
+    plan = plan_query(idx, [sorted(idx)[0]], device=False)
+    gen = cache.generation                     # captured before "executing"
+    cache.bump_generation()                    # mutation lands mid-flight
+    cache.put(plan, "stale-result", generation=gen)
+    assert len(cache) == 0
+    assert cache.get(plan) is None
+    cache.put(plan, "fresh-result")            # computed after the mutation
+    assert cache.get(plan) == "fresh-result"
+
+
+def test_mutation_between_submit_and_flush_does_not_poison_bucket(postings):
+    """Regression: add_postings after submit can re-tier a queued term; the
+    flush must re-validate plans and serve every ticket a correct result
+    instead of failing the whole bucket on the signature assert."""
+    clk = FakeClock()
+    eng = _async_engine(postings, clk, result_cache=0)
+    qs = [q for q in zipf_query_log(sorted(eng.index), 64, seed=7)
+          if eng.plan(q).algorithm == "device" and len(q) >= 2]
+    query = qs[0]
+    ticket = eng.submit(query)
+    assert not ticket.done
+    # shrink one queued term's postings to a different (t, gmax) tier
+    mutated_term = query[0]
+    eng.add_postings(mutated_term, np.array([3, 7, 11], dtype=np.uint32))
+    clk.advance_us(2001)
+    eng.pump()
+    assert ticket.done and ticket.error is None
+    truth = np.array([3, 7, 11], dtype=np.uint32)
+    for t in query[1:]:
+        truth = np.intersect1d(truth, np.sort(eng.index[t].values))
+    assert np.array_equal(ticket.value.doc_ids, truth)
 
 
 def test_cache_hit_skips_device_execution(postings):

@@ -1,0 +1,385 @@
+"""Tests for the z-sharded batched execution subsystem.
+
+Covers: sharded-vs-host oracle equivalence on a multi-device mesh, the
+per-(query, shard) overflow flags + single enlarged re-run (the headline
+bugfix — the old ``intersect_sharded`` silently truncated survivors past
+``capacity_per_shard``), the shared ``(t, n)`` set-ordering key, planner
+shard routing, engine/async end-to-end equivalence, and sharded compile
+warming.
+
+Mesh tests need >= 4 devices (``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` exported before jax initializes — the CI multi-device job
+does this).  On a single-device run those skip, but the subprocess oracle
+test always runs: it re-executes the core equivalence + forced-overflow
+property in a fresh interpreter with the flag set, so the acceptance
+guarantee is exercised by every tier-1 run.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.engine import (
+    EXEC_COUNTERS, DeviceSet, clear_exec_jit_cache, default_capacity_per_shard,
+    intersect_device_batch, intersect_sharded, intersect_sharded_batch,
+    make_shard_mesh, set_sort_key,
+)
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.intersect import rangroupscan
+from repro.core.partition import preprocess_prefix
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.exec.plan import plan_query
+from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
+
+N_SHARDS = 4
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < N_SHARDS,
+    reason=f"needs >= {N_SHARDS} devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    """Three overlapping sets big enough to split over 4 shards
+    (t = 8/9/10 -> 256/512/1024 z-groups)."""
+    rng = np.random.default_rng(0)
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    common = rng.choice(1 << 24, 60, replace=False).astype(np.uint32)
+    raw, idxs = {}, {}
+    for name, n in [("a", 3000), ("b", 5000), ("c", 9000)]:
+        s = np.unique(np.concatenate(
+            [rng.choice(1 << 24, n, replace=False).astype(np.uint32), common]))
+        raw[name] = s
+        idxs[name] = preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+    return raw, idxs
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) < N_SHARDS:
+        pytest.skip(f"needs >= {N_SHARDS} devices")
+    return make_shard_mesh(N_SHARDS)
+
+
+@pytest.fixture(scope="module")
+def sharded_sets(corpus, mesh):
+    _, idxs = corpus
+    return {k: DeviceSet.from_host(v).shard(mesh) for k, v in idxs.items()}
+
+
+def truth_of(raw, names):
+    out = raw[names[0]]
+    for n in names[1:]:
+        out = np.intersect1d(out, raw[n])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Oracle equivalence
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_sharded_batch_matches_host_and_device_oracles(corpus, mesh, sharded_sets):
+    raw, idxs = corpus
+    for names in [["a", "b"], ["b", "c"], ["a", "c"], ["a", "b", "c"]]:
+        truth = truth_of(raw, names)
+        host, _ = rangroupscan([idxs[n] for n in names])
+        row = [sharded_sets[n] for n in names]
+        # batch of two (same signature, different arg order) + batch of one
+        sharded = intersect_sharded_batch([row, row[::-1]], mesh,
+                                          use_pallas=False)
+        single, st = intersect_sharded(row, mesh, use_pallas=False)
+        unsharded = intersect_device_batch(
+            [[DeviceSet.from_host(idxs[n]) for n in names]], use_pallas=False)
+        assert np.array_equal(host, truth)
+        assert np.array_equal(single, truth)
+        assert np.array_equal(unsharded[0][0], truth)
+        for res, stats in sharded:
+            assert np.array_equal(res, truth), names
+            assert stats["r"] == len(truth)
+            assert stats["n_shards"] == N_SHARDS
+        assert st["tuples_survived"] == unsharded[0][1]["tuples_survived"]
+
+
+@multi_device
+def test_sharded_mixed_signature_rejected(mesh, sharded_sets):
+    with pytest.raises(AssertionError):
+        intersect_sharded_batch(
+            [[sharded_sets["a"], sharded_sets["b"]],
+             [sharded_sets["a"], sharded_sets["c"]]],
+            mesh, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Overflow: the headline bugfix — never silently truncate
+# ---------------------------------------------------------------------------
+
+@multi_device
+@pytest.mark.parametrize("cap", [1, 2, 7])
+def test_sharded_forced_overflow_rerun_is_exact(corpus, mesh, sharded_sets, cap):
+    """Per-shard survivors >> capacity_per_shard: the overflow flags must
+    trigger ONE enlarged re-run and the results must still be bit-identical
+    to the host oracle (the pre-fix code dropped survivors silently)."""
+    raw, _ = corpus
+    truth = truth_of(raw, ["a", "b"])
+    row = [sharded_sets["a"], sharded_sets["b"]]
+    EXEC_COUNTERS.reset()
+    out = intersect_sharded_batch([row, row], mesh, capacity_per_shard=cap,
+                                  use_pallas=False)
+    for res, stats in out:
+        assert np.array_equal(res, truth)
+        assert stats["r"] == len(truth)
+        # the re-run ran at the (larger) local group count, not at cap
+        assert stats["capacity_per_shard"] > cap
+    assert EXEC_COUNTERS["sharded_rerun_calls"] == 1
+    assert EXEC_COUNTERS["sharded_calls"] == 2
+
+
+@multi_device
+def test_sharded_overflow_flags_are_per_query(corpus, mesh, sharded_sets):
+    """Only overflowing queries re-run: a bucket mixing an overflowing and a
+    non-overflowing query of the same signature re-runs a subset of one."""
+    raw, idxs = corpus
+    # same signature, different selectivity: [a, b] overflows at cap just
+    # below its per-shard survivor count while a disjoint same-shape query
+    # stays under it.  Build a disjoint twin of "a" (same t/gmax tiers).
+    rng = np.random.default_rng(99)
+    fam, perm = idxs["a"].family, idxs["a"].perm
+    twin_vals = np.unique(
+        rng.choice(1 << 24, len(raw["a"]), replace=False).astype(np.uint32))
+    twin = preprocess_prefix(twin_vals, w=256, m=2, family=fam, perm=perm,
+                             t=idxs["a"].t)
+    dtwin = DeviceSet.from_host(twin).shard(mesh)
+    if (dtwin.t, dtwin.gmax) != (sharded_sets["a"].t, sharded_sets["a"].gmax):
+        pytest.skip("twin landed on a different shape tier")
+    q_dense = [sharded_sets["a"], sharded_sets["b"]]
+    q_sparse = [dtwin, sharded_sets["b"]]
+    # pick a capacity strictly between the two queries' worst shards
+    probe = intersect_sharded_batch([q_dense, q_sparse], mesh,
+                                    use_pallas=False)
+    dense_max = probe[0][1]["max_shard_survivors"]
+    sparse_max = probe[1][1]["max_shard_survivors"]
+    if not sparse_max < dense_max - 1:
+        pytest.skip("twin selectivity too close to separate")
+    cap = sparse_max + 1
+    EXEC_COUNTERS.reset()
+    out = intersect_sharded_batch([q_dense, q_sparse], mesh,
+                                  capacity_per_shard=cap, use_pallas=False)
+    assert np.array_equal(out[0][0], truth_of(raw, ["a", "b"]))
+    assert np.array_equal(out[1][0],
+                          np.intersect1d(twin_vals, raw["b"]).astype(np.uint32))
+    assert EXEC_COUNTERS["sharded_rerun_calls"] == 1
+    # sparse resolved on the first (2-query) pass; dense alone in the re-run
+    assert out[1][1]["batch_size"] == 2
+    assert out[0][1]["batch_size"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Shared set ordering (bugfix: sharded path sorted by t only)
+# ---------------------------------------------------------------------------
+
+def test_set_sort_key_breaks_t_ties_by_n(corpus):
+    _, idxs = corpus
+    fam, perm = idxs["a"].family, idxs["a"].perm
+    t = idxs["b"].t
+    small = preprocess_prefix(np.arange(1, 400, dtype=np.uint32) * 13,
+                              w=256, m=2, family=fam, perm=perm, t=t)
+    big = preprocess_prefix(np.arange(1, 900, dtype=np.uint32) * 17,
+                            w=256, m=2, family=fam, perm=perm, t=t)
+    ds_small, ds_big = DeviceSet.from_host(small), DeviceSet.from_host(big)
+    assert ds_small.t == ds_big.t and ds_small.n < ds_big.n
+    # equal t: n must break the tie, in ANY input order — the old sharded
+    # sort (t only, stable) kept equal-t sets in caller order
+    for pair in ([ds_big, ds_small], [ds_small, ds_big]):
+        assert [s.n for s in sorted(pair, key=set_sort_key)] \
+            == [ds_small.n, ds_big.n]
+    # and the planner agrees: smaller-n term first for equal-t sets
+    plan = plan_query({"big": big, "small": small}, ["big", "small"])
+    assert plan.terms == ("small", "big")
+
+
+@multi_device
+def test_sharded_order_invariant_and_stats_match(corpus, mesh, sharded_sets):
+    """Same query, both arg orders: identical values AND identical stats —
+    only true when the sharded path picks the same base set as the planner
+    (the (t, n) key), not whatever equal-t order the caller passed."""
+    raw, _ = corpus
+    row = [sharded_sets["a"], sharded_sets["b"], sharded_sets["c"]]
+    r1, s1 = intersect_sharded(row, mesh, use_pallas=False)
+    r2, s2 = intersect_sharded(row[::-1], mesh, use_pallas=False)
+    assert np.array_equal(r1, r2)
+    assert s1 == s2
+    assert np.array_equal(r1, truth_of(raw, ["a", "b", "c"]))
+
+
+# ---------------------------------------------------------------------------
+# Planner shard routing
+# ---------------------------------------------------------------------------
+
+def test_plan_shard_routing(corpus):
+    _, idxs = corpus
+    # big-G query + mesh + low threshold -> sharded
+    sig = plan_query(idxs, ["a", "b"], mesh_shards=4, shard_min_g=64).sig
+    assert sig.shards == 4
+    # threshold above the largest set's G -> single-device
+    sig = plan_query(idxs, ["a", "b"], mesh_shards=4,
+                     shard_min_g=1 << 20).sig
+    assert sig.shards == 1
+    # no mesh (default) -> single-device
+    assert plan_query(idxs, ["a", "b"]).sig.shards == 1
+    # smallest set that can't split over the mesh -> single-device even
+    # though the largest clears the threshold
+    fam, perm = idxs["a"].family, idxs["a"].perm
+    tiny = preprocess_prefix(np.arange(1, 9, dtype=np.uint32), w=256, m=2,
+                             family=fam, perm=perm, t=1)
+    mixed = dict(idxs, tiny=tiny)
+    sig = plan_query(mixed, ["tiny", "c"], hashbin_ratio=float("inf"),
+                     mesh_shards=4, shard_min_g=64).sig
+    assert sig.shards == 1
+    # sharded and unsharded signatures never share a bucket
+    s4 = plan_query(idxs, ["a", "b"], mesh_shards=4, shard_min_g=64).sig
+    s1 = plan_query(idxs, ["a", "b"]).sig
+    assert s4 != s1
+
+
+def test_default_capacity_per_shard_is_deterministic_and_bounded():
+    ts = (8, 10)
+    for n_shards in (1, 2, 4, 8):
+        cap = default_capacity_per_shard(ts, n_shards)
+        assert cap == default_capacity_per_shard(ts, n_shards)
+        assert cap <= (1 << ts[-1]) // n_shards
+        assert cap >= min(16, (1 << ts[-1]) // n_shards)
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end over a mesh
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def postings():
+    docs = zipf_corpus(3000, vocab=400, mean_len=40, seed=3)
+    return inverted_index(docs)
+
+
+@multi_device
+def test_search_engine_sharded_matches_unsharded(postings, mesh):
+    eng = SearchEngine(postings, seed=3, mesh=mesh, shard_min_g=4)
+    base = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(eng.index), 48, seed=11)
+    plans = [eng.plan(q) for q in log]
+    assert any(p.algorithm == "device" and p.sig.shards == N_SHARDS
+               for p in plans), "threshold routed nothing sharded"
+    EXEC_COUNTERS.reset()
+    got = eng.query_batch(log)
+    sharded_calls = EXEC_COUNTERS["sharded_calls"]
+    want = base.query_batch(log)
+    for q, a, b in zip(log, got, want):
+        assert np.array_equal(a.doc_ids, b.doc_ids), q
+    sharded_sigs = {p.sig for p in plans
+                    if p.algorithm == "device" and p.sig.shards > 1}
+    assert sharded_calls <= len(sharded_sigs) + EXEC_COUNTERS["sharded_rerun_calls"]
+    assert any(r.algorithm == "rangroupscan/sharded" for r in got)
+
+
+@multi_device
+def test_async_engine_sharded_matches_oracle(postings, mesh):
+    eng = AsyncSearchEngine(postings, seed=3, mesh=mesh, shard_min_g=4,
+                            flush_tier=4, result_cache=0)
+    base = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(eng.index), 24, seed=5)
+    tickets = [eng.submit(q) for q in log]
+    eng.drain()
+    assert all(t.done for t in tickets)
+    for q, t, o in zip(log, tickets, base.query_batch(log)):
+        assert np.array_equal(t.value.doc_ids, o.doc_ids), q
+
+
+@multi_device
+def test_sharded_warming_zero_traces_at_serve_time(postings, mesh):
+    eng = AsyncSearchEngine(postings, seed=3, mesh=mesh, shard_min_g=4,
+                            flush_tier=2, result_cache=0)
+    sample = zipf_query_log(sorted(eng.index), 48, seed=13)
+    clear_exec_jit_cache()
+    EXEC_COUNTERS.reset()
+    warmed = eng.warm(sample, top_k=32, b_tiers=(1, 2))
+    sharded_warmed = [s for s in warmed if s.shards == N_SHARDS]
+    assert sharded_warmed, "warming saw no sharded signatures"
+    assert EXEC_COUNTERS["sharded_traces"] >= len(sharded_warmed)
+    q = next(q for q in sample if eng.plan(q).sig in sharded_warmed)
+    EXEC_COUNTERS.reset()
+    ticket = eng.submit(q)
+    eng.drain()
+    assert ticket.done
+    assert EXEC_COUNTERS["sharded_calls"] >= 1
+    assert EXEC_COUNTERS["sharded_traces"] == 0  # compiled at build time
+    assert EXEC_COUNTERS["batch_traces"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Subprocess guarantee: runs even when this process is single-device
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# CPU explicitly: with libtpu on the image, a second jax process would
+# otherwise block minutes on the parent's /tmp/libtpu_lockfile
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np
+from repro.core.engine import (
+    EXEC_COUNTERS, DeviceSet, intersect_sharded_batch, make_shard_mesh,
+)
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.intersect import rangroupscan
+from repro.core.partition import preprocess_prefix
+
+rng = np.random.default_rng(1)
+fam = random_hash_family(2, 256, seed=7)
+perm = default_permutation(7)
+common = rng.choice(1 << 24, 40, replace=False).astype(np.uint32)
+raw, idxs = {}, {}
+for name, n in [("a", 2000), ("b", 3500)]:
+    s = np.unique(np.concatenate(
+        [rng.choice(1 << 24, n, replace=False).astype(np.uint32), common]))
+    raw[name] = s
+    idxs[name] = preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+mesh = make_shard_mesh(4)
+row = [DeviceSet.from_host(idxs[n]).shard(mesh) for n in ("a", "b")]
+truth = np.intersect1d(raw["a"], raw["b"])
+host, _ = rangroupscan([idxs["a"], idxs["b"]])
+assert np.array_equal(host, truth)
+# oracle equivalence on a 4-shard mesh
+(res, stats), = intersect_sharded_batch([row], mesh, use_pallas=False)
+assert np.array_equal(res, truth), (len(res), len(truth))
+assert stats["n_shards"] == 4 and stats["r"] == len(truth)
+# forced overflow: tiny per-shard capacity still yields exact results
+EXEC_COUNTERS.reset()
+(res, stats), = intersect_sharded_batch([row], mesh, capacity_per_shard=2,
+                                        use_pallas=False)
+assert np.array_equal(res, truth), (len(res), len(truth))
+assert EXEC_COUNTERS["sharded_rerun_calls"] == 1
+assert EXEC_COUNTERS["sharded_calls"] == 2
+print("SHARDED_SUBPROCESS_OK")
+"""
+
+
+def test_sharded_oracle_in_forced_multidevice_subprocess():
+    """The acceptance guarantee, independent of this process's device count:
+    a fresh interpreter with 8 forced host devices must reproduce the
+    host oracle bit-identically on a 4-shard mesh, including under forced
+    overflow (counter-verified single re-run)."""
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SHARDED_SUBPROCESS_OK" in proc.stdout
