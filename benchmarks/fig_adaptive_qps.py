@@ -1,0 +1,288 @@
+"""Adaptive serving-runtime benchmark: background flusher vs manual pump,
+and learned capacity tiers vs the static G/4 rule.
+
+Two experiments, one JSON:
+
+**Flusher** — the same open-loop arrival process (fixed inter-arrival gap,
+real wall clock) served two ways by the same ``AsyncSearchEngine``:
+
+- *manual pump*: the PR-2 serving shape — the submitter thread itself calls
+  ``pump()`` after every submit, so every due-bucket execution happens
+  inline on the submission path and stalls subsequent arrivals;
+- *background flusher*: ``start()`` owns the flush cadence (sleep until the
+  next deadline, wake on submit) and the submitter only queues — submission
+  cadence fully decoupled from flush cadence.
+
+Reported per mode: served QPS (arrival start -> last ticket resolved),
+submit-loop wall time (the decoupling shows up here), p50/p99 queue wait,
+flush causes, and ``flusher_wakeups``.  Results are checked bit-identical
+to the synchronous ``query_batch`` oracle.
+
+**Adaptive capacity** — a workload salted with dense conjunctions (two
+near-identical 2048-element posting lists: every group tuple survives
+phase 1, so survivors ≈ G > G/4 and the static capacity rule *must*
+overflow) is replayed through a static engine and an adaptive one
+(``exec/adaptive.py::CapacityModel``).  The static engine pays an overflow
+re-run on every dense bucket, every pass.  The adaptive engine pays them
+only during the learning pass; after the model promotes the signature's
+capacity tier, the replay runs with **zero** re-runs
+(``adaptive_overflow_saved`` counts the executions the learned tier
+absorbed).  QPS is reported for both replays — the learned tier must not
+regress throughput.
+
+Run:  PYTHONPATH=src python benchmarks/fig_adaptive_qps.py [--docs N]
+      [--queries N] [--out BENCH_adaptive_qps.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.engine import EXEC_COUNTERS, pow2_tiers
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.exec.adaptive import CapacityModel
+from repro.serve.search import (
+    AsyncSearchEngine, SearchEngine, repeated_query_log,
+)
+
+
+def _pace_until(t_target: float) -> None:
+    """Open-loop pacing that yields the GIL.
+
+    A pure-Python spin loop would hold the GIL for whole switch intervals
+    and starve the background flusher thread (measured: 10x wait inflation)
+    — so pacing sleeps, accepting the kernel's sub-ms wakeup slop, which is
+    identical for both serving modes.
+    """
+    while True:
+        dt = t_target - time.perf_counter()
+        if dt <= 0:
+            return
+        time.sleep(dt)
+
+
+def _percentiles(xs):
+    arr = np.asarray(xs, dtype=np.float64)
+    if not len(arr):
+        return 0.0, 0.0
+    return (float(np.percentile(arr, 50)), float(np.percentile(arr, 99)))
+
+
+def serve_open_loop(eng: AsyncSearchEngine, log, gap_us: float,
+                    use_flusher: bool):
+    """One real-time open-loop run; returns (tickets, metrics)."""
+    eng.cache.clear()
+    EXEC_COUNTERS.reset()
+    tickets = []
+    if use_flusher:
+        eng.start()
+    t0 = time.perf_counter()
+    for i, q in enumerate(log):
+        _pace_until(t0 + i * gap_us * 1e-6)
+        tickets.append(eng.submit(q))
+    submit_wall_s = time.perf_counter() - t0
+    if use_flusher:
+        for t in tickets:
+            t.wait(timeout=60.0)
+        eng.stop()                                  # drains any stragglers
+    else:
+        while eng.pending():
+            eng.pump()
+        eng.drain()
+    wall_s = time.perf_counter() - t0
+    assert all(t.done for t in tickets)
+    queued = [t.wait_us for t in tickets
+              if t.value.stats.get("batch_size") and
+              not t.value.stats.get("cached")]
+    p50, p99 = _percentiles(queued)
+    return tickets, {
+        "mode": "background_flusher" if use_flusher else "manual_pump",
+        "queries": len(log),
+        "offered_qps": 1e6 / gap_us,
+        "served_qps": len(log) / wall_s,
+        "submit_wall_s": submit_wall_s,
+        "total_wall_s": wall_s,
+        "queued_queries": len(queued),
+        "p50_wait_us": p50,
+        "p99_wait_us": p99,
+        "tier_flushes": EXEC_COUNTERS["tier_flushes"],
+        "deadline_flushes": EXEC_COUNTERS["deadline_flushes"],
+        "flusher_wakeups": EXEC_COUNTERS["flusher_wakeups"],
+        "jit_executions": EXEC_COUNTERS["batch_calls"],
+        "overflow_reruns": EXEC_COUNTERS["rerun_calls"],
+    }
+
+
+def manual_pump_open_loop(eng: AsyncSearchEngine, log, gap_us: float):
+    """The coupled baseline: submit, then pump inline, per arrival."""
+    eng.cache.clear()
+    EXEC_COUNTERS.reset()
+    tickets = []
+    t0 = time.perf_counter()
+    for i, q in enumerate(log):
+        _pace_until(t0 + i * gap_us * 1e-6)
+        tickets.append(eng.submit(q))
+        eng.pump()                                  # inline: stalls arrivals
+    submit_wall_s = time.perf_counter() - t0
+    eng.drain()
+    wall_s = time.perf_counter() - t0
+    assert all(t.done for t in tickets)
+    queued = [t.wait_us for t in tickets
+              if t.value.stats.get("batch_size") and
+              not t.value.stats.get("cached")]
+    p50, p99 = _percentiles(queued)
+    return tickets, {
+        "mode": "manual_pump",
+        "queries": len(log),
+        "offered_qps": 1e6 / gap_us,
+        "served_qps": len(log) / wall_s,
+        "submit_wall_s": submit_wall_s,
+        "total_wall_s": wall_s,
+        "queued_queries": len(queued),
+        "p50_wait_us": p50,
+        "p99_wait_us": p99,
+        "tier_flushes": EXEC_COUNTERS["tier_flushes"],
+        "deadline_flushes": EXEC_COUNTERS["deadline_flushes"],
+        "flusher_wakeups": EXEC_COUNTERS["flusher_wakeups"],
+        "jit_executions": EXEC_COUNTERS["batch_calls"],
+        "overflow_reruns": EXEC_COUNTERS["rerun_calls"],
+    }
+
+
+def _timed_batch(eng: SearchEngine, log):
+    EXEC_COUNTERS.reset()
+    t0 = time.perf_counter()
+    results = eng.query_batch(log)
+    wall_s = time.perf_counter() - t0
+    return results, wall_s, dict(EXEC_COUNTERS)
+
+
+def adaptive_overflow_experiment(postings, log, min_observations: int = 8):
+    """Static-vs-learned capacity tiers on an overflow-salted workload."""
+    static = SearchEngine(postings, w=256, m=2, seed=17, use_device=True,
+                          result_cache=0)
+    static.query_batch(log)                         # compile warm-up pass
+    _, static_s, static_counters = _timed_batch(static, log)
+
+    model = CapacityModel(min_observations=min_observations)
+    adaptive = SearchEngine(postings, w=256, m=2, seed=17, use_device=True,
+                            result_cache=0, adaptive_capacity=model)
+    _, learn_s, learn_counters = _timed_batch(adaptive, log)  # learning pass
+    adaptive.query_batch(log)     # un-timed: compiles the promoted tiers
+    _, replay_s, replay_counters = _timed_batch(adaptive, log)
+
+    learned = {str(k): v for k, v in sorted(model.learned_tiers().items(),
+                                            key=str)}
+    return {
+        "queries": len(log),
+        "static_g4_rule": {
+            "rerun_calls": static_counters["rerun_calls"],
+            "jit_executions": static_counters["batch_calls"],
+            "wall_s": static_s,
+            "qps": len(log) / static_s,
+        },
+        "learning_pass": {
+            "rerun_calls": learn_counters["rerun_calls"],
+            "adaptive_promotions": learn_counters["adaptive_promotions"],
+            "wall_s": learn_s,
+        },
+        "learned_replay": {
+            "rerun_calls": replay_counters["rerun_calls"],
+            "adaptive_overflow_saved":
+                replay_counters["adaptive_overflow_saved"],
+            "jit_executions": replay_counters["batch_calls"],
+            "wall_s": replay_s,
+            "qps": len(log) / replay_s,
+        },
+        "rerun_calls_before": static_counters["rerun_calls"],
+        "rerun_calls_after": replay_counters["rerun_calls"],
+        "qps_ratio_vs_static": (len(log) / replay_s) / (len(log) / static_s),
+        "learned_tiers": learned,
+    }
+
+
+def run(n_docs: int = 12000, vocab: int = 8000, n_queries: int = 256,
+        n_distinct: int = 96, flush_tier: int = 8, gap_us: float = 300.0,
+        deadline_us: float = 2000.0, dense_every: int = 8,
+        min_df: int = 24, max_df_frac: float = 0.04, seed: int = 17):
+    docs = zipf_corpus(n_docs, vocab=vocab, mean_len=60, seed=seed)
+    postings = {t: p for t, p in inverted_index(docs).items()
+                if min_df <= len(p) <= max_df_frac * n_docs}
+    # salt the index with a dense near-duplicate pair: its conjunction's
+    # survivors ≈ G > G/4, so the static capacity rule overflows every time
+    rng = np.random.default_rng(seed)
+    dense = rng.choice(1 << 20, size=2048, replace=False).astype(np.uint32)
+    ta, tb = max(postings) + 1, max(postings) + 2
+    postings[ta], postings[tb] = dense, dense.copy()
+
+    log = repeated_query_log(sorted(set(postings) - {ta, tb}), n_queries,
+                             n_distinct=n_distinct, seed=seed + 1)
+    for i in range(0, len(log), dense_every):
+        log[i] = [ta, tb]
+
+    eng = AsyncSearchEngine(postings, w=256, m=2, seed=seed,
+                            deadline_us=deadline_us, flush_tier=flush_tier,
+                            result_cache=1024)
+    # index-build-time warming: every signature in the log at every pow2
+    # batch tier a partial flush can produce — measured waits must reflect
+    # the policy, not trace+compile transients
+    eng.warm(log, top_k=len(log), b_tiers=pow2_tiers(flush_tier))
+    oracle = SearchEngine(postings, w=256, m=2, seed=seed,
+                          use_device=True).query_batch(log)
+    # priming pass absorbs remaining one-time lazy-init transients
+    serve_open_loop(eng, log, gap_us, use_flusher=True)
+
+    manual_tickets, manual = manual_pump_open_loop(eng, log, gap_us)
+    flusher_tickets, flusher = serve_open_loop(eng, log, gap_us,
+                                               use_flusher=True)
+    identical = all(
+        np.array_equal(t.value.doc_ids, o.doc_ids)
+        for t, o in zip(flusher_tickets, oracle)
+    ) and all(
+        np.array_equal(t.value.doc_ids, o.doc_ids)
+        for t, o in zip(manual_tickets, oracle)
+    )
+    assert identical, "async paths diverged from the query_batch oracle"
+
+    adaptive = adaptive_overflow_experiment(postings, log)
+    return {
+        "n_docs": n_docs,
+        "vocab_kept": len(postings),
+        "queries": n_queries,
+        "distinct_pool": n_distinct,
+        "flush_tier": flush_tier,
+        "deadline_us": deadline_us,
+        "arrival_gap_us": gap_us,
+        "dense_query_every": dense_every,
+        "identical_to_query_batch": identical,
+        "flusher": {"manual_pump": manual, "background_flusher": flusher},
+        "adaptive": adaptive,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=12000)
+    ap.add_argument("--vocab", type=int, default=8000)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--distinct", type=int, default=96)
+    ap.add_argument("--gap-us", type=float, default=300.0)
+    ap.add_argument("--out", type=str,
+                    default=str(pathlib.Path(__file__).resolve().parent.parent
+                                / "BENCH_adaptive_qps.json"))
+    args = ap.parse_args()
+    res = run(args.docs, args.vocab, args.queries, n_distinct=args.distinct,
+              gap_us=args.gap_us)
+    print(json.dumps(res, indent=2))
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,6 @@ Writes benchmarks/artifacts/tables.md (pasted into EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import json
 import pathlib
 
 from roofline import load_cells, roofline_row

@@ -8,7 +8,7 @@ import numpy as np
 from repro.core.hashing import default_permutation, random_hash_family
 from repro.core.partition import preprocess_fixed, preprocess_prefix
 from repro.core.intersect import hashbin, intgroup, rangroup, rangroupscan
-from repro.core.engine import BatchedEngine, DeviceSet, intersect_device
+from repro.core.engine import DeviceSet, intersect_device
 
 
 def main():

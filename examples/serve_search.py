@@ -5,7 +5,9 @@ with the paper's keyword-count mix, with online algorithm selection
 
 ``--async-front`` serves the same log through the online front-end
 instead: single-query submits into the deadline-aware admission queue,
-with compile warming and the result cache on.
+with compile warming and the result cache on.  Add ``--flusher`` to let
+the background flusher thread own the flush cadence (no manual ``pump``
+calls anywhere — the autonomous serving runtime).
 
 Run:  PYTHONPATH=src python examples/serve_search.py [--docs 20000] [--queries 200]
 """
@@ -18,8 +20,9 @@ from repro.data.pipeline import inverted_index, zipf_corpus
 from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
 
 
-def serve_async(postings, queries):
-    """Submit one query at a time; pump flushes deadline-due buckets."""
+def serve_async(postings, queries, flusher: bool = False):
+    """Submit one query at a time; flushes run on the manual pump cadence
+    or — with ``flusher`` — on the background flusher thread."""
     from repro.core.engine import EXEC_COUNTERS
 
     # warm_b_tiers defaults to every pow2 tier up to flush_tier, so any
@@ -30,16 +33,25 @@ def serve_async(postings, queries):
     EXEC_COUNTERS.reset()
     t0 = time.perf_counter()
     tickets = []
-    for q in queries:
-        tickets.append(engine.submit(q))
-        engine.pump()
-    engine.drain()
+    if flusher:
+        with engine:                      # start() ... stop() drains
+            for q in queries:
+                tickets.append(engine.submit(q))
+            for t in tickets:
+                t.wait(timeout=60.0)
+    else:
+        for q in queries:
+            tickets.append(engine.submit(q))
+            engine.pump()
+        engine.drain()
     wall = time.perf_counter() - t0
     waits = np.asarray([t.wait_us for t in tickets])
-    print(f"async: served {len(tickets)} queries in {wall:.2f}s "
+    mode = "flusher" if flusher else "manual pump"
+    print(f"async ({mode}): served {len(tickets)} queries in {wall:.2f}s "
           f"(cache hits {EXEC_COUNTERS['result_cache_hits']}, "
           f"jit executions {EXEC_COUNTERS['batch_calls']}, "
-          f"serve-time traces {EXEC_COUNTERS['batch_traces']})")
+          f"serve-time traces {EXEC_COUNTERS['batch_traces']}, "
+          f"flusher wakeups {EXEC_COUNTERS['flusher_wakeups']})")
     print(f"queue wait p50={np.percentile(waits, 50):.0f}us "
           f"p99={np.percentile(waits, 99):.0f}us")
 
@@ -54,6 +66,9 @@ def main():
     ap.add_argument("--async-front", action="store_true",
                     help="serve through AsyncSearchEngine (admission queue, "
                          "deadline flushing, result cache, compile warming)")
+    ap.add_argument("--flusher", action="store_true",
+                    help="with --async-front: background flusher thread owns "
+                         "the flush cadence (no manual pump calls)")
     args = ap.parse_args()
 
     print(f"building corpus ({args.docs} docs) ...")
@@ -69,7 +84,7 @@ def main():
         queries = repeated_query_log(sorted(kept), args.queries,
                                      n_distinct=max(8, args.queries // 4),
                                      seed=2)
-        serve_async(kept, queries)
+        serve_async(kept, queries, flusher=args.flusher)
         return
     engine = SearchEngine(postings, w=256, m=2, use_device=args.device)
     print(f"index built: {len(engine.index)} terms in {engine.build_s:.2f}s")

@@ -11,7 +11,6 @@ import argparse
 import dataclasses
 import shutil
 
-import jax
 
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import SyntheticLMData

@@ -13,7 +13,6 @@ compressed Merge/Lookup baselines and space accounting.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Tuple
 
 import numpy as np
@@ -97,7 +96,6 @@ def gamma_encode(sorted_vals: np.ndarray) -> Tuple[np.ndarray, int]:
     nbits_val = np.floor(np.log2(gaps)).astype(np.int64)
     total = int(np.sum(2 * nbits_val + 1))
     out = np.zeros((total + 7) // 8, dtype=np.uint8)
-    pos = 0
     starts = np.concatenate([[0], np.cumsum(2 * nbits_val + 1)])[:-1]
     for gap, nb, st in zip(gaps.tolist(), nbits_val.tolist(), starts.tolist()):
         p = st + nb  # nb zeros, then the (nb+1)-bit binary of gap (MSB first)

@@ -120,6 +120,18 @@ class ExecCounters(dict):
     - ``tier_flushes`` / ``deadline_flushes`` — admission-queue bucket
       flushes by cause: reached the full power-of-two tier vs. the oldest
       query's deadline budget expired (``serve/admission.py``).
+    - ``flusher_wakeups`` — background flusher thread wake-ups
+      (``serve/search.py::AsyncSearchEngine.start``): each sleep that ended
+      (deadline due, submit wake, or idle timeout) and led to a pump check.
+    - ``adaptive_promotions`` / ``adaptive_overflow_saved`` — capacity-tier
+      changes learned by ``exec/adaptive.py::CapacityModel`` and executions
+      where the learned tier absorbed survivors that would have overflowed
+      the static G/4 rule (i.e. re-runs the model eliminated).
+
+    Counters are process-global and unlocked: concurrent submitter threads
+    can in principle lose an increment.  Exact-count assertions belong in
+    single-threaded tests; serving reads them as telemetry, where a lost
+    bump is noise.
     """
 
     _KEYS = (
@@ -128,6 +140,8 @@ class ExecCounters(dict):
         "warm_executions",
         "result_cache_hits", "result_cache_misses",
         "tier_flushes", "deadline_flushes",
+        "flusher_wakeups",
+        "adaptive_promotions", "adaptive_overflow_saved",
     )
 
     def __init__(self):
@@ -232,17 +246,21 @@ def default_capacity(ts: Tuple[int, ...]) -> int:
     return max(64, (1 << ts[-1]) // 4)
 
 
-def default_capacity_per_shard(ts: Tuple[int, ...], n_shards: int) -> int:
+def default_capacity_per_shard(ts: Tuple[int, ...], n_shards: int,
+                               capacity: Optional[int] = None) -> int:
     """Per-shard survivor-buffer tier for the sharded pipeline.
 
-    The whole-query capacity budget (:func:`default_capacity`) divided over
-    the shards (survivors distribute ~uniformly because ``g`` randomizes z),
-    floored, and never beyond the local group count ``G / n_shards``
-    (overflow past that is impossible).  Deterministic in ``(ts, n_shards)``
-    so ``(ShapeSig, shards)`` fully determines the executable's shapes.
+    The whole-query capacity budget — ``capacity`` when given (e.g. a
+    learned ``ShapeSig.capacity_tier`` from ``exec/adaptive.py``), else
+    :func:`default_capacity` — divided over the shards (survivors
+    distribute ~uniformly because ``g`` randomizes z), floored, and never
+    beyond the local group count ``G / n_shards`` (overflow past that is
+    impossible).  Deterministic in ``(ts, n_shards, capacity)`` so
+    ``(ShapeSig, shards)`` fully determines the executable's shapes.
     """
     local_g = (1 << ts[-1]) // n_shards
-    return min(local_g, max(16, default_capacity(ts) // n_shards))
+    whole = default_capacity(ts) if capacity is None else int(capacity)
+    return min(local_g, max(16, whole // n_shards))
 
 
 def _aligned_images(images: Sequence[jnp.ndarray], ts: Tuple[int, ...]) -> jnp.ndarray:
@@ -511,9 +529,20 @@ def warm_from_plans(plans, get_set, top_k: int = 8,
             rep[p.sig] = [resolve(t) for t in p.terms]
     warmed = [sig for sig, _ in freq.most_common(top_k)]
     for sig in warmed:
+        # warm at the SIGNATURE's capacity tier, not the executor default —
+        # with an adaptive capacity model the plan's tier is the learned
+        # one, and warming any other tier would trace an executable no
+        # live bucket ever runs (the sharded path derives its per-shard
+        # buffer from the same tier, mirroring execute_bucket)
+        shards = getattr(sig, "shards", 1)
+        capacity = getattr(sig, "capacity_tier", None)
+        if shards > 1 and capacity is not None:
+            capacity = default_capacity_per_shard(
+                sig.ts, shards, capacity=capacity)
         warm_executables(
-            [rep[sig]], b_tiers=b_tiers, use_pallas=use_pallas,
-            mesh=mesh if getattr(sig, "shards", 1) > 1 else None, axis=axis,
+            [rep[sig]], b_tiers=b_tiers, capacity=capacity,
+            use_pallas=use_pallas,
+            mesh=mesh if shards > 1 else None, axis=axis,
         )
     return warmed
 

@@ -22,7 +22,6 @@ runs with jax x64 disabled; 32-bit keys cover the paper's universe sizes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 

@@ -264,7 +264,6 @@ def rangroupscan(indexes: Sequence[PrefixIndex],
     idxs = sorted(indexes, key=lambda s: s.t)
     k = len(idxs)
     st = Stats("rangroupscan", k, sum(s.n for s in idxs))
-    m = idxs[0].family.m
     tk = idxs[-1].t
     G = 1 << tk
     zk = np.arange(G, dtype=np.int64)

@@ -9,7 +9,7 @@ paper's r << n regime in its purest form.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 

@@ -6,9 +6,12 @@ signature and drives one jit execution per bucket through
 ``core.engine.intersect_device_batch`` (:func:`~repro.exec.batch.
 execute_bucket` is the single-bucket entry the async admission front-end
 flushes into); :mod:`cache` remembers results of repeated normalized plans
-so hits skip the device entirely.
+so hits skip the device entirely; :mod:`adaptive` closes the telemetry
+loop — learned capacity tiers from observed survivor counts and adaptive
+flush budgets from observed arrival rates.
 """
 from .plan import QueryPlan, ShapeSig, plan_query
+from .adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
 from .batch import (
     bucket_plans,
     execute_bucket,
@@ -21,6 +24,9 @@ __all__ = [
     "QueryPlan",
     "ShapeSig",
     "plan_query",
+    "AdaptiveDeadline",
+    "CapacityModel",
+    "adaptive_key",
     "bucket_plans",
     "execute_bucket",
     "execute_name_queries",

@@ -1,0 +1,253 @@
+"""Telemetry-driven adaptive capacity and deadline tuning.
+
+The paper's O(n/sqrt(w) + kr) guarantee hinges on sizing the phase-2
+candidate buffer to the *actual* survivor count: too small and the executor
+pays an overflow re-run (a second jit execution of the bucket), too large
+and phase 2 wastes work on padding.  The static ``default_capacity`` rule
+(G/4 with a floor) is a prior, not a measurement — this module closes the
+loop with two small controllers fed from execution telemetry:
+
+- :class:`CapacityModel` records a per-signature histogram of observed
+  survivor counts (``tuples_survived`` from the single-device bucket stats;
+  ``max_shard_survivors * n_shards`` from the sharded path, since the
+  per-shard buffer is what overflows there) and learns a per-signature
+  capacity tier: a high quantile of the observations times a safety
+  margin, rounded up to a power of two.  ``plan_query`` consults it when
+  building a ``ShapeSig`` and falls back to the static G/4 rule while the
+  signature is cold (fewer than ``min_observations`` samples).  When the
+  learned tier changes, the model bumps
+  ``EXEC_COUNTERS["adaptive_promotions"]`` and fires registered promotion
+  hooks — the serving layer uses them to invalidate its result cache and
+  re-warm the promoted executable deliberately, because a new
+  ``capacity_tier`` is a new ``ShapeSig`` and therefore a new compiled
+  executable.
+- :class:`AdaptiveDeadline` adjusts per-signature flush budgets from the
+  observed bucket-fill rate (an EWMA of submit inter-arrival gaps).  The
+  deadline budget exists to bound how long a query waits for batch-mates;
+  when a signature's arrival rate cannot fill a bucket within the default
+  budget, waiting the full budget buys padding instead of batching, so the
+  budget shrinks proportionally to the expected number of mates.  Hot
+  signatures keep the full budget (their tier flush fires first anyway).
+
+Keys: both models are keyed by :func:`adaptive_key` — the ShapeSig minus
+its ``capacity_tier`` — because the capacity tier is the *output* of the
+capacity model; keying on the full sig would give every learned tier its
+own cold history.
+
+Thread-safety: both controllers are observed from flusher/executor threads
+and consulted from submitter threads, so all state is lock-protected.
+Promotion hooks are fired *outside* the model lock — hooks re-plan (which
+re-enters ``capacity_for``) and run device work (re-warming).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
+
+from ..core.engine import EXEC_COUNTERS, default_capacity
+
+__all__ = ["adaptive_key", "CapacityModel", "AdaptiveDeadline"]
+
+
+def adaptive_key_parts(k: int, ts: Tuple[int, ...],
+                       gmaxes: Tuple[int, ...], shards: int) -> Tuple:
+    """THE adaptive learning key, from raw signature parts.  Single source
+    of truth: the planner builds the key from parts before a ``ShapeSig``
+    exists, the model builds it from the executed sig — both MUST agree or
+    learned tiers are consulted under a key nothing ever writes."""
+    return (k, ts, gmaxes, shards)
+
+
+def adaptive_key(sig) -> Tuple:
+    """The learning key of a shape signature: everything *except* the
+    capacity tier (which is what the model outputs).  Accepts any object
+    with ``k`` / ``ts`` / ``gmaxes`` / ``shards`` (i.e. ``ShapeSig``)."""
+    return adaptive_key_parts(sig.k, sig.ts, sig.gmaxes,
+                              getattr(sig, "shards", 1))
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+class CapacityModel:
+    """Learn per-signature survivor-buffer (capacity) tiers from telemetry.
+
+    ``observe_bucket(sig, stats_list)`` feeds one executed bucket's
+    per-query stats; ``capacity_for(key, default)`` answers the planner.
+    A signature stays on ``default`` (the static G/4 rule) until
+    ``min_observations`` samples accumulate — the cold-start fallback —
+    then gets ``pow2_ceil(quantile * margin)`` clamped to
+    ``[64, G]``.  Tiers can move in both directions: *up* to absorb
+    survivors the static rule overflowed on (eliminating re-runs), *down*
+    when real survivor counts sit far below G/4 (shrinking the phase-2
+    all-pairs work toward the paper's E[survivors] ideal).
+
+    Every tier change counts as one ``adaptive_promotions`` and fires the
+    registered promotion hooks with ``(key, old_tier, new_tier)``; an
+    execution whose survivors exceeded the static default but fit the
+    learned tier counts as ``adaptive_overflow_saved`` (a re-run the model
+    eliminated).
+
+    The histogram is a bounded window (``window`` most recent samples per
+    key), so the model tracks drift instead of averaging over forever.
+    """
+
+    def __init__(self, min_observations: int = 32, quantile: float = 0.99,
+                 margin: float = 1.25, window: int = 1024,
+                 floor: int = 64):
+        assert 0.0 < quantile <= 1.0 and margin >= 1.0
+        self.min_observations = int(min_observations)
+        self.quantile = float(quantile)
+        self.margin = float(margin)
+        self.window = int(window)
+        self.floor = int(floor)
+        self._lock = threading.Lock()
+        self._survivors: Dict[Hashable, deque] = {}
+        self._learned: Dict[Hashable, int] = {}
+        self._hooks: List[Callable[[Hashable, int, int], None]] = []
+
+    def on_promotion(self, hook: Callable[[Hashable, int, int], None]) -> None:
+        """Register a callback fired (outside the model lock) after every
+        learned-tier change, with ``(key, old_tier, new_tier)``.  The
+        serving layer hangs cache invalidation and re-warming here."""
+        self._hooks.append(hook)
+
+    def capacity_for(self, key: Hashable, default: int) -> int:
+        """The capacity tier the planner should use for ``key``: the
+        learned tier when warm, ``default`` (the static rule) when cold."""
+        with self._lock:
+            return self._learned.get(key, default)
+
+    def observations(self, key: Hashable) -> int:
+        with self._lock:
+            window = self._survivors.get(key)
+            return len(window) if window is not None else 0
+
+    def learned_tiers(self) -> Dict[Hashable, int]:
+        """Snapshot of every learned (non-cold) tier, for telemetry."""
+        with self._lock:
+            return dict(self._learned)
+
+    @staticmethod
+    def _effective_survivors(sig, stats: Dict) -> Optional[int]:
+        """Whole-query-equivalent survivor count of one executed query.
+
+        Sharded stats report ``max_shard_survivors``; the per-shard buffer
+        is ``capacity_tier // n_shards``, so the binding whole-query
+        requirement is ``max_shard_survivors * n_shards`` (the margin also
+        covers shard imbalance).  Single-device stats report
+        ``tuples_survived`` directly.
+        """
+        n_shards = stats.get("n_shards", 1)
+        if n_shards > 1 and "max_shard_survivors" in stats:
+            return int(stats["max_shard_survivors"]) * int(n_shards)
+        if "tuples_survived" in stats:
+            return int(stats["tuples_survived"])
+        return None
+
+    def observe_bucket(self, sig, stats_list) -> None:
+        """Feed one executed bucket's per-query stats dicts.
+
+        Records each query's effective survivor count under
+        ``adaptive_key(sig)``, credits ``adaptive_overflow_saved`` when the
+        learned tier absorbed a would-be static overflow, and re-evaluates
+        the learned tier.  Hooks fire after the lock is released.
+        """
+        key = adaptive_key(sig)
+        static_cap = default_capacity(sig.ts)
+        g = 1 << sig.ts[-1]
+        promotions: List[Tuple[Hashable, int, int]] = []
+        with self._lock:
+            window = self._survivors.setdefault(
+                key, deque(maxlen=self.window))
+            for stats in stats_list:
+                surv = self._effective_survivors(sig, stats)
+                if surv is None:
+                    continue
+                window.append(surv)
+                if (sig.capacity_tier != static_cap
+                        and static_cap < surv <= sig.capacity_tier):
+                    EXEC_COUNTERS["adaptive_overflow_saved"] += 1
+            if len(window) >= self.min_observations:
+                tier = self._tier_from_window(window, g)
+                old = self._learned.get(key, static_cap)
+                if tier != self._learned.get(key):
+                    self._learned[key] = tier
+                    if tier != old:
+                        EXEC_COUNTERS["adaptive_promotions"] += 1
+                        promotions.append((key, old, tier))
+        for promo in promotions:
+            for hook in self._hooks:
+                hook(*promo)
+
+    def _tier_from_window(self, window, g: int) -> int:
+        """quantile * margin, power-of-two ceiling, clamped to [floor, G]."""
+        ordered = sorted(window)
+        idx = min(len(ordered) - 1,
+                  int(round(self.quantile * (len(ordered) - 1))))
+        target = int(ordered[idx] * self.margin)
+        return max(self.floor, min(g, _pow2_ceil(max(1, target))))
+
+
+class AdaptiveDeadline:
+    """Learn per-signature flush budgets from observed bucket-fill rates.
+
+    ``observe(key, now)`` records a submission (EWMA of inter-arrival
+    gaps); ``budget_for(key, default_us)`` answers the admission path.  The
+    policy: the default budget is worth waiting only if batch-mates are
+    likely to arrive within it.  With an observed mean gap ``g`` the
+    expected number of mates inside the budget is ``default / g``; when
+    that falls below 1 the budget shrinks proportionally (clamped to
+    ``min_fraction * default``), so a cold signature's lone query stops
+    paying the full budget for padding it will never batch with.  Hot
+    signatures (``default / g >= 1``) keep the full budget — their tier
+    flush fires before the deadline anyway, so shrinking would only cut
+    batching.
+
+    Like :class:`CapacityModel`, cold keys (fewer than ``min_observations``
+    gaps) use the default unchanged.
+    """
+
+    def __init__(self, min_observations: int = 8, alpha: float = 0.2,
+                 min_fraction: float = 0.125):
+        assert 0.0 < alpha <= 1.0 and 0.0 < min_fraction <= 1.0
+        self.min_observations = int(min_observations)
+        self.alpha = float(alpha)
+        self.min_fraction = float(min_fraction)
+        self._lock = threading.Lock()
+        self._last_at: Dict[Hashable, float] = {}
+        self._gap_ewma_us: Dict[Hashable, float] = {}
+        self._counts: Dict[Hashable, int] = {}
+
+    def observe(self, key: Hashable, now: float) -> None:
+        """Record one submission of ``key`` at clock time ``now`` (s)."""
+        with self._lock:
+            last = self._last_at.get(key)
+            self._last_at[key] = now
+            if last is None:
+                return
+            gap_us = max(0.0, (now - last) * 1e6)
+            prev = self._gap_ewma_us.get(key)
+            self._gap_ewma_us[key] = (
+                gap_us if prev is None
+                else (1.0 - self.alpha) * prev + self.alpha * gap_us)
+            self._counts[key] = self._counts.get(key, 0) + 1
+
+    def expected_gap_us(self, key: Hashable) -> Optional[float]:
+        with self._lock:
+            if self._counts.get(key, 0) < self.min_observations:
+                return None
+            return self._gap_ewma_us.get(key)
+
+    def budget_for(self, key: Hashable, default_us: float) -> float:
+        """The flush budget the admission path should use for ``key``."""
+        gap = self.expected_gap_us(key)
+        if gap is None or gap <= 0.0:
+            return default_us
+        expected_mates = default_us / gap
+        if expected_mates >= 1.0:
+            return default_us
+        return max(self.min_fraction * default_us,
+                   default_us * expected_mates)

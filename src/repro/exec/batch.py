@@ -65,6 +65,7 @@ def execute_bucket(
     mesh=None,
     shard_axis: str = SHARD_AXIS,
     get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
+    capacity_model=None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute ONE same-signature bucket; returns {query_index: (values,
     stats)}.
@@ -91,6 +92,14 @@ def execute_bucket(
     ``EXEC_COUNTERS["batch_calls"]`` (or ``"sharded_calls"``) bump per pass
     (see ``core.engine``); each result's stats carry ``batch_us`` — bucket
     wall time divided by bucket size, the honest amortized per-query cost.
+
+    ``sig.capacity_tier`` sizes the survivor buffer on both paths (the
+    sharded per-shard buffer is derived from it via
+    ``default_capacity_per_shard``), so a planner consulting a learned
+    capacity model changes the executed shapes through the signature alone.
+    With a ``capacity_model`` attached, the bucket's per-query survivor
+    stats are fed back to it after execution — the telemetry loop the model
+    learns from.
     """
     shards = getattr(sig, "shards", 1)
     t0 = time.perf_counter()
@@ -100,7 +109,8 @@ def execute_bucket(
         rows = [[resolve(t) for t in plan.terms] for _, plan in items]
         results = intersect_sharded_batch(
             rows, mesh, axis=shard_axis,
-            capacity_per_shard=default_capacity_per_shard(sig.ts, shards),
+            capacity_per_shard=default_capacity_per_shard(
+                sig.ts, shards, capacity=sig.capacity_tier),
             use_pallas=use_pallas,
         )
     else:
@@ -113,6 +123,9 @@ def execute_bucket(
     for (qi, _), (values, stats) in zip(items, results):
         stats["batch_us"] = us / len(items)
         out[qi] = (values, stats)
+    if capacity_model is not None:
+        capacity_model.observe_bucket(
+            sig, [stats for _, stats in out.values()])
     return out
 
 
@@ -123,6 +136,7 @@ def execute_plan_buckets(
     mesh=None,
     shard_axis: str = SHARD_AXIS,
     get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
+    capacity_model=None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute device plans bucket-by-bucket; returns {query_index: (values,
     stats)}.
@@ -139,6 +153,7 @@ def execute_plan_buckets(
         out.update(execute_bucket(
             get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
             shard_axis=shard_axis, get_sharded_set=get_sharded_set,
+            capacity_model=capacity_model,
         ))
     return out
 

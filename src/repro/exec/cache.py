@@ -30,6 +30,7 @@ repeated conjunction can never serve postings from before the mutation.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Optional
 
@@ -53,15 +54,23 @@ class ResultCache:
     time; ``bump_generation()`` (called on every index mutation) makes all
     older entries stale — a stale lookup counts as a miss and evicts the
     entry, so invalidation is O(1) at mutation time and lazy thereafter.
+
+    Thread-safety: all methods serialize on an internal lock.  The async
+    front-end reads the cache from many submitter threads while the
+    background flusher stores results from its own thread; unlocked
+    ``move_to_end`` / ``del`` sequences would corrupt the OrderedDict under
+    that interleaving.
     """
 
     def __init__(self, capacity: int = 1024):
         self.capacity = int(capacity)
         self.generation = 0
+        self._lock = threading.Lock()
         self._entries: "OrderedDict[Any, Any]" = OrderedDict()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def get(self, plan: QueryPlan) -> Optional[Any]:
         """Return the cached result for ``plan``, or None (counted miss).
@@ -70,16 +79,17 @@ class ResultCache:
         if self.capacity <= 0:
             return None
         key = plan.cache_key()
-        if key in self._entries:
-            gen, value = self._entries[key]
-            if gen != self.generation:
-                del self._entries[key]
-            else:
-                self._entries.move_to_end(key)
-                EXEC_COUNTERS["result_cache_hits"] += 1
-                return value
-        EXEC_COUNTERS["result_cache_misses"] += 1
-        return None
+        with self._lock:
+            if key in self._entries:
+                gen, value = self._entries[key]
+                if gen != self.generation:
+                    del self._entries[key]
+                else:
+                    self._entries.move_to_end(key)
+                    EXEC_COUNTERS["result_cache_hits"] += 1
+                    return value
+            EXEC_COUNTERS["result_cache_misses"] += 1
+            return None
 
     def put(self, plan: QueryPlan, value: Any,
             generation: Optional[int] = None) -> None:
@@ -94,27 +104,33 @@ class ResultCache:
         """
         if self.capacity <= 0:
             return
-        stamp = self.generation if generation is None else generation
-        if stamp != self.generation:
-            return  # computed against a mutated-away index: never cache
         key = plan.cache_key()
-        self._entries[key] = (stamp, value)
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        with self._lock:
+            stamp = self.generation if generation is None else generation
+            if stamp != self.generation:
+                return  # computed against a mutated-away index: never cache
+            self._entries[key] = (stamp, value)
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
 
     def bump_generation(self) -> None:
         """Mark every current entry stale (index mutated).  O(1): stale
         entries are evicted lazily by ``get``.  Registered as the engine's
         ``on_mutate`` hook by the serving layer."""
-        self.generation += 1
+        with self._lock:
+            self.generation += 1
 
     def invalidate(self) -> None:
         """Explicit hook: drop everything now AND advance the generation
         (so in-flight results whose callers captured the old generation
-        are rejected by ``put`` instead of re-entering as fresh)."""
-        self.generation += 1
-        self._entries.clear()
+        are rejected by ``put`` instead of re-entering as fresh).  Also
+        fired on adaptive capacity-tier promotions — the deliberate
+        invalidation point when learned tiers re-key the executables."""
+        with self._lock:
+            self.generation += 1
+            self._entries.clear()
 
     def clear(self) -> None:
-        self._entries.clear()
+        with self._lock:
+            self._entries.clear()

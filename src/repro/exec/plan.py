@@ -92,6 +92,7 @@ def plan_query(
     device: bool = True,
     mesh_shards: int = 1,
     shard_min_g: int = SHARD_MIN_G,
+    capacity_model=None,
 ) -> QueryPlan:
     """Plan one query against ``index`` (term -> set with .t/.gmax/.n).
 
@@ -103,6 +104,13 @@ def plan_query(
     arrays exactly.  With ``mesh_shards > 1``, huge-G queries
     (``2^t_k >= shard_min_g``) whose smallest set splits evenly over the
     mesh get ``sig.shards = mesh_shards`` and execute z-sharded.
+
+    With a ``capacity_model`` (``exec.adaptive.CapacityModel``) attached,
+    ``capacity_tier`` is the model's learned tier for the signature's
+    adaptive key — the telemetry-sized survivor buffer — falling back to
+    the static ``default_capacity`` rule while the signature is cold.
+    Consulting the model stays pure metadata work (a dict lookup under the
+    model's lock).
     """
     uniq = []
     seen = set()
@@ -127,8 +135,14 @@ def plan_query(
     if (mesh_shards > 1 and (1 << ts[-1]) >= shard_min_g
             and (1 << ts[0]) % mesh_shards == 0):
         shards = mesh_shards
+    capacity = default_capacity(ts)
+    if capacity_model is not None:
+        from .adaptive import adaptive_key_parts
+
+        capacity = capacity_model.capacity_for(
+            adaptive_key_parts(len(uniq), ts, gmaxes, shards), capacity)
     sig = ShapeSig(
         k=len(uniq), ts=ts, gmaxes=gmaxes,
-        capacity_tier=default_capacity(ts), shards=shards,
+        capacity_tier=capacity, shards=shards,
     )
     return QueryPlan(terms=tuple(uniq), algorithm="device", sig=sig)

@@ -116,7 +116,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     from jax.sharding import NamedSharding, PartitionSpec as P
     from .. import tuning
-    import contextlib
     knobs = tuning.parse(variant)
     rec["tuning"] = knobs
 

@@ -21,7 +21,6 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig, ShapeConfig
 from . import encdec, moe, ssm, transformer, xlstm
-from .layers import chunked_xent
 
 Params = Dict[str, Any]
 

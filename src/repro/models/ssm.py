@@ -16,7 +16,6 @@ stack, and the scan body applies it conditionally on the layer index.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -15,7 +15,6 @@ policy; see EXPERIMENTS.md §Perf for the tuned policies).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -181,7 +181,6 @@ def cache_pspecs(cache_tree: Any, mesh: Mesh) -> Any:
             return assign_spec(shape, prefs, mesh)
         if re.search(r"(ssm|conv|m_state|s_h|s_c)$", ps):
             # (..., B, heads, ...) — batch over DP, heads over TP
-            nb = -(len(shape)) if False else None
             # find batch dim: it is the first dim whose size matches? rely on
             # family layouts: ssm (L,B,nh,ns,hp): B=-4, nh=-3; conv (L,B,4,d)
             if ps.endswith("conv"):

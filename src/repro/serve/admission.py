@@ -27,6 +27,19 @@ The queue itself does no execution and holds no device state; an engine
 ``take_due(now)`` out of it, execute, resolve tickets.  All methods are
 lock-protected so many caller threads can submit concurrently; the clock is
 injectable so tests can fire deadlines deterministically.
+
+Concurrency contract (audited for the background-flusher runtime): the
+internal lock is held only for bucket-dict bookkeeping — never across
+ticket resolution or execution — so ``submit`` cannot block behind a flush.
+Every ``take_*`` method removes whole buckets from the dict *atomically
+under the lock*; a (ticket, item) pair therefore leaves the queue exactly
+once, no matter how ``take_full`` / ``take_due`` / ``take_all`` interleave
+across threads.  That single property is what makes a drain idempotent and
+safe to run concurrently with a flusher's pump: the second taker simply
+finds the bucket gone.  A submission that lands *after* a take has started
+goes into a fresh bucket and is picked up by the next take — never lost,
+never double-flushed.  (``Ticket`` resolution being single-shot is the
+backstop: a logic bug that double-flushed would raise, not clobber.)
 """
 from __future__ import annotations
 

@@ -9,6 +9,7 @@ paper's bitmap intersection at vocab scale.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -16,10 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ArchConfig
 from ..models.model import Model, build_model
 from .admission import Ticket
-from .constrain import ConstraintSet, apply_mask_to_logits
+from .constrain import apply_mask_to_logits
 
 
 @dataclasses.dataclass
@@ -45,6 +45,9 @@ class DecodeServer:
         self.queue: List[Request] = []
         self.ticks = 0
         self._tickets: Dict[int, List[Ticket]] = {}
+        self._work = threading.Event()
+        self._stop_ticker = threading.Event()
+        self._ticker: Optional[threading.Thread] = None
 
     def submit(self, req: Request) -> Ticket:
         """Queue a request; returns a Ticket (same future type as the
@@ -52,11 +55,58 @@ class DecodeServer:
         token list when the request completes.  Callers may keep polling
         ``req.done`` instead — the ticket is additive.  Submitting the
         same Request object twice returns a second ticket; both resolve
-        at its first completion."""
+        at its first completion.  Wakes the background ticker if one is
+        running (:meth:`start`)."""
         self.queue.append(req)
         ticket = Ticket(submitted_at=time.perf_counter(), deadline_us=0.0)
         self._tickets.setdefault(id(req), []).append(ticket)
+        self._work.set()
         return ticket
+
+    # ------------------------------------------------------------------
+    # background ticker (the decode-side twin of the search engine's
+    # background flusher): callers submit-and-wait on tickets, nobody
+    # drives tick() by hand
+    # ------------------------------------------------------------------
+
+    def start(self) -> "DecodeServer":
+        """Start a daemonized background tick loop (idempotent).
+
+        The loop ticks while requests are queued or slots are active and
+        parks on an event otherwise; ``submit`` sets the event.  Demo-grade
+        threading (same caveat as the rest of this server): ticks run only
+        on the ticker thread, so don't call :meth:`tick` /
+        :meth:`run_until_drained` manually while it runs.
+        """
+        if self._ticker is not None and self._ticker.is_alive():
+            return self
+        self._stop_ticker.clear()
+        self._ticker = threading.Thread(
+            target=self._tick_loop, name="repro-decode-ticker", daemon=True)
+        self._ticker.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the ticker (idempotent); by default finish remaining work
+        synchronously so every issued ticket resolves."""
+        thread = self._ticker
+        self._ticker = None
+        if thread is not None:
+            self._stop_ticker.set()
+            self._work.set()
+            thread.join()
+        if drain:
+            self.run_until_drained()
+
+    def _tick_loop(self) -> None:
+        while not self._stop_ticker.is_set():
+            if self.queue or any(s is not None for s in self.slots):
+                self.tick()
+            else:
+                self._work.clear()
+                if self.queue:
+                    continue  # a submit raced the clear: don't sleep on it
+                self._work.wait(timeout=0.05)
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):

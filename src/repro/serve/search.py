@@ -36,11 +36,14 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.engine import BatchedEngine, pow2_tiers, warm_from_plans
+from ..core.engine import (
+    EXEC_COUNTERS, BatchedEngine, pow2_tiers, warm_from_plans,
+)
 from ..exec.plan import SHARD_MIN_G
 from ..core.hashing import default_permutation, random_hash_family
 from ..core.intersect import hashbin, rangroupscan
 from ..core.partition import preprocess_prefix
+from ..exec.adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
 from ..exec.batch import execute_bucket, execute_plan_buckets
 from ..exec.cache import ResultCache
 from ..exec.plan import QueryPlan, ShapeSig, plan_query
@@ -86,7 +89,8 @@ class SearchEngine:
     def __init__(self, postings: Dict[int, np.ndarray], w: int = 256,
                  m: int = 2, seed: int = 0, use_device: bool = False,
                  hashbin_ratio: float = 100.0, result_cache: int = 0,
-                 mesh=None, shard_min_g: int = SHARD_MIN_G):
+                 mesh=None, shard_min_g: int = SHARD_MIN_G,
+                 adaptive_capacity=False):
         self.family = random_hash_family(m, w, seed=seed)
         self.perm = default_permutation(seed)
         self.w, self.m = w, m
@@ -110,18 +114,68 @@ class SearchEngine:
             # build-time adds are done; from here on every index mutation
             # stales the result cache
             self.device.on_mutate(self.cache.bump_generation)
+        # adaptive capacity: pass True (default model) or a CapacityModel to
+        # size survivor buffers from observed survivor counts instead of the
+        # static G/4 rule; the planner consults it, the executor feeds it,
+        # and tier promotions invalidate the result cache + re-warm (below)
+        if isinstance(adaptive_capacity, CapacityModel):
+            self.capacity_model: Optional[CapacityModel] = adaptive_capacity
+        else:
+            self.capacity_model = CapacityModel() if adaptive_capacity else None
+        if self.capacity_model is not None:
+            self.capacity_model.on_promotion(self._on_tier_promotion)
         self.warmed_sigs: List[ShapeSig] = []
+        # adaptive-key -> (representative terms, warmed b_tiers): what a
+        # promotion must re-warm so the new tier's executable is traced
+        # deliberately instead of at first live flush
+        self._warm_reps: Dict[Tuple, Tuple[Tuple, Tuple[int, ...]]] = {}
 
     def plan(self, terms: Sequence[int]) -> QueryPlan:
         """Normalize + route one query (dedup, §3.4 policy, shape sig,
-        shard routing when a mesh is attached)."""
+        shard routing when a mesh is attached, learned capacity tier when
+        an adaptive model is attached)."""
         return plan_query(self.index, terms,
                           hashbin_ratio=self.hashbin_ratio,
                           device=self.device is not None,
                           mesh_shards=(self.device.n_shards
                                        if self.device else 1),
                           shard_min_g=(self.device.shard_min_g
-                                       if self.device else SHARD_MIN_G))
+                                       if self.device else SHARD_MIN_G),
+                          capacity_model=self.capacity_model)
+
+    def _on_tier_promotion(self, key, old_tier: int, new_tier: int) -> None:
+        """Capacity-tier promotion hook (fired by the CapacityModel).
+
+        A promoted tier re-keys the signature's executable, so this is the
+        deliberate invalidation/retrace point: the result cache is
+        invalidated (cached entries' stats/capacity describe the old tier,
+        and in-flight results captured against the old generation must not
+        re-enter).  Whole-cache invalidation is a deliberate tradeoff:
+        cached doc ids are capacity-independent (the overflow re-run keeps
+        results exact), but the cache cannot map its ``(algorithm, terms)``
+        keys back to signatures for a selective drop, and promotions are
+        rare — once per hot signature after ``min_observations`` samples —
+        so the hit-rate dip is transient.  When the signature was
+        compile-warmed, its
+        representative is re-traced at the same batch tiers so the promoted
+        executable is compiled here, at promotion time, not at the next
+        live flush.
+        """
+        self.cache.invalidate()
+        rep = self._warm_reps.get(key)
+        if rep is None or self.device is None:
+            return
+        terms, b_tiers = rep
+        plan = self.plan(list(terms))  # re-plans with the promoted tier
+        if plan.algorithm != "device":
+            return
+        warm_from_plans(
+            [plan], lambda t: self.device.sets[str(t)], top_k=1,
+            b_tiers=b_tiers, use_pallas=self.device.use_pallas,
+            mesh=self.device.mesh, axis=self.device.shard_axis,
+            get_sharded_set=lambda t: self.device.sharded_sets[str(t)])
+        if plan.sig not in self.warmed_sigs:
+            self.warmed_sigs.append(plan.sig)
 
     def add_postings(self, term: int, postings: np.ndarray) -> None:
         """Add or replace one term's posting list after build.
@@ -167,6 +221,17 @@ class SearchEngine:
             b_tiers=b_tiers, use_pallas=self.device.use_pallas,
             mesh=self.device.mesh, axis=self.device.shard_axis,
             get_sharded_set=lambda t: self.device.sharded_sets[str(t)])
+        # remember one representative per warmed signature so an adaptive
+        # capacity-tier promotion can re-warm the new executable (the
+        # warming key follows the learned tier: plans above already carry
+        # the model's current tiers via self.plan)
+        warmed_keys = {adaptive_key(sig) for sig in self.warmed_sigs}
+        for p in plans:
+            if p.algorithm != "device":
+                continue
+            key = adaptive_key(p.sig)
+            if key in warmed_keys and key not in self._warm_reps:
+                self._warm_reps[key] = (p.terms, tuple(b_tiers))
         return self.warmed_sigs
 
     def _cached_result(self, plan: QueryPlan) -> Optional[QueryResult]:
@@ -234,6 +299,7 @@ class SearchEngine:
                 mesh=self.device.mesh,
                 shard_axis=self.device.shard_axis,
                 get_sharded_set=lambda term: self.device.sharded_sets[str(term)],
+                capacity_model=self.capacity_model,
             )
             for i, plan in device_plans:
                 res, stats = by_index[i]
@@ -262,27 +328,57 @@ class AsyncSearchEngine(SearchEngine):
     :class:`~repro.serve.admission.Ticket` back immediately.  Device-routed
     plans accumulate in an :class:`~repro.serve.admission.AdmissionQueue`
     keyed by shape signature; a bucket executes when it fills the
-    power-of-two ``flush_tier`` (at submit time) or when its oldest query's
-    ``deadline_us`` budget expires (at the next :meth:`pump`).  Host-routed
-    and cache-hit queries resolve synchronously inside ``submit`` — they
-    gain nothing from batching.
+    power-of-two ``flush_tier`` or when its oldest query's ``deadline_us``
+    budget expires.  Host-routed and cache-hit queries resolve
+    synchronously inside ``submit`` — they gain nothing from batching.
+
+    Two flush drivers exist:
+
+    - **Manual** (default): a caller-driven loop calls :meth:`pump` on a
+      timer (or sleeps ``admission.next_deadline_in_us()``); full-tier
+      buckets additionally flush inline at submit time.
+    - **Background flusher** (:meth:`start` / :meth:`stop`): a daemonized
+      thread owns the flush cadence — it sleeps exactly until the next
+      deadline, is woken early by every device-routed submit, and pumps.
+      With the flusher running, ``submit`` never executes device work
+      itself (full tiers are flushed by the woken flusher via the
+      ``next_deadline_in_us() == 0`` hint), so submission cadence is fully
+      decoupled from flush cadence.  Each flusher wake-up bumps
+      ``EXEC_COUNTERS["flusher_wakeups"]``.  The flusher sleeps in real
+      time, so it assumes the engine ``clock`` is wall time.
 
     A serving loop looks like::
 
         eng = AsyncSearchEngine(postings, deadline_us=2000, warm_queries=log)
-        tickets = [eng.submit(q) for q in incoming]   # any thread(s)
-        eng.pump()        # flush deadline-due buckets; call on a timer or
-                          # sleep admission.next_deadline_in_us()
-        eng.drain()       # shutdown / test path: flush everything now
+        with eng:                                     # start()s the flusher
+            tickets = [eng.submit(q) for q in incoming]   # any thread(s)
+            for t in tickets:
+                t.wait()
+        # stop() drained in-flight tickets on exit
 
     The result cache defaults ON here (1024 entries) — repeated
     conjunctions are the common case in live logs — and ``use_device``
     defaults True because micro-batching exists for the device path.
-    Thread-safety covers the async API: ``submit`` / ``pump`` / ``drain``
-    serialize on one internal lock.  The inherited synchronous paths
-    (``query`` / ``query_batch`` / ``warm``) touch the shared result cache
-    unlocked — don't interleave them with concurrent submits on the same
-    engine.
+
+    Thread-safety: many threads may ``submit`` concurrently with the
+    flusher (or manual ``pump`` / ``drain`` callers).  ``submit`` holds no
+    engine-wide lock — planning is pure, the result cache and the
+    admission queue are internally locked — so submitters never block
+    behind a bucket execution.  All flushing serializes on one execution
+    lock, and the queue's atomic bucket pops guarantee each ticket is
+    flushed exactly once, which makes ``drain`` idempotent and safe to
+    call while the flusher runs.  The inherited synchronous paths
+    (``query`` / ``query_batch`` / ``warm``) are still single-caller:
+    don't interleave them with concurrent submits on the same engine
+    (except ``_flush``'s own stale-plan fallback, which serializes under
+    the execution lock).
+
+    Adaptive serving: ``adaptive_capacity=True`` (inherited) learns
+    survivor-sized capacity tiers; ``adaptive_deadline=True`` shrinks
+    per-signature flush budgets when the observed arrival rate cannot fill
+    a bucket within the default budget (see ``exec/adaptive.py``).  An
+    explicit per-query ``deadline_us`` always wins over the adaptive
+    budget.
     """
 
     def __init__(self, postings: Dict[int, np.ndarray],
@@ -292,13 +388,27 @@ class AsyncSearchEngine(SearchEngine):
                  warm_queries: Optional[Sequence[Sequence[int]]] = None,
                  warm_top_k: int = 8,
                  warm_b_tiers: Optional[Sequence[int]] = None,
+                 adaptive_deadline=False,
                  **kw):
         kw.setdefault("use_device", True)
         super().__init__(postings, result_cache=result_cache, **kw)
         self.clock = clock
         self.admission = AdmissionQueue(flush_tier=flush_tier,
                                         deadline_us=deadline_us, clock=clock)
-        self._lock = threading.RLock()
+        # one lock serializes all bucket execution (_flush callers); submit
+        # deliberately does not take it — see the class docstring
+        self._exec_lock = threading.RLock()
+        if isinstance(adaptive_deadline, AdaptiveDeadline):
+            self.adaptive_deadline: Optional[AdaptiveDeadline] = adaptive_deadline
+        else:
+            self.adaptive_deadline = (AdaptiveDeadline() if adaptive_deadline
+                                      else None)
+        self._wake = threading.Event()
+        self._stop_flusher = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        self._flusher_lock = threading.Lock()  # start/stop transitions only
+        self._flusher_idle_s = 0.05  # re-check cadence when queue is empty
+        self._flusher_error: Optional[BaseException] = None
         if warm_queries is not None:
             # default tiers cover every partial-flush size up to flush_tier
             # — otherwise a live micro-batch of 2..flush_tier queries would
@@ -307,43 +417,158 @@ class AsyncSearchEngine(SearchEngine):
                 warm_b_tiers = pow2_tiers(flush_tier)
             self.warm(warm_queries, top_k=warm_top_k, b_tiers=warm_b_tiers)
 
+    # ------------------------------------------------------------------
+    # background flusher lifecycle
+    # ------------------------------------------------------------------
+
+    def start(self) -> "AsyncSearchEngine":
+        """Start the background flusher thread (idempotent).
+
+        The thread sleeps until the next admission deadline
+        (``next_deadline_in_us``), wakes early on every device-routed
+        submit, and pumps.  Daemonized, so a forgotten engine never blocks
+        interpreter exit — but call :meth:`stop` for a clean shutdown that
+        drains in-flight tickets.  Returns ``self`` (context-manager
+        friendly).
+        """
+        with self._flusher_lock:
+            if self._flusher is not None and self._flusher.is_alive():
+                return self
+            self._stop_flusher.clear()
+            self._flusher = threading.Thread(
+                target=self._flusher_loop, name="repro-flusher", daemon=True)
+            self._flusher.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the background flusher (idempotent) and, by default, drain.
+
+        Joins the thread first, then flushes every still-pending bucket so
+        no in-flight ticket is left unresolved — the clean-shutdown
+        contract.  ``drain=False`` skips the final flush (tickets stay
+        pending for a later ``drain`` or ``start``).  A ``submit`` racing
+        this call lands in manual-mode behavior (full tiers flush inline);
+        the re-drain below catches its partial bucket in all but a vanishing
+        window — callers who keep submitting after ``stop`` own the
+        leftover queue, exactly as on a never-pumped manual engine.
+        """
+        with self._flusher_lock:
+            thread = self._flusher
+            self._flusher = None
+            if thread is not None:
+                self._stop_flusher.set()
+                self._wake.set()
+                thread.join()
+                self._wake.clear()
+        if drain:
+            self.drain()
+            if self.pending():
+                self.drain()  # a submit raced the join; its bucket is here
+        error, self._flusher_error = self._flusher_error, None
+        if error is not None:
+            raise RuntimeError(
+                "background flusher hit a non-bucket error "
+                "(tickets were still drained)") from error
+
+    @property
+    def running(self) -> bool:
+        """True while the background flusher thread is alive."""
+        thread = self._flusher
+        return thread is not None and thread.is_alive()
+
+    def __enter__(self) -> "AsyncSearchEngine":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False
+
+    def _flusher_loop(self) -> None:
+        """Flusher thread body: sleep exactly as long as the admission
+        queue allows (0 when a full tier is pending, the soonest deadline
+        otherwise, an idle re-check when empty), then pump.  ``submit``
+        sets the wake event to cut any sleep short."""
+        while True:
+            next_us = self.admission.next_deadline_in_us()
+            timeout = (self._flusher_idle_s if next_us is None
+                       else max(0.0, next_us * 1e-6))
+            if timeout > 0:
+                self._wake.wait(timeout)
+            if self._stop_flusher.is_set():
+                return
+            self._wake.clear()
+            EXEC_COUNTERS["flusher_wakeups"] += 1
+            try:
+                self.pump()
+            except Exception as exc:  # keep the runtime alive: bucket-level
+                # failures already resolve their tickets with the error
+                # inside _flush; anything escaping here is a bug we surface
+                # on the next stop() instead of dying silently mid-serve
+                self._flusher_error = exc
+
+    # ------------------------------------------------------------------
+    # admission API
+    # ------------------------------------------------------------------
+
     def submit(self, terms: Sequence[int],
                deadline_us: Optional[float] = None) -> Ticket:
         """Admit one query; returns a Ticket resolving to a QueryResult.
 
         Resolution timing by path: ``empty`` / host-routed / result-cache
         hit — already resolved on return (``wait_us`` 0); device-routed —
-        resolved when its signature bucket flushes (full tier at some
-        ``submit``, deadline at a ``pump``, or a ``drain``).  ``wait_us``
-        on the ticket is the queue wait the deadline budget bounds.
+        resolved when its signature bucket flushes (full tier, deadline,
+        or a ``drain``).  With the background flusher running, submit only
+        queues and wakes the flusher — all device execution happens on the
+        flusher thread.  ``wait_us`` on the ticket is the queue wait the
+        deadline budget bounds.
         """
-        with self._lock:
-            plan = self.plan(terms)
-            cached = self._cached_result(plan)
-            if cached is not None:
-                return self._resolved_now(cached)
-            if plan.algorithm != "device":
-                gen = self.cache.generation
-                result = self._execute_host_plan(plan)
-                self._store(plan, result, generation=gen)
-                return self._resolved_now(result)
-            ticket = self.admission.submit(plan.sig, plan, deadline_us)
+        plan = self.plan(terms)
+        cached = self._cached_result(plan)
+        if cached is not None:
+            return self._resolved_now(cached)
+        if plan.algorithm != "device":
+            gen = self.cache.generation
+            result = self._execute_host_plan(plan)
+            self._store(plan, result, generation=gen)
+            return self._resolved_now(result)
+        if self.adaptive_deadline is not None:
+            key = adaptive_key(plan.sig)
+            self.adaptive_deadline.observe(key, self.clock())
+            if deadline_us is None:
+                deadline_us = self.adaptive_deadline.budget_for(
+                    key, self.admission.deadline_us)
+        ticket = self.admission.submit(plan.sig, plan, deadline_us)
+        if self.running:
+            # the queue reports 0 for full tiers, so waking the flusher
+            # covers both the tier-flush and the recompute-sleep cases
+            self._wake.set()
+            if self.running:
+                return ticket
+            # the flusher stopped between the enqueue and the wake: fall
+            # through to manual-mode behavior so a full tier still flushes
+            # (stop() re-drains to catch the remaining partial-bucket case)
+        with self._exec_lock:
             self._flush(self.admission.take_full())
-            return ticket
+        return ticket
 
     def pump(self) -> int:
         """Flush buckets whose deadline budget has expired (and any that
         filled their tier since the last call).  Returns #buckets flushed.
-        Call this from the serving loop's timer; the deadline guarantee is
-        only as fine-grained as the pump cadence."""
-        with self._lock:
+        The background flusher calls this on its own cadence; manual loops
+        call it on a timer — either way the deadline guarantee is only as
+        fine-grained as the pump cadence."""
+        with self._exec_lock:
             return self._flush(self.admission.take_due())
 
     def drain(self) -> int:
         """Flush every pending bucket now (shutdown / end-of-batch / test
-        path).  Returns #buckets flushed; afterwards every issued ticket is
-        resolved."""
-        with self._lock:
+        path).  Returns #buckets flushed; afterwards every ticket issued
+        *before* the call is resolved.  Idempotent and safe to call while
+        the background flusher runs: bucket pops are atomic, so a bucket
+        the flusher already took is simply not taken again, and the
+        execution lock makes this call wait out any in-flight flush (whose
+        tickets therefore also resolve before drain returns)."""
+        with self._exec_lock:
             return self._flush(self.admission.take_all())
 
     def pending(self) -> int:
@@ -356,7 +581,8 @@ class AsyncSearchEngine(SearchEngine):
         return ticket
 
     def _flush(self, buckets) -> int:
-        """Execute flushed buckets and resolve their tickets.
+        """Execute flushed buckets and resolve their tickets.  Callers
+        must hold ``_exec_lock`` (pump / drain / inline tier flush do).
 
         One ``execute_bucket`` call per (partial) bucket — one jit
         execution plus rare overflow re-runs; ``wait_us`` is measured from
@@ -406,6 +632,7 @@ class AsyncSearchEngine(SearchEngine):
                     mesh=self.device.mesh,
                     shard_axis=self.device.shard_axis,
                     get_sharded_set=lambda term: self.device.sharded_sets[str(term)],
+                    capacity_model=self.capacity_model,
                 )
             except Exception as exc:
                 for ticket, _ in entries:

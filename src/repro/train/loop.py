@@ -24,7 +24,7 @@ import numpy as np
 
 from ..models.model import Model
 from ..optim import adamw
-from ..parallel.sharding import batch_pspecs, shardings_of
+from ..parallel.sharding import shardings_of
 from . import checkpoint as ckpt
 from .step import abstract_params, build_train_step
 
@@ -45,7 +45,7 @@ def train(model: Model, mesh, data, loop_cfg: LoopConfig,
           opt_cfg: Optional[adamw.AdamWConfig] = None,
           microbatch: int = 1,
           log_fn: Callable[[str], None] = print) -> Dict[str, Any]:
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     step_fn, (p_specs, o_specs), opt_cfg = build_train_step(
         model, mesh, opt_cfg=opt_cfg, microbatch=microbatch)

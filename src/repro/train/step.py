@@ -14,8 +14,7 @@ Everything returns (fn, in_shardings, out_shardings) ready for
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,363 @@
+"""Tests for the autonomous serving runtime: the telemetry-driven adaptive
+capacity/deadline controllers (``exec/adaptive.py``) and the background
+flusher thread (``AsyncSearchEngine.start/stop``).
+
+Covers the adaptive contract end to end: cold-start falls back to the
+static G/4 rule, a hot signature's learned tier converges from survivor
+telemetry, a replayed overflow workload stops paying re-runs, tier
+promotion invalidates the result cache and re-warms the promoted
+executable; and the flusher contract: no manual ``pump`` needed, clean
+start/stop with no dangling threads, results bit-identical to the
+synchronous ``query_batch`` oracle, and race-freedom under submitter
+threads hammering during flushes with concurrent (idempotent) drains.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EXEC_COUNTERS, default_capacity
+from repro.exec.adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
+from repro.exec.plan import ShapeSig
+from repro.serve.search import (
+    AsyncSearchEngine, SearchEngine, zipf_query_log,
+)
+from repro.data.pipeline import inverted_index, zipf_corpus
+
+
+@pytest.fixture(scope="module")
+def postings():
+    docs = zipf_corpus(2500, vocab=500, mean_len=30, seed=3)
+    return inverted_index(docs)
+
+
+@pytest.fixture(scope="module")
+def overflow_postings():
+    """Two near-identical dense terms: every group tuple of [1, 2] survives
+    phase 1 (the sets share all elements), so survivors ≈ G > G/4 and the
+    static capacity rule is guaranteed to overflow."""
+    rng = np.random.default_rng(0)
+    dense = rng.choice(100_000, size=2048, replace=False).astype(np.uint32)
+    sparse = rng.choice(100_000, size=300, replace=False).astype(np.uint32)
+    return {1: dense, 2: dense.copy(), 3: sparse}
+
+
+# ---------------------------------------------------------------------------
+# CapacityModel unit behavior
+# ---------------------------------------------------------------------------
+
+def _sig(ts=(9, 9), shards=1, capacity=None):
+    return ShapeSig(k=len(ts), ts=tuple(ts), gmaxes=(8,) * len(ts),
+                    capacity_tier=capacity or default_capacity(ts),
+                    shards=shards)
+
+
+def test_cold_start_falls_back_to_static_rule():
+    model = CapacityModel(min_observations=8)
+    sig = _sig()
+    key = adaptive_key(sig)
+    assert model.capacity_for(key, default_capacity(sig.ts)) == \
+        default_capacity(sig.ts)
+    # fewer than min_observations samples: still cold
+    model.observe_bucket(sig, [{"tuples_survived": 400}] * 7)
+    assert model.capacity_for(key, default_capacity(sig.ts)) == \
+        default_capacity(sig.ts)
+    assert EXEC_COUNTERS["adaptive_promotions"] == 0
+
+
+def test_learned_tier_converges_for_hot_sig():
+    model = CapacityModel(min_observations=8, quantile=0.99, margin=1.25)
+    sig = _sig(ts=(9, 9))                       # G = 512, static tier 128
+    key = adaptive_key(sig)
+    model.observe_bucket(sig, [{"tuples_survived": 200}] * 8)
+    # 200 * 1.25 = 250 -> pow2 ceiling 256, within [64, 512]
+    assert model.capacity_for(key, 128) == 256
+    assert EXEC_COUNTERS["adaptive_promotions"] == 1
+    # more of the same: tier is stable, no flapping promotions
+    model.observe_bucket(sig, [{"tuples_survived": 200}] * 8)
+    assert model.capacity_for(key, 128) == 256
+    assert EXEC_COUNTERS["adaptive_promotions"] == 1
+    # learned tiers clamp to G even under an extreme quantile observation
+    model.observe_bucket(sig, [{"tuples_survived": 512}] * 32)
+    assert model.capacity_for(key, 128) <= 512
+
+
+def test_learned_tier_can_shrink_below_static_rule():
+    model = CapacityModel(min_observations=8)
+    sig = _sig(ts=(9, 9))                       # static tier G/4 = 128
+    key = adaptive_key(sig)
+    model.observe_bucket(sig, [{"tuples_survived": 10}] * 8)
+    # 10 * 1.25 -> pow2 16, floored at 64: less phase-2 work than G/4
+    assert model.capacity_for(key, 128) == 64
+    assert EXEC_COUNTERS["adaptive_promotions"] == 1
+
+
+def test_sharded_stats_observe_per_shard_survivors():
+    model = CapacityModel(min_observations=4)
+    sig = _sig(ts=(9, 9), shards=4)
+    key = adaptive_key(sig)
+    stats = [{"n_shards": 4, "max_shard_survivors": 50,
+              "tuples_survived": 120}] * 4
+    model.observe_bucket(sig, stats)
+    # effective requirement is max_shard * shards = 200 (the per-shard
+    # buffer binds), not the whole-query 120
+    assert model.capacity_for(key, 128) == 256
+
+
+def test_overflow_saved_counter():
+    model = CapacityModel(min_observations=64)  # stay cold: isolate counter
+    learned = _sig(ts=(9, 9), capacity=256)     # pretend tier already learned
+    model.observe_bucket(learned, [{"tuples_survived": 200}])
+    # 200 > static 128 but fit the learned 256: one saved re-run
+    assert EXEC_COUNTERS["adaptive_overflow_saved"] == 1
+    static = _sig(ts=(9, 9))                    # static tier: nothing saved
+    model.observe_bucket(static, [{"tuples_survived": 200}])
+    assert EXEC_COUNTERS["adaptive_overflow_saved"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Adaptive capacity through the serving stack
+# ---------------------------------------------------------------------------
+
+def test_plan_consults_model_and_replay_has_zero_reruns(overflow_postings):
+    model = CapacityModel(min_observations=4)
+    eng = SearchEngine(overflow_postings, use_device=True,
+                       adaptive_capacity=model, result_cache=0)
+    static_sig = eng.plan([1, 2]).sig
+    assert static_sig.capacity_tier == default_capacity(static_sig.ts)
+
+    EXEC_COUNTERS.reset()
+    eng.query_batch([[1, 2]] * 6)               # static tier overflows
+    assert EXEC_COUNTERS["rerun_calls"] >= 1
+    assert EXEC_COUNTERS["adaptive_promotions"] >= 1
+    learned_sig = eng.plan([1, 2]).sig
+    assert learned_sig.capacity_tier > static_sig.capacity_tier
+
+    EXEC_COUNTERS.reset()
+    results = eng.query_batch([[1, 2]] * 6)     # replay: learned tier holds
+    assert EXEC_COUNTERS["rerun_calls"] == 0
+    assert EXEC_COUNTERS["adaptive_overflow_saved"] == 6
+    oracle = np.sort(np.intersect1d(overflow_postings[1],
+                                    overflow_postings[2]))
+    for r in results:
+        assert np.array_equal(r.doc_ids, oracle)
+
+
+def test_tier_promotion_invalidates_stale_cache_entries(overflow_postings):
+    model = CapacityModel(min_observations=4)
+    eng = SearchEngine(overflow_postings, use_device=True,
+                       adaptive_capacity=model, result_cache=64)
+    first = eng.query([1, 3])
+    assert not first.stats.get("cached")
+    assert eng.query([1, 3]).stats.get("cached") is True   # primed
+    # drive the dense sig past min_observations -> promotion fires and
+    # invalidates the cache (cache disabled for the driver queries? no —
+    # repeats would hit the cache, so vary nothing: the cache returns hits
+    # for [1,2] repeats, but misses still execute once per generation)
+    EXEC_COUNTERS.reset()
+    eng.cache.clear()                          # force executions to observe
+    eng.query_batch([[1, 2]] * 6)
+    assert EXEC_COUNTERS["adaptive_promotions"] >= 1
+    refreshed = eng.query([1, 3])
+    assert not refreshed.stats.get("cached")   # promotion invalidated it
+    assert np.array_equal(refreshed.doc_ids, first.doc_ids)
+
+
+def test_promotion_rewarm_traces_promoted_executable(overflow_postings):
+    from repro.core.engine import clear_exec_jit_cache
+
+    model = CapacityModel(min_observations=4)
+    eng = SearchEngine(overflow_postings, use_device=True,
+                       adaptive_capacity=model, result_cache=0)
+    clear_exec_jit_cache()
+    eng.warm([[1, 2]], top_k=1, b_tiers=(1,))
+    EXEC_COUNTERS.reset()
+    eng.query_batch([[1, 2]] * 6)              # overflow -> learn -> promote
+    assert EXEC_COUNTERS["adaptive_promotions"] >= 1
+    # the promotion hook re-warmed the promoted signature at the warmed
+    # tiers, so a live single-query bucket compiles nothing now
+    assert EXEC_COUNTERS["warm_executions"] >= 1
+    EXEC_COUNTERS.reset()
+    eng.query([1, 2])
+    assert EXEC_COUNTERS["batch_calls"] >= 1
+    assert EXEC_COUNTERS["batch_traces"] == 0
+
+
+def test_promotion_rewarm_traces_the_learned_tier_executable():
+    """Regression: the re-warm must execute at the PROMOTED capacity tier.
+    Warming the static tier would trace an executable no live bucket ever
+    runs — here the learned tier (256) sits strictly between the static
+    rule (128) and G (512), so the static-tier trace can't mask the miss.
+    """
+    from repro.core.engine import clear_exec_jit_cache
+
+    rng = np.random.default_rng(7)
+    pool = rng.choice(1 << 20, size=2 * 8192, replace=False).astype(np.uint32)
+    a, b = pool[:8192], pool[8192:]
+    b[:64] = a[:64]                            # small real overlap
+    model = CapacityModel(min_observations=4)
+    eng = SearchEngine({1: a, 2: b}, use_device=True,
+                       adaptive_capacity=model, result_cache=0)
+    sig = eng.plan([1, 2]).sig
+    assert sig.ts[-1] == 9 and sig.capacity_tier == 128   # static G/4 rule
+    clear_exec_jit_cache()
+    eng.warm([[1, 2]], top_k=1, b_tiers=(1,))
+    EXEC_COUNTERS.reset()
+    # force a promotion to a mid tier: quantile 150 * 1.25 -> pow2 256
+    model.observe_bucket(sig, [{"tuples_survived": 150}] * 4)
+    assert EXEC_COUNTERS["adaptive_promotions"] == 1
+    assert eng.plan([1, 2]).sig.capacity_tier == 256
+    assert EXEC_COUNTERS["warm_executions"] >= 1          # hook re-warmed
+    EXEC_COUNTERS.reset()
+    eng.query([1, 2])                          # first live query, tier 256
+    assert EXEC_COUNTERS["batch_calls"] >= 1
+    assert EXEC_COUNTERS["rerun_calls"] == 0   # real survivors << 256
+    assert EXEC_COUNTERS["batch_traces"] == 0  # promoted tier pre-traced
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveDeadline
+# ---------------------------------------------------------------------------
+
+def test_adaptive_deadline_budget_policy():
+    ctl = AdaptiveDeadline(min_observations=4, alpha=1.0, min_fraction=0.125)
+    key = ("sig",)
+    assert ctl.budget_for(key, 2000.0) == 2000.0          # cold: default
+    for i in range(6):
+        ctl.observe(key, i * 0.000_100)                   # 100 us gaps: hot
+    assert ctl.budget_for(key, 2000.0) == 2000.0          # tier fires anyway
+    slow = ("slow",)
+    for i in range(6):
+        ctl.observe(slow, i * 0.100)                      # 100 ms gaps
+    budget = ctl.budget_for(slow, 2000.0)
+    assert budget == pytest.approx(250.0)                 # clamped floor
+    mid = ("mid",)
+    for i in range(6):
+        ctl.observe(mid, i * 0.004)                       # 4 ms gaps
+    assert ctl.budget_for(mid, 2000.0) == pytest.approx(1000.0)
+
+
+def test_adaptive_deadline_shrinks_ticket_budget(postings):
+    class FakeClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clk = FakeClock()
+    eng = AsyncSearchEngine(postings, clock=clk, seed=3, deadline_us=2000.0,
+                            flush_tier=8, result_cache=0,
+                            adaptive_deadline=AdaptiveDeadline(
+                                min_observations=3, alpha=1.0))
+    q = next(q for q in zipf_query_log(sorted(eng.index), 32, seed=2)
+             if eng.plan(q).algorithm == "device")
+    tickets = []
+    for _ in range(6):
+        tickets.append(eng.submit(q if not tickets else q))
+        clk.t += 0.050                                    # 50 ms gaps: cold sig
+        eng.drain()
+    # after warm-up the learned budget is far below the 2 ms default
+    assert tickets[-1].deadline_us < 2000.0
+    assert tickets[0].deadline_us == 2000.0               # cold start: default
+
+
+# ---------------------------------------------------------------------------
+# Background flusher
+# ---------------------------------------------------------------------------
+
+def _flusher_threads():
+    return [t for t in threading.enumerate() if t.name == "repro-flusher"]
+
+
+def test_flusher_start_stop_leaves_no_dangling_threads(postings):
+    assert _flusher_threads() == []
+    eng = AsyncSearchEngine(postings, seed=3, flush_tier=8, result_cache=0)
+    eng.start()
+    eng.start()                                # idempotent
+    assert len(_flusher_threads()) == 1 and eng.running
+    eng.stop()
+    assert _flusher_threads() == [] and not eng.running
+    # restartable, and the context manager form cleans up too
+    with eng:
+        assert len(_flusher_threads()) == 1
+    assert _flusher_threads() == []
+
+
+def test_flusher_resolves_tickets_without_manual_pump(postings):
+    eng = AsyncSearchEngine(postings, seed=3, deadline_us=2000.0,
+                            flush_tier=8, result_cache=0)
+    q = next(q for q in zipf_query_log(sorted(eng.index), 8, seed=2)
+             if eng.plan(q).algorithm == "device")
+    with eng:
+        ticket = eng.submit(q)
+        assert ticket.wait(timeout=30.0), "flusher never flushed the bucket"
+    assert ticket.error is None
+    assert EXEC_COUNTERS["flusher_wakeups"] >= 1
+    oracle = SearchEngine(postings, use_device=True, seed=3).query(q)
+    assert np.array_equal(ticket.value.doc_ids, oracle.doc_ids)
+
+
+def test_flusher_bit_identical_to_query_batch_on_zipf_workload(postings):
+    """Acceptance: flusher on, zero manual pump() calls, 256-query zipf
+    workload — every async result bit-identical to the synchronous
+    query_batch oracle."""
+    log = zipf_query_log(sorted(SearchEngine(postings, seed=3).index),
+                         256, seed=11)
+    eng = AsyncSearchEngine(postings, seed=3, deadline_us=2000.0,
+                            flush_tier=8, result_cache=1024)
+    with eng:
+        tickets = [eng.submit(q) for q in log]
+        for t in tickets:
+            assert t.wait(timeout=60.0)
+    assert all(t.error is None for t in tickets)
+    oracle = SearchEngine(postings, use_device=True, seed=3).query_batch(log)
+    for q, t, o in zip(log, tickets, oracle):
+        assert np.array_equal(t.value.doc_ids, o.doc_ids), q
+
+
+def test_submit_hammering_during_flush_and_idempotent_drain(postings):
+    """Regression (lock-scope audit): submitter threads hammering while the
+    flusher executes buckets, with concurrent drain() calls racing it —
+    every ticket resolves exactly once (single-shot resolution would raise
+    inside the flusher otherwise) with a correct result."""
+    eng = AsyncSearchEngine(postings, seed=3, deadline_us=500.0,
+                            flush_tier=4, result_cache=0)
+    log = [q for q in zipf_query_log(sorted(eng.index), 48, seed=5)
+           if eng.plan(q).algorithm == "device"][:32]
+    eng.query_batch(log)                       # pre-compile outside the race
+    results: dict = {}
+    errors = []
+
+    def submitter(worker: int):
+        try:
+            for i, q in enumerate(log):
+                ticket = eng.submit(q)
+                assert ticket.wait(timeout=30.0)
+                results[(worker, i)] = (q, ticket)
+                time.sleep(0.0005)
+        except Exception as exc:               # pragma: no cover - fail path
+            errors.append(exc)
+
+    with eng:
+        workers = [threading.Thread(target=submitter, args=(w,))
+                   for w in range(4)]
+        for w in workers:
+            w.start()
+        # hammer drain concurrently with the flusher's own pumps
+        for _ in range(20):
+            eng.drain()
+            time.sleep(0.002)
+        for w in workers:
+            w.join(timeout=60.0)
+        assert not any(w.is_alive() for w in workers)
+    assert not errors
+    assert eng.pending() == 0
+    oracle = {tuple(q): r.doc_ids
+              for q, r in zip(log, SearchEngine(postings, use_device=True,
+                                                seed=3).query_batch(log))}
+    assert len(results) == 4 * len(log)
+    for q, ticket in results.values():
+        assert ticket.error is None
+        assert np.array_equal(ticket.value.doc_ids, oracle[tuple(q)])

@@ -1,0 +1,129 @@
+"""Tests for the CI bench-regression gate (``tools/check_bench.py``)."""
+import importlib.util
+import json
+import pathlib
+import sys
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    pathlib.Path(__file__).resolve().parent.parent / "tools"
+    / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_SPEC)
+sys.modules["check_bench"] = check_bench   # dataclasses needs it registered
+_SPEC.loader.exec_module(check_bench)
+
+
+def _batched(qps: float, queries: int = 256):
+    return {"queries": queries, "n_docs": 20000, "batched_qps": qps,
+            "speedup": 4.0}
+
+
+def _admission(p99: float, qps: float = 4000.0, queries: int = 512):
+    return {"queries": queries, "n_docs": 12000,
+            "runs": [{"deadline_us": 2000.0, "served_qps": qps,
+                      "p99_wait_us": p99, "p99_wait_within_deadline": True}]}
+
+
+def _write(tmp_path, sub: str, name: str, payload: dict) -> pathlib.Path:
+    d = tmp_path / sub
+    d.mkdir(exist_ok=True)
+    (d / name).write_text(json.dumps(payload))
+    return d
+
+
+def test_identical_runs_pass(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_batched_qps.json", _batched(5000))
+    cur = _write(tmp_path, "cur", "BENCH_batched_qps.json", _batched(5000))
+    assert check_bench.check_dirs(base, cur) == []
+
+
+def test_qps_drop_over_30pct_fails(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_batched_qps.json", _batched(5000))
+    cur = _write(tmp_path, "cur", "BENCH_batched_qps.json", _batched(3000))
+    failures = check_bench.check_dirs(base, cur)
+    assert len(failures) == 1 and "batched_qps" in failures[0]
+    # a 25% drop stays within the 30% budget
+    cur2 = _write(tmp_path, "cur2", "BENCH_batched_qps.json", _batched(3750))
+    assert check_bench.check_dirs(base, cur2) == []
+
+
+def test_p99_wait_2x_regression_fails(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_admission_latency.json",
+                  _admission(p99=1900.0))
+    cur = _write(tmp_path, "cur", "BENCH_admission_latency.json",
+                 _admission(p99=4200.0))
+    failures = check_bench.check_dirs(base, cur)
+    assert len(failures) == 1 and "p99_wait_us" in failures[0]
+    cur2 = _write(tmp_path, "cur2", "BENCH_admission_latency.json",
+                  _admission(p99=3500.0))
+    assert check_bench.check_dirs(base, cur2) == []
+
+
+def test_scale_mismatch_skips_relative_but_keeps_absolute(tmp_path):
+    # seed baseline: full-size run; current: smoke run — QPS must not gate,
+    # but the absolute invariants still do
+    base = _write(tmp_path, "base", "BENCH_admission_latency.json",
+                  _admission(p99=1900.0, qps=4000.0, queries=512))
+    bad = _admission(p99=1900.0, qps=10.0, queries=128)
+    bad["runs"][0]["p99_wait_within_deadline"] = False
+    cur = _write(tmp_path, "cur", "BENCH_admission_latency.json", bad)
+    failures = check_bench.check_dirs(base, cur)
+    assert len(failures) == 1
+    assert "p99_wait_within_deadline" in failures[0]
+
+
+def test_missing_baseline_uses_absolute_rules_only(tmp_path):
+    base = tmp_path / "empty"
+    base.mkdir()
+    cur = _write(tmp_path, "cur", "BENCH_batched_qps.json", _batched(5000))
+    assert check_bench.check_dirs(base, cur) == []
+    slow = _batched(5000)
+    slow["speedup"] = 0.5                      # batching slower than loop
+    cur2 = _write(tmp_path, "cur2", "BENCH_batched_qps.json", slow)
+    failures = check_bench.check_dirs(base, cur2)
+    assert len(failures) == 1 and "speedup" in failures[0]
+
+
+def test_absolute_list_rule_works_without_baseline(tmp_path):
+    """Regression: absolute invariants on aligned-list paths (runs[...])
+    must evaluate against the current run alone — no baseline file may
+    neither fail them as 'metric missing' nor skip them."""
+    base = tmp_path / "empty"
+    base.mkdir()
+    cur = _write(tmp_path, "cur", "BENCH_admission_latency.json",
+                 _admission(p99=1900.0))
+    assert check_bench.check_dirs(base, cur) == []
+    bad = _admission(p99=1900.0)
+    bad["runs"][0]["p99_wait_within_deadline"] = False
+    cur2 = _write(tmp_path, "cur2", "BENCH_admission_latency.json", bad)
+    failures = check_bench.check_dirs(base, cur2)
+    assert len(failures) == 1 and "p99_wait_within_deadline" in failures[0]
+
+
+def test_changed_sweep_skips_instead_of_failing(tmp_path):
+    """Regression: a current run whose sweep points no longer align with
+    the baseline (e.g. new deadline values) is a config change — relative
+    rules skip, they don't report 'metric missing'."""
+    base_payload = _admission(p99=1900.0)
+    base_payload["runs"][0]["deadline_us"] = 9999.0    # old sweep point
+    base = _write(tmp_path, "base", "BENCH_admission_latency.json",
+                  base_payload)
+    cur = _write(tmp_path, "cur", "BENCH_admission_latency.json",
+                 _admission(p99=1900.0))               # new sweep point
+    assert check_bench.check_dirs(base, cur) == []
+    # but a metric genuinely absent from the current run still fails
+    broken = _admission(p99=1900.0)
+    del broken["runs"]
+    cur2 = _write(tmp_path, "cur2", "BENCH_admission_latency.json", broken)
+    failures = check_bench.check_dirs(
+        _write(tmp_path, "base2", "BENCH_admission_latency.json",
+               _admission(p99=1900.0)), cur2)
+    assert failures and all("metric missing" in f for f in failures)
+
+
+def test_empty_current_dir_fails(tmp_path):
+    base = tmp_path / "b"
+    cur = tmp_path / "c"
+    base.mkdir(), cur.mkdir()
+    failures = check_bench.check_dirs(base, cur)
+    assert failures and "no BENCH_" in failures[0]

@@ -1,7 +1,5 @@
 """Substrate tests: checkpointing, data determinism, compression, serving,
 dedup, elastic restore, train-loop resume."""
-import dataclasses
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -165,9 +163,9 @@ def test_train_loop_resume_exact(tmp_path):
                                 log_every=100), opt_cfg=opt,
                      log_fn=lambda *_: None)
     # run 5, checkpoint, resume to 10
-    out_a = train(model, mesh, data,
-                  LoopConfig(steps=5, ckpt_dir=d, ckpt_every=5, log_every=100),
-                  opt_cfg=opt, log_fn=lambda *_: None)
+    train(model, mesh, data,
+          LoopConfig(steps=5, ckpt_dir=d, ckpt_every=5, log_every=100),
+          opt_cfg=opt, log_fn=lambda *_: None)
     out_b = train(model, mesh, data,
                   LoopConfig(steps=10, ckpt_dir=d, ckpt_every=100,
                              log_every=100), opt_cfg=opt,

@@ -1,0 +1,208 @@
+#!/usr/bin/env python
+"""CI perf-regression gate over the serving BENCH_*.json artifacts.
+
+Compares the current run's benchmark JSONs against a baseline directory
+(the previous main run's ``bench-json`` artifact, or — when none exists —
+the committed repo-root ``BENCH_*.json`` files) and fails the build when a
+guarded metric regresses past its threshold:
+
+- throughput (``*_qps``) may not drop below 70% of baseline,
+- tail wait (``p99_wait_us``) may not regress past 2x baseline,
+- plus absolute invariants that hold at any scale: async results stay
+  bit-identical to the oracle, deadline-bounded waits stay within budget,
+  and the adaptive replay stays at zero overflow re-runs.
+
+Relative rules only fire when the baseline ran the same workload shape
+(same ``queries`` / ``n_docs``): the committed baselines are full-size
+runs while CI runs smoke sizes, and comparing a 256-query QPS against a
+64-query QPS would gate on corpus scale, not code.  Absolute rules always
+fire.
+
+Usage:
+    python tools/check_bench.py --baseline-dir baseline \
+        --current-dir bench-artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import sys
+from typing import Iterator, List, Optional, Tuple
+
+# metric kinds: relative (need a same-scale baseline) ---------------------
+#   min_ratio  current >= baseline * threshold        (bigger is better)
+#   max_ratio  current <= max(baseline, floor) * threshold (smaller better)
+# absolute (baseline-free invariants) -------------------------------------
+#   min_abs    current >= threshold
+#   max_abs    current <= threshold
+#   equals     current == threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    path: str            # dotted; "runs[deadline_us]" aligns list items
+    kind: str
+    threshold: float
+    floor: float = 0.0   # max_ratio: noise floor for tiny baselines
+
+    @property
+    def relative(self) -> bool:
+        return self.kind in ("min_ratio", "max_ratio")
+
+
+RULES = {
+    "BENCH_batched_qps.json": [
+        Rule("batched_qps", "min_ratio", 0.70),
+        Rule("speedup", "min_abs", 1.0),
+    ],
+    "BENCH_admission_latency.json": [
+        Rule("runs[deadline_us].served_qps", "min_ratio", 0.70),
+        Rule("runs[deadline_us].p99_wait_us", "max_ratio", 2.0, floor=200.0),
+        Rule("runs[deadline_us].p99_wait_within_deadline", "equals", 1),
+    ],
+    "BENCH_adaptive_qps.json": [
+        Rule("flusher.background_flusher.served_qps", "min_ratio", 0.70),
+        Rule("flusher.background_flusher.p99_wait_us", "max_ratio", 2.0,
+             floor=1000.0),
+        Rule("identical_to_query_batch", "equals", 1),
+        Rule("adaptive.rerun_calls_after", "max_abs", 0),
+        Rule("adaptive.qps_ratio_vs_static", "min_abs", 0.70),
+    ],
+    "BENCH_sharded_qps.json": [],  # multi-device artifact: no gate yet
+}
+
+_SCALE_KEYS = ("queries", "n_docs", "vocab", "vocab_kept", "distinct_pool")
+
+
+def _walk(base, cur, segs: List[str], label: str
+          ) -> Iterator[Tuple[str, object, object]]:
+    """Yield (label, baseline_value, current_value) for a rule path.
+
+    A segment ``name[key]`` descends into the list ``name`` on both sides,
+    pairing items whose ``key`` fields match (unpaired items are skipped —
+    a changed sweep is a config change, not a regression).
+    """
+    if not segs:
+        yield (label, base, cur)
+        return
+    seg, rest = segs[0], segs[1:]
+    m = re.fullmatch(r"(\w+)\[(\w+)\]", seg)
+    if m:
+        name, align = m.group(1), m.group(2)
+        base_items = {item.get(align): item for item in base.get(name, [])}
+        for item in (cur or {}).get(name, []):
+            mate = base_items.get(item.get(align))
+            if mate is not None:
+                yield from _walk(mate, item, rest,
+                                 f"{label}.{name}[{align}={item.get(align)}]")
+        return
+    if not isinstance(cur, dict) or seg not in cur:
+        return
+    base_val = base.get(seg) if isinstance(base, dict) else None
+    yield from _walk(base_val, cur[seg], rest, f"{label}.{seg}")
+
+
+def _same_scale(base: dict, cur: dict) -> bool:
+    return all(base.get(k) == cur.get(k)
+               for k in _SCALE_KEYS if k in base or k in cur)
+
+
+def check_file(name: str, base: Optional[dict], cur: dict) -> List[str]:
+    """Return a list of human-readable failures for one benchmark file."""
+    failures = []
+    comparable = base is not None and _same_scale(base, cur)
+    if base is not None and not comparable:
+        print(f"  {name}: baseline ran a different workload shape "
+              "(seed baseline?) — relative rules skipped")
+    for rule in RULES.get(name, []):
+        if rule.relative and not comparable:
+            continue
+        # absolute rules evaluate the current run alone: walk it against
+        # itself so list alignment never depends on what the baseline has
+        walk_base = cur if not rule.relative else (base or {})
+        pairs = list(_walk(walk_base, cur, rule.path.split("."), name))
+        if not pairs:
+            # distinguish "metric gone from the current run" (a regression
+            # of the benchmark contract) from "nothing aligned with the
+            # baseline" (a sweep/config change — documented as skipped)
+            if list(_walk(cur, cur, rule.path.split("."), name)):
+                print(f"  {name}.{rule.path}: no baseline-aligned items "
+                      "(sweep changed?) — skipped")
+            else:
+                failures.append(f"{name}.{rule.path}: metric missing")
+            continue
+        for label, b, c in pairs:
+            if rule.kind == "min_abs" and not c >= rule.threshold:
+                failures.append(
+                    f"{label}: {c:.4g} < required {rule.threshold:.4g}")
+            elif rule.kind == "max_abs" and not c <= rule.threshold:
+                failures.append(
+                    f"{label}: {c:.4g} > allowed {rule.threshold:.4g}")
+            elif rule.kind == "equals" and not bool(c) == bool(rule.threshold):
+                failures.append(
+                    f"{label}: {c!r} != expected {bool(rule.threshold)!r}")
+            elif rule.kind == "min_ratio":
+                if b is None:
+                    continue
+                limit = b * rule.threshold
+                if not c >= limit:
+                    failures.append(
+                        f"{label}: {c:.4g} < {rule.threshold:.0%} of "
+                        f"baseline {b:.4g}")
+            elif rule.kind == "max_ratio":
+                if b is None:
+                    continue
+                limit = max(b, rule.floor) * rule.threshold
+                if not c <= limit:
+                    failures.append(
+                        f"{label}: {c:.4g} > {rule.threshold:g}x baseline "
+                        f"{b:.4g} (floor {rule.floor:g})")
+    return failures
+
+
+def check_dirs(baseline_dir: pathlib.Path,
+               current_dir: pathlib.Path) -> List[str]:
+    failures: List[str] = []
+    checked = 0
+    for name in sorted(RULES):
+        cur_path = current_dir / name
+        if not cur_path.exists():
+            continue
+        cur = json.loads(cur_path.read_text())
+        base_path = baseline_dir / name
+        base = (json.loads(base_path.read_text())
+                if base_path.exists() else None)
+        if base is None:
+            print(f"  {name}: no baseline — absolute rules only")
+        file_failures = check_file(name, base, cur)
+        status = "FAIL" if file_failures else "ok"
+        print(f"  {name}: {status}")
+        failures.extend(file_failures)
+        checked += 1
+    if checked == 0:
+        failures.append(f"no BENCH_*.json found under {current_dir}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-dir", type=pathlib.Path, required=True)
+    ap.add_argument("--current-dir", type=pathlib.Path, required=True)
+    args = ap.parse_args()
+    print(f"bench regression gate: {args.current_dir} vs "
+          f"baseline {args.baseline_dir}")
+    failures = check_dirs(args.baseline_dir, args.current_dir)
+    if failures:
+        print("\nREGRESSIONS:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("no benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
