@@ -23,8 +23,12 @@ def run(quick: bool = True):
         t0 = time.perf_counter()
         preprocess_fixed(vals, w=64, family=fam1)
         t_fixed = time.perf_counter() - t0
-        t0 = time.perf_counter(); compress_lowbits(idx); t_low = time.perf_counter() - t0
-        t0 = time.perf_counter(); delta_encode(np.sort(vals)); t_delta = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compress_lowbits(idx)
+        t_low = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        delta_encode(np.sort(vals))
+        t_delta = time.perf_counter() - t0
         rows.append({"figure": "fig10", "n": n,
                      "sort_ms": round(t_sort * 1e3, 2),
                      "rangroupscan_ms": round(t_prefix * 1e3, 2),

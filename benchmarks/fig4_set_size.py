@@ -16,7 +16,8 @@ def run(quick: bool = True):
         a, b = gen_pair(n, n, max(1, n // 100), seed=n)
         truth = truth_of([a, b])
         algos = paper_algos([a, b], w=256, m=2)
-        base = ["Merge", "SvS", "Hash", "Lookup"] + ([] if quick else ["SkipList", "BaezaYates", "BPP"])
+        base = ["Merge", "SvS", "Hash", "Lookup"] + (
+            [] if quick else ["SkipList", "BaezaYates", "BPP"])
         algos.update(baseline_algos([a, b], include=base))
         times = check_and_time(algos, truth, reps=2 if quick else 3)
         for name, us in times.items():

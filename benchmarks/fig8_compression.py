@@ -59,6 +59,7 @@ def run(quick: bool = True):
     ]
     rows.append({"figure": "fig8", "algorithm": "space_ratio_lowbits_vs_delta",
                  "n": n, "us": None,
-                 "bits_per_elem": round(ca.storage_bits() / ia.n / rep["merge_delta"], 2),
+                 "bits_per_elem": round(
+                     ca.storage_bits() / ia.n / rep["merge_delta"], 2),
                  "interp": False})
     return rows

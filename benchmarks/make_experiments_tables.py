@@ -43,8 +43,10 @@ def main() -> None:
                     row.append(f"ok {gib:.1f}G {rec['compile_s']:.0f}s")
             lines.append("| " + " | ".join(row) + " |")
 
-    lines.append("\n### Roofline (per device; v5e 197TF/s bf16, 819GB/s HBM, 50GB/s link)\n")
-    lines.append("| arch | shape | mesh | compute s | memory s | collective s | dominant | roofline frac | useful flops |")
+    lines.append("\n### Roofline (per device; v5e 197TF/s bf16, 819GB/s HBM, "
+                 "50GB/s link)\n")
+    lines.append("| arch | shape | mesh | compute s | memory s | collective s "
+                 "| dominant | roofline frac | useful flops |")
     lines.append("|---|---|---|---|---|---|---|---|---|")
     for rec in cells:
         if rec["status"] != "ok":

@@ -111,12 +111,14 @@ def run(quick: bool = True):
 
 def main() -> None:
     rows = table()
-    hdr = f"{'arch':<20} {'shape':<12} {'mesh':<8} {'comp_ms':>9} {'mem_ms':>9} {'coll_ms':>9} {'dom':<10} {'roof%':>6} {'useful%':>8} {'GiB/dev':>8}"
+    hdr = (f"{'arch':<20} {'shape':<12} {'mesh':<8} {'comp_ms':>9} {'mem_ms':>9} "
+           f"{'coll_ms':>9} {'dom':<10} {'roof%':>6} {'useful%':>8} {'GiB/dev':>8}")
     print(hdr)
     print("-" * len(hdr))
     for r in rows:
         if r.get("dominant") == "SKIP":
-            print(f"{r['arch']:<20} {r['shape']:<12} {r['mesh']:<8} {'—':>9} {'—':>9} {'—':>9} {'SKIP':<10}")
+            print(f"{r['arch']:<20} {r['shape']:<12} {r['mesh']:<8} "
+                  f"{'—':>9} {'—':>9} {'—':>9} {'SKIP':<10}")
             continue
         print(f"{r['arch']:<20} {r['shape']:<12} {r['mesh']:<8} "
               f"{r['compute_s']*1e3:>9.2f} {r['memory_s']*1e3:>9.2f} "

@@ -15,8 +15,10 @@ def main():
     rng = np.random.default_rng(0)
     universe = 1 << 26
     common = rng.choice(universe, 500, replace=False).astype(np.uint32)
-    a = np.unique(np.concatenate([rng.choice(universe, 40000).astype(np.uint32), common]))
-    b = np.unique(np.concatenate([rng.choice(universe, 90000).astype(np.uint32), common]))
+    a = np.unique(
+        np.concatenate([rng.choice(universe, 40000).astype(np.uint32), common]))
+    b = np.unique(
+        np.concatenate([rng.choice(universe, 90000).astype(np.uint32), common]))
     truth = np.intersect1d(a, b)
     print(f"|A|={len(a)}  |B|={len(b)}  |A∩B|={len(truth)}")
 

@@ -9,6 +9,13 @@ with compile warming and the result cache on.  Add ``--flusher`` to let
 the background flusher thread own the flush cadence (no manual ``pump``
 calls anywhere — the autonomous serving runtime).
 
+``--mesh RxS`` (e.g. ``--mesh 2x2``) serves over a 2-D device topology:
+R data-parallel replica rows x S z-shards per row.  Huge-G queries run on
+the full mesh (batch split over the rows), small buckets spread across
+the replicas via the topology's load balancer.  On CPU, export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first to get
+forced host devices to lay out.
+
 Run:  PYTHONPATH=src python examples/serve_search.py [--docs 20000] [--queries 200]
 """
 import argparse
@@ -20,7 +27,7 @@ from repro.data.pipeline import inverted_index, zipf_corpus
 from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
 
 
-def serve_async(postings, queries, flusher: bool = False):
+def serve_async(postings, queries, flusher: bool = False, topology=None):
     """Submit one query at a time; flushes run on the manual pump cadence
     or — with ``flusher`` — on the background flusher thread."""
     from repro.core.engine import EXEC_COUNTERS
@@ -29,7 +36,7 @@ def serve_async(postings, queries, flusher: bool = False):
     # partial-flush size hits a pre-traced executable
     engine = AsyncSearchEngine(postings, w=256, m=2, deadline_us=2000,
                                flush_tier=8, warm_queries=queries,
-                               warm_top_k=64)
+                               warm_top_k=64, topology=topology)
     EXEC_COUNTERS.reset()
     t0 = time.perf_counter()
     tickets = []
@@ -54,6 +61,11 @@ def serve_async(postings, queries, flusher: bool = False):
           f"flusher wakeups {EXEC_COUNTERS['flusher_wakeups']})")
     print(f"queue wait p50={np.percentile(waits, 50):.0f}us "
           f"p99={np.percentile(waits, 99):.0f}us")
+    if topology is not None:
+        print(f"mesh2d passes {EXEC_COUNTERS['mesh2d_calls']} "
+              f"(row dispatches {EXEC_COUNTERS['mesh2d_row_dispatches']}), "
+              f"balancer dispatches {EXEC_COUNTERS['replica_dispatches']} "
+              f"-> {[d['dispatched'] for d in topology.load_snapshot()]}")
 
 
 def main():
@@ -69,7 +81,19 @@ def main():
     ap.add_argument("--flusher", action="store_true",
                     help="with --async-front: background flusher thread owns "
                          "the flush cadence (no manual pump calls)")
+    ap.add_argument("--mesh", type=str, default=None, metavar="RxS",
+                    help="serve over a 2-D topology: R replica rows x S "
+                         "z-shards (e.g. 2x2); needs R*S devices")
     args = ap.parse_args()
+
+    topology = None
+    if args.mesh:
+        from repro.exec.topology import make_topology
+
+        replicas, shards = (int(x) for x in args.mesh.lower().split("x"))
+        topology = make_topology(replicas, shards)
+        print(f"topology: {topology.describe()} "
+              f"({topology.replicas * topology.shards} devices)")
 
     print(f"building corpus ({args.docs} docs) ...")
     docs = zipf_corpus(args.docs, vocab=20000, mean_len=120, seed=1)
@@ -84,9 +108,10 @@ def main():
         queries = repeated_query_log(sorted(kept), args.queries,
                                      n_distinct=max(8, args.queries // 4),
                                      seed=2)
-        serve_async(kept, queries, flusher=args.flusher)
+        serve_async(kept, queries, flusher=args.flusher, topology=topology)
         return
-    engine = SearchEngine(postings, w=256, m=2, use_device=args.device)
+    engine = SearchEngine(postings, w=256, m=2, use_device=args.device,
+                          topology=topology)
     print(f"index built: {len(engine.index)} terms in {engine.build_s:.2f}s")
 
     queries = zipf_query_log(sorted(engine.index), args.queries, seed=2)

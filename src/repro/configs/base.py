@@ -35,7 +35,7 @@ class ArchConfig:
     ssm_state: int = 0
     ssm_head_dim: int = 64
     ssm_expand: int = 2
-    attn_every: int = 0                        # zamba2: shared attn every N mamba blocks
+    attn_every: int = 0                # zamba2: shared attn every N mamba blocks
     # xLSTM
     slstm_every: int = 0                       # 1 sLSTM per N blocks (rest mLSTM)
     # encoder-decoder
@@ -69,7 +69,8 @@ class ArchConfig:
     def param_count(self) -> int:
         """Analytic parameter count (embedding + per-layer)."""
         d, hd = self.d_model, self.hd
-        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        attn = (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                + self.n_heads * hd * d)
         mats = 2 if self.mlp_variant == "gelu" else 3
         dense_mlp = mats * d * self.d_ff if self.d_ff else 0
         per_layer = attn + dense_mlp
@@ -90,7 +91,8 @@ class ArchConfig:
         elif self.family == "xlstm":
             total += self.n_layers * (4 * d * d + 2 * d * (2 * d))  # approx
         elif self.family == "encdec":
-            total += self.encoder_layers * per_layer + self.n_layers * (per_layer + attn)
+            total += (self.encoder_layers * per_layer
+                      + self.n_layers * (per_layer + attn))
         else:
             total += self.n_layers * per_layer
         return int(total)
@@ -100,8 +102,10 @@ class ArchConfig:
         if self.family != "moe":
             return self.param_count()
         d = self.d_model
-        attn = d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd + self.n_heads * self.hd * d
-        active_mlp = 3 * d * self.moe_d_ff * (self.experts_per_token + self.n_shared_experts)
+        attn = (d * self.n_heads * self.hd + 2 * d * self.n_kv_heads * self.hd
+                + self.n_heads * self.hd * d)
+        active_mlp = (3 * d * self.moe_d_ff
+                      * (self.experts_per_token + self.n_shared_experts))
         moe_layers = self.n_layers - self.first_dense_layers
         total = self.vocab * d
         total += self.first_dense_layers * (attn + 3 * d * self.d_ff)

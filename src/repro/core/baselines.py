@@ -67,7 +67,8 @@ def hash_lookup(sets: Sequence[np.ndarray]) -> Tuple[np.ndarray, Dict]:
     order = sorted(sets, key=len)
     tables = [set(s.tolist()) for s in order[1:]]
     out = [x for x in order[0].tolist() if all(x in t for t in tables)]
-    return np.asarray(sorted(out), dtype=np.uint32), {"probes": len(order[0]) * len(tables)}
+    return (np.asarray(sorted(out), dtype=np.uint32),
+            {"probes": len(order[0]) * len(tables)})
 
 
 def lookup_st(sets: Sequence[np.ndarray], bucket: int = 32) -> Tuple[np.ndarray, Dict]:
@@ -188,7 +189,8 @@ def bpp(sets: Sequence[np.ndarray], w: int = 64) -> Tuple[np.ndarray, Dict]:
         h = (s.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)) >> np.uint64(64 - 12)
         sig = np.zeros(nbuckets, dtype=np.uint64)
         sub = (s.astype(np.uint64) * np.uint64(0xC2B2AE3D27D4EB4F)) >> np.uint64(64 - 6)
-        np.bitwise_or.at(sig, h.astype(np.int64), np.uint64(1) << (sub % np.uint64(min(64, field * 8))))
+        np.bitwise_or.at(sig, h.astype(np.int64),
+                         np.uint64(1) << (sub % np.uint64(min(64, field * 8))))
         sigs.append(sig)
         stats["words"] += nbuckets
     mask = sigs[0]

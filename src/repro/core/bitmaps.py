@@ -61,7 +61,8 @@ def build_images(hashes, valid, w: int):
     return xp.bitwise_or.reduce(contrib, axis=-3)
 
 
-def build_images_chunked(hashes: np.ndarray, valid: np.ndarray, w: int, chunk: int = 65536) -> np.ndarray:
+def build_images_chunked(hashes: np.ndarray, valid: np.ndarray, w: int,
+                         chunk: int = 65536) -> np.ndarray:
     """Host-side chunked variant of :func:`build_images` (bounded temp memory)."""
     G = hashes.shape[0]
     out = np.zeros((G, hashes.shape[2], num_lanes(w)), dtype=np.uint32)
@@ -84,7 +85,9 @@ def popcount32(x):
 def any_nonzero(images, axis=-1):
     """True where the OR over ``axis`` lanes is non-zero (H != empty-set)."""
     xp = _xp(images)
-    return xp.max(images, axis=axis) != 0 if xp is not np else np.bitwise_or.reduce(images, axis=axis) != 0
+    if xp is np:
+        return np.bitwise_or.reduce(images, axis=axis) != 0
+    return xp.max(images, axis=axis) != 0
 
 
 def bits_to_values(word_rep: np.ndarray, w: int) -> np.ndarray:

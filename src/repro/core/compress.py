@@ -132,7 +132,8 @@ def delta_encode(sorted_vals: np.ndarray) -> Tuple[np.ndarray, int]:
     total = int(lens.sum())
     out = np.zeros((total + 7) // 8, dtype=np.uint8)
     starts = np.concatenate([[0], np.cumsum(lens)])[:-1]
-    for gap, n_, l_, st in zip(gaps.tolist(), nb.tolist(), lb.tolist(), starts.tolist()):
+    for gap, n_, l_, st in zip(gaps.tolist(), nb.tolist(), lb.tolist(),
+                               starts.tolist()):
         p = st + l_  # l_ zeros then (l_+1)-bit binary of (n_+1)
         ln = n_ + 1
         for b in range(l_, -1, -1):

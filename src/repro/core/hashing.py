@@ -130,7 +130,8 @@ class BitMixPermutation:
 
 def random_hash_family(m: int, w: int, seed: int = 0) -> HashFamily:
     rng = np.random.default_rng(seed)
-    a = (rng.integers(0, 1 << 32, size=m, dtype=np.uint64).astype(np.uint32)) | np.uint32(1)
+    a = (rng.integers(0, 1 << 32, size=m, dtype=np.uint64).astype(np.uint32)
+         | np.uint32(1))
     b = rng.integers(0, 1 << 32, size=m, dtype=np.uint64).astype(np.uint32)
     return HashFamily(a=a, b=b, w=w)
 
@@ -146,4 +147,4 @@ def default_permutation(seed: int = 0) -> BitMixPermutation:
 
 def identity_permutation() -> BitMixPermutation:
     """g = identity — handy for deterministic tests (sorted order == g-order)."""
-    return BitMixPermutation(mults=(1,), shifts=(32 - 1,)) if False else BitMixPermutation(mults=(1,), shifts=())
+    return BitMixPermutation(mults=(1,), shifts=())

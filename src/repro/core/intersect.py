@@ -91,7 +91,8 @@ def intgroup(A: FixedWidthIndex, B: FixedWidthIndex,
     qhi = np.searchsorted(B.lo, A.hi, side="right")
     counts = np.maximum(0, qhi - qlo)
     p_ids = np.repeat(np.arange(A.G), counts)
-    q_ids = (np.arange(len(p_ids)) - np.repeat(np.cumsum(counts) - counts, counts)) + np.repeat(qlo, counts)
+    q_ids = (np.arange(len(p_ids))
+             - np.repeat(np.cumsum(counts) - counts, counts)) + np.repeat(qlo, counts)
     st.group_tuples = len(p_ids)
     # --- Algorithm 2, phase 1: H = h(A^p) AND h(B^q), vectorized
     Ha = A.images[p_ids, 0]                      # (P, W)
@@ -342,7 +343,8 @@ def hashbin(A: PrefixIndex, B: PrefixIndex) -> Tuple[np.ndarray, Stats]:
     st = Stats("hashbin", 2, A.n + B.n)
     t = max(0, math.ceil(math.log2(max(1, A.n))))
     # bin boundaries at resolution t, computed on demand from sorted g-keys
-    bounds = (np.arange((1 << t) + 1, dtype=np.uint64) << (32 - t)).astype(np.uint32) if t else np.array([0, 0], np.uint32)
+    bounds = ((np.arange((1 << t) + 1, dtype=np.uint64) << (32 - t))
+              .astype(np.uint32) if t else np.array([0, 0], np.uint32))
     if t:
         offA = np.searchsorted(A.g_keys, bounds[:-1]).astype(np.int64)
         offB = np.searchsorted(B.g_keys, bounds[:-1]).astype(np.int64)

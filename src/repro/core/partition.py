@@ -30,7 +30,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from .hashing import BitMixPermutation, HashFamily, default_permutation, random_hash_family
+from .hashing import (
+    BitMixPermutation, HashFamily, default_permutation, random_hash_family,
+)
 from .bitmaps import build_images_chunked, num_lanes
 
 __all__ = [
@@ -222,7 +224,8 @@ def preprocess_prefix(
     order = np.argsort(g, kind="stable")
     g_sorted = g[order]
     v_sorted = values[order]
-    z = (g_sorted >> np.uint32(32 - t)).astype(np.int64) if t > 0 else np.zeros(n, np.int64)
+    z = ((g_sorted >> np.uint32(32 - t)).astype(np.int64) if t > 0
+         else np.zeros(n, np.int64))
     counts = np.bincount(z, minlength=1 << t)
     offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
     padded_keys, mask, gmax = _pad_groups(g_sorted, offsets, gmax)
@@ -294,7 +297,8 @@ def preprocess_multiresolution(
     base = preprocess_prefix(values, w=w, m=m, t=T, family=family, perm=perm, seed=seed)
     offsets_by_t: List[np.ndarray] = []
     images_by_t: List[np.ndarray] = []
-    z_full = (base.g_keys >> np.uint32(32 - T)).astype(np.int64) if T else np.zeros(n, np.int64)
+    z_full = ((base.g_keys >> np.uint32(32 - T)).astype(np.int64) if T
+              else np.zeros(n, np.int64))
     for t in range(T + 1):
         if t == T:
             offsets_by_t.append(base.offsets)
@@ -307,4 +311,5 @@ def preprocess_multiresolution(
         padded_vals, mask, _ = _pad_groups(base.values, offsets)
         hashes = base.family.apply_all(padded_vals).astype(np.uint32)
         images_by_t.append(build_images_chunked(hashes, mask, base.w))
-    return MultiResolutionIndex(base=base, offsets_by_t=offsets_by_t, images_by_t=images_by_t)
+    return MultiResolutionIndex(base=base, offsets_by_t=offsets_by_t,
+                                images_by_t=images_by_t)

@@ -8,7 +8,10 @@ execute_bucket` is the single-bucket entry the async admission front-end
 flushes into); :mod:`cache` remembers results of repeated normalized plans
 so hits skip the device entirely; :mod:`adaptive` closes the telemetry
 loop — learned capacity tiers from observed survivor counts and adaptive
-flush budgets from observed arrival rates.
+flush budgets from observed arrival rates; :mod:`topology` owns the 2-D
+``(data, shard)`` device mesh — replica placement, the per-replica load
+balancer, and the layout the planner's ``(shards, replicas)`` routing
+targets.
 """
 from .plan import QueryPlan, ShapeSig, plan_query
 from .adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
@@ -19,6 +22,7 @@ from .batch import (
     execute_plan_buckets,
 )
 from .cache import ResultCache
+from .topology import ReplicaBalancer, Topology, make_topology
 
 __all__ = [
     "QueryPlan",
@@ -32,4 +36,7 @@ __all__ = [
     "execute_name_queries",
     "execute_plan_buckets",
     "ResultCache",
+    "ReplicaBalancer",
+    "Topology",
+    "make_topology",
 ]

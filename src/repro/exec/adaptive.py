@@ -9,18 +9,23 @@ loop with two small controllers fed from execution telemetry:
 
 - :class:`CapacityModel` records a per-signature histogram of observed
   survivor counts (``tuples_survived`` from the single-device bucket stats;
-  ``max_shard_survivors * n_shards`` from the sharded path, since the
-  per-shard buffer is what overflows there) and learns a per-signature
-  capacity tier: a high quantile of the observations times a safety
-  margin, rounded up to a power of two.  ``plan_query`` consults it when
-  building a ``ShapeSig`` and falls back to the static G/4 rule while the
-  signature is cold (fewer than ``min_observations`` samples).  When the
-  learned tier changes, the model bumps
-  ``EXEC_COUNTERS["adaptive_promotions"]`` and fires registered promotion
+  ``max_shard_survivors * n_shards`` from the sharded and 2-D mesh paths,
+  since the per-shard buffer is what overflows there) and learns a
+  per-signature capacity tier: a high quantile of the observations times a
+  safety margin, rounded up to a power of two.  ``plan_query`` consults it
+  when building a ``ShapeSig`` and falls back to the static G/4 rule while
+  the signature is cold (fewer than ``min_observations`` samples).  When
+  the learned tier changes, the model bumps
+  ``EXEC_COUNTERS["adaptive_promotions"]`` (tier grew) or
+  ``["adaptive_demotions"]`` (tier shrank) and fires registered change
   hooks — the serving layer uses them to invalidate its result cache and
-  re-warm the promoted executable deliberately, because a new
+  re-warm the re-tiered executable deliberately, because a new
   ``capacity_tier`` is a new ``ShapeSig`` and therefore a new compiled
-  executable.
+  executable.  Observations are **time-decayed** (``decay_s``): samples
+  older than the horizon are pruned before the tier re-evaluates, so a
+  tier inflated by a traffic burst shrinks back once the drift passes
+  instead of being pinned by stale survivors that the bounded count
+  window alone would only age out under sustained traffic.
 - :class:`AdaptiveDeadline` adjusts per-signature flush budgets from the
   observed bucket-fill rate (an EWMA of submit inter-arrival gaps).  The
   deadline budget exists to bound how long a query waits for batch-mates;
@@ -42,6 +47,7 @@ re-enters ``capacity_for``) and run device work (re-warming).
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
@@ -51,12 +57,16 @@ __all__ = ["adaptive_key", "CapacityModel", "AdaptiveDeadline"]
 
 
 def adaptive_key_parts(k: int, ts: Tuple[int, ...],
-                       gmaxes: Tuple[int, ...], shards: int) -> Tuple:
+                       gmaxes: Tuple[int, ...], shards: int,
+                       replicas: int = 1) -> Tuple:
     """THE adaptive learning key, from raw signature parts.  Single source
     of truth: the planner builds the key from parts before a ``ShapeSig``
     exists, the model builds it from the executed sig — both MUST agree or
-    learned tiers are consulted under a key nothing ever writes."""
-    return (k, ts, gmaxes, shards)
+    learned tiers are consulted under a key nothing ever writes.
+    ``replicas`` (the 2-D topology's data-parallel width) is part of the
+    key: mesh-routed and single-device executions of the same shapes are
+    different executables, so their survivor histories must not mix."""
+    return (k, ts, gmaxes, shards, replicas)
 
 
 def adaptive_key(sig) -> Tuple:
@@ -64,7 +74,8 @@ def adaptive_key(sig) -> Tuple:
     capacity tier (which is what the model outputs).  Accepts any object
     with ``k`` / ``ts`` / ``gmaxes`` / ``shards`` (i.e. ``ShapeSig``)."""
     return adaptive_key_parts(sig.k, sig.ts, sig.gmaxes,
-                              getattr(sig, "shards", 1))
+                              getattr(sig, "shards", 1),
+                              replicas=getattr(sig, "replicas", 1))
 
 
 def _pow2_ceil(x: int) -> int:
@@ -84,34 +95,50 @@ class CapacityModel:
     when real survivor counts sit far below G/4 (shrinking the phase-2
     all-pairs work toward the paper's E[survivors] ideal).
 
-    Every tier change counts as one ``adaptive_promotions`` and fires the
-    registered promotion hooks with ``(key, old_tier, new_tier)``; an
+    Every tier *increase* counts as one ``adaptive_promotions``, every
+    *decrease* as one ``adaptive_demotions``; both fire the registered
+    change hooks with ``(key, old_tier, new_tier)`` — demotion is fully
+    symmetric to promotion (cache invalidation, re-warming) because a
+    shrunk tier is just as much a new executable as a grown one.  An
     execution whose survivors exceeded the static default but fit the
     learned tier counts as ``adaptive_overflow_saved`` (a re-run the model
     eliminated).
 
-    The histogram is a bounded window (``window`` most recent samples per
-    key), so the model tracks drift instead of averaging over forever.
+    Drift handling is two-fold: the histogram is a bounded window
+    (``window`` most recent samples per key) AND each sample carries a
+    timestamp — samples older than ``decay_s`` are pruned before every
+    tier re-evaluation, so a tier inflated by a past burst demotes once
+    fresh traffic shows smaller survivors, even at arrival rates too low
+    to push the burst out of the count window.  A key whose pruned window
+    drops below ``min_observations`` keeps its current learned tier (no
+    flapping back to the static rule on a traffic lull); the next
+    ``min_observations`` fresh samples re-evaluate it.
     """
 
     def __init__(self, min_observations: int = 32, quantile: float = 0.99,
                  margin: float = 1.25, window: int = 1024,
-                 floor: int = 64):
+                 floor: int = 64, decay_s: Optional[float] = 300.0,
+                 clock: Callable[[], float] = time.monotonic):
         assert 0.0 < quantile <= 1.0 and margin >= 1.0
+        assert decay_s is None or decay_s > 0.0
         self.min_observations = int(min_observations)
         self.quantile = float(quantile)
         self.margin = float(margin)
         self.window = int(window)
         self.floor = int(floor)
+        self.decay_s = None if decay_s is None else float(decay_s)
+        self.clock = clock
         self._lock = threading.Lock()
+        # per-key deque of (timestamp, survivors) pairs
         self._survivors: Dict[Hashable, deque] = {}
         self._learned: Dict[Hashable, int] = {}
         self._hooks: List[Callable[[Hashable, int, int], None]] = []
 
     def on_promotion(self, hook: Callable[[Hashable, int, int], None]) -> None:
         """Register a callback fired (outside the model lock) after every
-        learned-tier change, with ``(key, old_tier, new_tier)``.  The
-        serving layer hangs cache invalidation and re-warming here."""
+        learned-tier change — promotions AND demotions — with
+        ``(key, old_tier, new_tier)``.  The serving layer hangs cache
+        invalidation and re-warming here."""
         self._hooks.append(hook)
 
     def capacity_for(self, key: Hashable, default: int) -> int:
@@ -123,7 +150,10 @@ class CapacityModel:
     def observations(self, key: Hashable) -> int:
         with self._lock:
             window = self._survivors.get(key)
-            return len(window) if window is not None else 0
+            if window is None:
+                return 0
+            self._prune(window, self.clock())
+            return len(window)
 
     def learned_tiers(self) -> Dict[Hashable, int]:
         """Snapshot of every learned (non-cold) tier, for telemetry."""
@@ -147,18 +177,32 @@ class CapacityModel:
             return int(stats["tuples_survived"])
         return None
 
+    def _prune(self, window: deque, now: float) -> None:
+        """Drop samples older than the decay horizon (caller holds the
+        lock).  The time decay is what lets tiers *demote* after workload
+        drift: without it a burst of huge survivors pins the quantile until
+        sheer traffic volume pushes it out of the count window."""
+        if self.decay_s is None:
+            return
+        horizon = now - self.decay_s
+        while window and window[0][0] < horizon:
+            window.popleft()
+
     def observe_bucket(self, sig, stats_list) -> None:
         """Feed one executed bucket's per-query stats dicts.
 
         Records each query's effective survivor count under
         ``adaptive_key(sig)``, credits ``adaptive_overflow_saved`` when the
-        learned tier absorbed a would-be static overflow, and re-evaluates
-        the learned tier.  Hooks fire after the lock is released.
+        learned tier absorbed a would-be static overflow, prunes decayed
+        samples, and re-evaluates the learned tier — promoting or demoting
+        as the fresh window dictates.  Hooks fire after the lock is
+        released.
         """
         key = adaptive_key(sig)
         static_cap = default_capacity(sig.ts)
         g = 1 << sig.ts[-1]
-        promotions: List[Tuple[Hashable, int, int]] = []
+        now = self.clock()
+        changes: List[Tuple[Hashable, int, int]] = []
         with self._lock:
             window = self._survivors.setdefault(
                 key, deque(maxlen=self.window))
@@ -166,25 +210,29 @@ class CapacityModel:
                 surv = self._effective_survivors(sig, stats)
                 if surv is None:
                     continue
-                window.append(surv)
+                window.append((now, surv))
                 if (sig.capacity_tier != static_cap
                         and static_cap < surv <= sig.capacity_tier):
                     EXEC_COUNTERS["adaptive_overflow_saved"] += 1
+            self._prune(window, now)
             if len(window) >= self.min_observations:
                 tier = self._tier_from_window(window, g)
                 old = self._learned.get(key, static_cap)
                 if tier != self._learned.get(key):
                     self._learned[key] = tier
-                    if tier != old:
+                    if tier > old:
                         EXEC_COUNTERS["adaptive_promotions"] += 1
-                        promotions.append((key, old, tier))
-        for promo in promotions:
+                        changes.append((key, old, tier))
+                    elif tier < old:
+                        EXEC_COUNTERS["adaptive_demotions"] += 1
+                        changes.append((key, old, tier))
+        for change in changes:
             for hook in self._hooks:
-                hook(*promo)
+                hook(*change)
 
     def _tier_from_window(self, window, g: int) -> int:
         """quantile * margin, power-of-two ceiling, clamped to [floor, G]."""
-        ordered = sorted(window)
+        ordered = sorted(surv for _, surv in window)
         idx = min(len(ordered) - 1,
                   int(round(self.quantile * (len(ordered) - 1))))
         target = int(ordered[idx] * self.margin)

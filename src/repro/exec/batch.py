@@ -2,14 +2,22 @@
 DeviceSet rows into (B, …) arrays, and run each bucket in ONE jit execution.
 
 The contract with the planner: every plan in a bucket shares
-``ShapeSig(k, ts, gmaxes, capacity_tier, shards)``, so the stacked arrays
-are shape-uniform and the whole bucket hits a single compiled executable
-(``core.engine._intersect_k_batch``, or its z-sharded twin
-``_intersect_k_sharded_batch`` when ``sig.shards > 1``).  Queries whose
-survivor count exceeds
-the capacity tier raise per-query overflow flags; the engine re-runs just
-the overflowing subset once at full capacity — a second (rare) jit
-execution, not a recompile of the bucket.
+``ShapeSig(k, ts, gmaxes, capacity_tier, shards, replicas)``, so the
+stacked arrays are shape-uniform and the whole bucket hits a single
+compiled executable (``core.engine._intersect_k_batch``, its z-sharded
+twin ``_intersect_k_sharded_batch`` when ``sig.shards > 1`` on a 1-D
+mesh, or the 2-D ``_intersect_k_mesh2d_batch`` when a topology is
+attached and the signature is mesh-routed).  Queries whose survivor count
+exceeds the capacity tier raise per-query overflow flags; the engine
+re-runs just the overflowing subset once at full capacity — a second
+(rare) jit execution, not a recompile of the bucket.
+
+With a 2-D topology, single-device buckets additionally get *placed*: the
+executor asks the topology's :class:`~repro.exec.topology.ReplicaBalancer`
+for the least-loaded replica row and resolves the bucket's sets against
+that row's plain mirrors, so small-query traffic spreads across the
+data-parallel axis instead of serializing on device 0.  Placement is not
+part of the signature — the same bucket may run on any replica.
 
 Per-query timing is amortized: each result's stats carry ``batch_us`` (the
 bucket wall time divided by bucket size), which is the honest per-query
@@ -26,8 +34,8 @@ from typing import (
 import numpy as np
 
 from ..core.engine import (
-    SHARD_AXIS, DeviceSet, default_capacity_per_shard, intersect_device_batch,
-    intersect_sharded_batch,
+    EXEC_COUNTERS, SHARD_AXIS, DeviceSet, default_capacity_per_shard,
+    intersect_device_batch, intersect_mesh2d_batch, intersect_sharded_batch,
 )
 from .plan import QueryPlan, ShapeSig, plan_query
 
@@ -66,6 +74,8 @@ def execute_bucket(
     shard_axis: str = SHARD_AXIS,
     get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
     capacity_model=None,
+    topology=None,
+    get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute ONE same-signature bucket; returns {query_index: (values,
     stats)}.
@@ -86,6 +96,17 @@ def execute_bucket(
     (``default_capacity_per_shard``), so ``(sig, B-tier)`` fully keys the
     sharded executable too.
 
+    With a 2-D ``topology`` attached, mesh-routed signatures
+    (``shards > 1`` or ``replicas > 1``) run through
+    ``intersect_mesh2d_batch`` on ``topology.mesh`` (same mirrors, same
+    per-shard capacity derivation), and single-device buckets are
+    dispatched to the least-loaded replica row: the balancer is asked with
+    the bucket's estimated cost (``B * G``, the phase-1 row count), terms
+    resolve via ``get_replica_set(replica, term)``, the in-flight load is
+    released when the bucket completes, and each result's stats carry the
+    executing ``replica``.  One ``EXEC_COUNTERS["replica_dispatches"]``
+    bump per balancer-dispatched bucket.
+
     Shapes: every plan in ``items`` must carry ``sig`` (the executor
     asserts signature uniformity); the bucket runs as one ``(B, …)`` jit
     execution plus a rare overflow re-run.  Counters: one
@@ -102,8 +123,22 @@ def execute_bucket(
     learns from.
     """
     shards = getattr(sig, "shards", 1)
+    replicas = getattr(sig, "replicas", 1)
     t0 = time.perf_counter()
-    if shards > 1:
+    if topology is not None and (shards > 1 or replicas > 1):
+        assert get_sharded_set is not None, (
+            "2-D buckets resolve through the engine's ReplicatedDeviceSet "
+            "mirrors (get_sharded_set)"
+        )
+        resolve = get_sharded_set
+        rows = [[resolve(t) for t in plan.terms] for _, plan in items]
+        results = intersect_mesh2d_batch(
+            rows, topology,
+            capacity_per_shard=default_capacity_per_shard(
+                sig.ts, shards, capacity=sig.capacity_tier),
+            use_pallas=use_pallas,
+        )
+    elif shards > 1:
         assert mesh is not None, "sharded bucket needs the engine's mesh"
         resolve = get_sharded_set or get_set
         rows = [[resolve(t) for t in plan.terms] for _, plan in items]
@@ -113,6 +148,21 @@ def execute_bucket(
                 sig.ts, shards, capacity=sig.capacity_tier),
             use_pallas=use_pallas,
         )
+    elif (topology is not None and topology.replicas > 1
+          and get_replica_set is not None):
+        weight = float(len(items) * (1 << sig.ts[-1]))  # B * G rows
+        replica = topology.balancer.acquire(weight)
+        try:
+            rows = [[get_replica_set(replica, t) for t in plan.terms]
+                    for _, plan in items]
+            results = intersect_device_batch(
+                rows, capacity=sig.capacity_tier, use_pallas=use_pallas
+            )
+        finally:
+            topology.balancer.release(replica, weight)
+        EXEC_COUNTERS["replica_dispatches"] += 1
+        for _, stats in results:
+            stats["replica"] = replica
     else:
         rows = [[get_set(t) for t in plan.terms] for _, plan in items]
         results = intersect_device_batch(
@@ -137,6 +187,8 @@ def execute_plan_buckets(
     shard_axis: str = SHARD_AXIS,
     get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
     capacity_model=None,
+    topology=None,
+    get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute device plans bucket-by-bucket; returns {query_index: (values,
     stats)}.
@@ -146,14 +198,17 @@ def execute_plan_buckets(
     execution per distinct signature (plus rare overflow re-runs), i.e.
     O(#signatures) device dispatches for the whole batch.  ``get_set``
     resolves a planned term to its DeviceSet; sharded-signature buckets
-    resolve via ``get_sharded_set`` and run on ``mesh``.
+    resolve via ``get_sharded_set`` and run on ``mesh`` (or on
+    ``topology.mesh`` when a 2-D topology is attached, which also spreads
+    single-device buckets over the replicas via ``get_replica_set``).
     """
     out: Dict[int, Tuple[np.ndarray, Dict]] = {}
     for sig, items in bucket_plans(indexed_plans).items():
         out.update(execute_bucket(
             get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
             shard_axis=shard_axis, get_sharded_set=get_sharded_set,
-            capacity_model=capacity_model,
+            capacity_model=capacity_model, topology=topology,
+            get_replica_set=get_replica_set,
         ))
     return out
 
@@ -166,40 +221,55 @@ def execute_name_queries(
     shard_axis: str = SHARD_AXIS,
     shard_min_g: Optional[int] = None,
     sharded_sets: Optional[Mapping[str, DeviceSet]] = None,
+    topology=None,
+    get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
+    get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
 ) -> List[Tuple[np.ndarray, Dict]]:
     """BatchedEngine.query_many backend: plan -> bucket -> execute -> scatter.
 
     ``queries`` are lists of set names; unknown names raise KeyError (same
     contract as single-query ``BatchedEngine.query``).  Duplicate names
     within a query are deduped by the planner.  Results return in request
-    order regardless of bucketing.  With a ``mesh`` (plus the engine's
-    ``sharded_sets`` mirrors), huge-G plans route z-sharded per the
-    planner's ``shard_min_g`` threshold.  Counters: one ``batch_calls`` /
-    ``sharded_calls`` per distinct signature (plus ``*rerun_calls`` on
-    overflow) via :func:`execute_bucket`.
+    order regardless of bucketing.  With a ``mesh``, huge-G plans route
+    z-sharded per the planner's ``shard_min_g`` threshold, resolving
+    mirrors via ``get_sharded_set`` (or a plain ``sharded_sets`` mapping);
+    with a 2-D ``topology`` they route to the 2-D pipeline (the engine's
+    lazy ``get_mesh_set`` / ``get_replica_set`` builders — a raw mapping
+    won't do there, mirrors materialize on first dispatch) and
+    single-device buckets spread over the replicas.  Counters: one
+    ``batch_calls`` / ``sharded_calls`` / ``mesh2d_calls`` per distinct
+    signature (plus ``*rerun_calls`` on overflow) via
+    :func:`execute_bucket`.
     """
     for q in queries:
         for name in q:
             if name not in sets:
                 raise KeyError(name)
-    mesh_shards = mesh.shape[shard_axis] if mesh is not None else 1
+    if topology is not None:
+        mesh_shards, mesh_replicas = topology.shards, topology.replicas
+    else:
+        mesh_shards = mesh.shape[shard_axis] if mesh is not None else 1
+        mesh_replicas = 1
     plan_kw = {} if shard_min_g is None else {"shard_min_g": shard_min_g}
     plans = [
         plan_query(sets, q, hashbin_ratio=float("inf"), device=True,
-                   mesh_shards=mesh_shards, **plan_kw)
+                   mesh_shards=mesh_shards, mesh_replicas=mesh_replicas,
+                   **plan_kw)
         for q in queries
     ]
     # no sharded mirrors supplied -> let execute_bucket fall back to the
     # plain mirrors (correct, at a per-call reshard cost)
-    get_sharded = ((lambda name: sharded_sets[name])
-                   if sharded_sets else None)
+    if get_sharded_set is None and sharded_sets:
+        get_sharded_set = lambda name: sharded_sets[name]
     by_index = execute_plan_buckets(
         lambda name: sets[name],
         [(i, p) for i, p in enumerate(plans) if p.algorithm == "device"],
         use_pallas=use_pallas,
         mesh=mesh,
         shard_axis=shard_axis,
-        get_sharded_set=get_sharded,
+        get_sharded_set=get_sharded_set,
+        topology=topology,
+        get_replica_set=get_replica_set,
     )
     # fresh objects per miss: callers annotate stats dicts in place
     return [

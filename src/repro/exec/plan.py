@@ -16,14 +16,20 @@ A query arrives as a bag of terms.  Planning does, in order:
      compiled executable; real logs concentrate on a handful of signatures
      (68% of queries are 2-word, 23% 3-word — §4), which is what makes
      bucketed compilation pay.
-  4. **Shard routing** — with a device mesh attached (``mesh_shards > 1``),
-     queries whose largest set has ``2^t_k >= shard_min_g`` group tuples
-     route to the z-sharded pipeline (``sig.shards = mesh_shards``); the
-     z-prefix space then splits over the mesh with zero communication
-     (Theorem 3.7 alignment).  Small queries stay single-device
-     (``shards = 1``) where the shard_map dispatch overhead would dominate,
-     and so do queries whose smallest set doesn't split evenly over the
-     mesh (``2^t_0 % mesh_shards != 0``) — the alignment precondition.
+  4. **Mesh routing** — with a device mesh attached (``mesh_shards > 1``
+     or ``mesh_replicas > 1``), queries whose largest set has
+     ``2^t_k >= shard_min_g`` group tuples route to the mesh pipeline:
+     ``sig.shards = mesh_shards`` splits the z-prefix space with zero
+     communication (Theorem 3.7 alignment) and — on a 2-D topology —
+     ``sig.replicas = mesh_replicas`` splits the bucket's batch axis over
+     the data-parallel replica rows.  Small queries stay single-device
+     (``shards = replicas = 1``) where the shard_map dispatch overhead
+     would dominate (on a multi-replica topology the *executor* then
+     spreads their buckets over the replicas via the load balancer — a
+     placement decision, not a shape, so it never appears in the
+     signature), and so do queries whose smallest set doesn't split evenly
+     over the z axis (``2^t_0 % mesh_shards != 0``) — the alignment
+     precondition.
 
 The planner only reads cheap per-set metadata (``t``, ``gmax``, ``n``), so
 it works identically over host ``PrefixIndex`` objects and device
@@ -45,9 +51,12 @@ __all__ = ["SHARD_MIN_G", "ShapeSig", "QueryPlan", "plan_query"]
 class ShapeSig:
     """Static shape signature of a device execution — the jit cache key.
 
-    ``shards`` is 1 for single-device buckets and the mesh size for
-    z-sharded ones; it is part of the signature because the two compile
-    different executables (and must not mix in one stacked bucket).
+    ``shards`` is 1 for single-device buckets and the z-axis width for
+    mesh-routed ones; ``replicas`` is 1 except on a 2-D topology, where
+    mesh-routed buckets split their batch axis over ``replicas``
+    data-parallel rows.  Both are part of the signature because each
+    combination compiles a different executable (and must not mix in one
+    stacked bucket).
     """
 
     k: int
@@ -55,6 +64,7 @@ class ShapeSig:
     gmaxes: Tuple[int, ...]
     capacity_tier: int
     shards: int = 1
+    replicas: int = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +103,7 @@ def plan_query(
     mesh_shards: int = 1,
     shard_min_g: int = SHARD_MIN_G,
     capacity_model=None,
+    mesh_replicas: int = 1,
 ) -> QueryPlan:
     """Plan one query against ``index`` (term -> set with .t/.gmax/.n).
 
@@ -101,9 +112,11 @@ def plan_query(
     ``sig.gmaxes`` are power-of-two tiers (``gmax_tier``) and
     ``sig.capacity_tier`` is ``default_capacity(ts)``, so the signature
     matches the static shapes the executor will stack into ``(B, …)``
-    arrays exactly.  With ``mesh_shards > 1``, huge-G queries
+    arrays exactly.  With ``mesh_shards > 1`` (and/or ``mesh_replicas >
+    1``, the data-parallel width of a 2-D topology), huge-G queries
     (``2^t_k >= shard_min_g``) whose smallest set splits evenly over the
-    mesh get ``sig.shards = mesh_shards`` and execute z-sharded.
+    z axis get ``sig.shards = mesh_shards`` / ``sig.replicas =
+    mesh_replicas`` and execute on the mesh.
 
     With a ``capacity_model`` (``exec.adaptive.CapacityModel``) attached,
     ``capacity_tier`` is the model's learned tier for the signature's
@@ -131,18 +144,20 @@ def plan_query(
         return QueryPlan(terms=tuple(uniq), algorithm="host")
     ts = tuple(index[t].t for t in uniq)
     gmaxes = tuple(gmax_tier(index[t].gmax) for t in uniq)
-    shards = 1
-    if (mesh_shards > 1 and (1 << ts[-1]) >= shard_min_g
+    shards, replicas = 1, 1
+    if ((mesh_shards > 1 or mesh_replicas > 1)
+            and (1 << ts[-1]) >= shard_min_g
             and (1 << ts[0]) % mesh_shards == 0):
-        shards = mesh_shards
+        shards, replicas = mesh_shards, mesh_replicas
     capacity = default_capacity(ts)
     if capacity_model is not None:
         from .adaptive import adaptive_key_parts
 
         capacity = capacity_model.capacity_for(
-            adaptive_key_parts(len(uniq), ts, gmaxes, shards), capacity)
+            adaptive_key_parts(len(uniq), ts, gmaxes, shards,
+                               replicas=replicas), capacity)
     sig = ShapeSig(
         k=len(uniq), ts=ts, gmaxes=gmaxes,
-        capacity_tier=capacity, shards=shards,
+        capacity_tier=capacity, shards=shards, replicas=replicas,
     )
     return QueryPlan(terms=tuple(uniq), algorithm="device", sig=sig)

@@ -1,0 +1,197 @@
+"""2-D device-mesh topology: data-parallel replicas composed with z-sharding.
+
+The paper's online stage is embarrassingly parallel along two independent
+axes — across *queries* (every intersection is independent) and across the
+*universe* (Theorem 3.7: partitioning every set by the same permutation
+makes equal z-ranges self-contained).  The 1-D mesh of PR 3 exploits only
+the second axis: a sharded bucket occupies every device, so device count
+buys per-query latency but not concurrent-bucket throughput.  This module
+adds the first axis as a proper subsystem:
+
+  Mesh(("data", "shard")) — ``replicas`` rows x ``shards`` columns.
+
+  - Each **row** is one replica: a full copy of every posting mirror,
+    z-partitioned over the row's ``shards`` devices exactly as in the 1-D
+    path (``DeviceSet.shard`` on the 2-D mesh replicates over ``data``
+    for free — unnamed mesh axes replicate).
+  - Mesh-routed buckets (huge G) split their **batch axis** over ``data``
+    (``core.engine.intersect_mesh2d_batch``): every device works, but each
+    query touches only ``1/replicas`` of them.
+  - Single-device buckets (small G, where shard_map dispatch overhead
+    dominates) are **spread across replicas** by the
+    :class:`ReplicaBalancer`: each replica row keeps a plain per-row
+    mirror and the executor dispatches each bucket to the least-loaded
+    row.
+
+This is the replicate-the-index / partition-the-universe split that lets
+hash-partitioned distributed schemes scale ``n`` past one machine's
+bandwidth while keeping the paper's O(n/sqrt(w) + kr) work bound per
+replica: replication multiplies serving throughput, partitioning bounds
+per-device memory and latency, and the 2-D mesh composes both without
+either path paying for the other.
+
+:class:`Topology` owns mesh construction (delegating to
+``core.engine.make_mesh2d``), replica-aware placement helpers, and the
+per-replica load accounting that routing decisions and telemetry read.
+Engines accept ``topology=`` and thread it through the planner
+(``ShapeSig.replicas``), the bucket executor, warming, and the adaptive
+capacity model's keys.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from ..core.engine import DATA_AXIS, SHARD_AXIS, make_mesh2d
+
+__all__ = ["DATA_AXIS", "SHARD_AXIS", "ReplicaBalancer", "Topology",
+           "make_topology"]
+
+
+class ReplicaBalancer:
+    """Least-loaded replica selection with per-replica load accounting.
+
+    Pure bookkeeping — no device state, thread-safe.  The executor brackets
+    each balancer-dispatched bucket with :meth:`acquire` / :meth:`release`;
+    ``weight`` is the bucket's estimated cost (the executor uses
+    ``B * G``, the phase-1 row count).  :meth:`acquire` picks the replica
+    with the least in-flight weight, breaking ties by least cumulative
+    dispatched weight (so an idle, synchronous serving loop degenerates to
+    weighted round-robin), then by replica id (deterministic).
+
+    :meth:`loads` snapshots the accounting — ``in_flight`` weight,
+    cumulative ``dispatched`` bucket count and ``weight`` per replica —
+    for telemetry, benchmarks, and the distribution tests.
+    """
+
+    def __init__(self, n_replicas: int):
+        assert n_replicas >= 1
+        self.n_replicas = int(n_replicas)
+        self._lock = threading.Lock()
+        self._in_flight = [0.0] * self.n_replicas
+        self._dispatched = [0] * self.n_replicas
+        self._weight = [0.0] * self.n_replicas
+
+    def acquire(self, weight: float = 1.0) -> int:
+        """Pick the least-loaded replica and account ``weight`` to it."""
+        weight = float(weight)
+        with self._lock:
+            r = min(
+                range(self.n_replicas),
+                key=lambda i: (self._in_flight[i], self._weight[i], i),
+            )
+            self._in_flight[r] += weight
+            self._dispatched[r] += 1
+            self._weight[r] += weight
+            return r
+
+    def release(self, replica: int, weight: float = 1.0) -> None:
+        """Return ``weight`` of in-flight load on ``replica`` (bucket done)."""
+        with self._lock:
+            self._in_flight[replica] = max(
+                0.0, self._in_flight[replica] - float(weight))
+
+    def loads(self) -> List[Dict[str, float]]:
+        """Per-replica accounting snapshot (index = replica id)."""
+        with self._lock:
+            return [
+                {
+                    "in_flight": self._in_flight[r],
+                    "dispatched": self._dispatched[r],
+                    "weight": self._weight[r],
+                }
+                for r in range(self.n_replicas)
+            ]
+
+    def reset(self) -> None:
+        with self._lock:
+            self._in_flight = [0.0] * self.n_replicas
+            self._dispatched = [0] * self.n_replicas
+            self._weight = [0.0] * self.n_replicas
+
+
+class Topology:
+    """A 2-D ``(data, shard)`` device mesh plus replica-aware placement.
+
+    Thin, explicit ownership of everything layout-related that used to be
+    implicit in "the 1-D mesh": the mesh itself, the axis names, which
+    device anchors each replica row, and the load balancer.  Engines hold
+    one Topology and derive all routing from it:
+
+    - ``replicas`` / ``shards`` — the mesh shape; the planner stamps both
+      into ``ShapeSig`` so 2-D-routed buckets never mix with others.
+    - :meth:`replica_device` — the row's anchor device for balancer-
+      dispatched single-device buckets (plain per-replica mirrors are
+      committed there at index time).
+    - ``balancer`` — :class:`ReplicaBalancer` spreading those buckets.
+
+    Build one with :func:`make_topology` (or wrap an existing 2-D mesh).
+    """
+
+    def __init__(self, mesh, data_axis: str = DATA_AXIS,
+                 shard_axis: str = SHARD_AXIS):
+        assert data_axis in mesh.shape and shard_axis in mesh.shape, (
+            f"mesh axes {tuple(mesh.shape)} must include "
+            f"{data_axis!r} and {shard_axis!r}"
+        )
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.shard_axis = shard_axis
+        self.balancer = ReplicaBalancer(self.replicas)
+        self._row_meshes: Dict[int, object] = {}
+
+    @property
+    def replicas(self) -> int:
+        return self.mesh.shape[self.data_axis]
+
+    @property
+    def shards(self) -> int:
+        return self.mesh.shape[self.shard_axis]
+
+    def replica_device(self, r: int):
+        """Replica row ``r``'s anchor device (column 0): where the row's
+        plain mirrors live and its single-device buckets execute."""
+        return self.replica_devices(r)[0]
+
+    def replica_devices(self, r: int) -> list:
+        """All devices of replica row ``r``, in shard order."""
+        devices = self.mesh.devices
+        if self.mesh.axis_names.index(self.data_axis) == 0:
+            return list(devices[r])
+        return list(devices[:, r])
+
+    def row_mesh(self, r: int):
+        """Replica row ``r``'s 1-D z-sharding submesh (cached — Mesh
+        identity keys the row's jit executables, so every call for the
+        same row must return the same object).  The 2-D pipeline runs one
+        1-D shard_map per row on these."""
+        if r not in self._row_meshes:
+            from jax.sharding import Mesh
+            import numpy as np
+
+            self._row_meshes[r] = Mesh(
+                np.asarray(self.replica_devices(r)), (self.shard_axis,))
+        return self._row_meshes[r]
+
+    def describe(self) -> str:
+        """``"RxS"`` layout label (e.g. ``"2x2"``), used in benchmark and
+        telemetry output."""
+        return f"{self.replicas}x{self.shards}"
+
+    def load_snapshot(self) -> List[Dict[str, float]]:
+        """The balancer's per-replica accounting (telemetry surface)."""
+        return self.balancer.loads()
+
+
+def make_topology(replicas: int, shards: Optional[int] = None,
+                  data_axis: str = DATA_AXIS,
+                  shard_axis: str = SHARD_AXIS) -> Topology:
+    """Build a :class:`Topology` over the first ``replicas * shards`` local
+    devices (``shards`` defaults to spending every device).  On CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the first
+    jax call to get forced host devices to lay out."""
+    return Topology(
+        make_mesh2d(replicas, shards, data_axis=data_axis,
+                    shard_axis=shard_axis),
+        data_axis=data_axis, shard_axis=shard_axis,
+    )

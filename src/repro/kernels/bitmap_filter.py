@@ -53,7 +53,8 @@ def _pack(images: jnp.ndarray):
     while (m * wp) % SUBLANES:
         wp += 1
     gp = -(-g // LANES) * LANES
-    x = jax.lax.bitcast_convert_type(images, jnp.int32) if images.dtype == jnp.uint32 else images.astype(jnp.int32)
+    x = (jax.lax.bitcast_convert_type(images, jnp.int32)
+         if images.dtype == jnp.uint32 else images.astype(jnp.int32))
     x = jnp.pad(x, ((0, 0), (0, 0), (0, gp - g), (0, 0), (0, wp - w)))
     x = x.reshape(b, k, gp, m * wp).transpose(0, 1, 3, 2)  # (B, k, F, Gp)
     return x, wp, gp

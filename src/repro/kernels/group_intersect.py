@@ -43,7 +43,8 @@ def _pad_lanes(x: jnp.ndarray, fill) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def group_match_pallas(a_vals: jnp.ndarray, b_vals: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+def group_match_pallas(a_vals: jnp.ndarray, b_vals: jnp.ndarray, *,
+                       interpret: bool = True) -> jnp.ndarray:
     """(S, ga) x (S, gb) sentinel-padded int32 -> (S, ga) bool membership.
 
     A leading batch axis ((B, S, ga) x (B, S, gb) -> (B, S, ga)) folds into

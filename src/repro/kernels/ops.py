@@ -36,7 +36,8 @@ def bitmap_filter(images: jnp.ndarray, use_pallas="auto") -> jnp.ndarray:
     return ref.bitmap_filter_ref(images)
 
 
-def group_match(a_vals: jnp.ndarray, b_vals: jnp.ndarray, use_pallas="auto") -> jnp.ndarray:
+def group_match(a_vals: jnp.ndarray, b_vals: jnp.ndarray,
+                use_pallas="auto") -> jnp.ndarray:
     """(S, ga), (S, gb) sentinel-padded -> (S, ga) membership mask (bool).
 
     Leading batch axis supported: (B, S, ga) x (B, S, gb) -> (B, S, ga);

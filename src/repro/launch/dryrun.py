@@ -24,7 +24,8 @@ import time
 import traceback
 from typing import Any, Dict, Optional
 
-ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+ARTIFACTS = (pathlib.Path(__file__).resolve().parents[3]
+             / "benchmarks" / "artifacts" / "dryrun")
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -32,7 +33,8 @@ _DTYPE_BYTES = {
     "c128": 16,
 }
 
-_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
 _COLL_RE = re.compile(
     r"=\s*(?P<rtype>\([^=]*?\)|[a-z0-9\[\],{}/_.-]+)\s+"
     r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"

@@ -30,14 +30,17 @@ _DTYPE_BYTES = {
     "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
 }
 
-_ARRAY_RE = re.compile(r"(pred|s4|u4|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_ARRAY_RE = re.compile(
+    r"(pred|s4|u4|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64"
+    r"|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.$-]+)\s*=\s*(.+?)\s+([\w-]+)\(")
 _HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.$-]+)\s+\((.*)\)\s*->")
 _PARAM_RE = re.compile(r"([\w.$-]+):\s*((?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))")
 _WHILE_RE = re.compile(r"condition=%?([\w.$-]+),\s*body=%?([\w.$-]+)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.$-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_TRUE_FALSE_RE = re.compile(r"true_computation=%?([\w.$-]+),\s*false_computation=%?([\w.$-]+)")
+_TRUE_FALSE_RE = re.compile(
+    r"true_computation=%?([\w.$-]+),\s*false_computation=%?([\w.$-]+)")
 _CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
@@ -221,7 +224,8 @@ class HloAnalyzer:
             if op == "while":
                 wm = _WHILE_RE.search(line)
                 if wm:
-                    trip = _trip_count(self.comps.get(wm.group(1), Computation("", [], {})))
+                    trip = _trip_count(
+                        self.comps.get(wm.group(1), Computation("", [], {})))
                     body = self.totals(wm.group(2), flops_only)
                     cond = self.totals(wm.group(1), flops_only)
                     t.add(body, trip)

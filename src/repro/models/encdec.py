@@ -72,7 +72,8 @@ def init_params(key, cfg: ArchConfig) -> Params:
 def encode(params: Params, cfg: ArchConfig, frames: jnp.ndarray,
            remat: bool = True) -> jnp.ndarray:
     """frames: (B, T_enc, frontend_dim) stub embeddings -> (B, T_enc, d)."""
-    x = frames.astype(cfg.activation_dtype) @ params["frontend_proj"].astype(cfg.activation_dtype)
+    x = (frames.astype(cfg.activation_dtype)
+         @ params["frontend_proj"].astype(cfg.activation_dtype))
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     spec = _cross_spec(cfg)
@@ -119,7 +120,8 @@ def decode_train(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     return rmsnorm(params["ln_f"], x)
 
 
-def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+def loss_fn(params: Params, cfg: ArchConfig,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     enc_out = encode(params, cfg, batch["frames"])
     hidden = decode_train(params, cfg, batch["tokens"], enc_out)
     return chunked_xent(hidden, params["embed"], batch["labels"])
@@ -133,12 +135,15 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None) -> Params:
         "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt),
         "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt),
         # cross-attention KV, precomputed once from the encoder output
-        "xk": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt),
-        "xv": jnp.zeros((cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt),
+        "xk": jnp.zeros(
+            (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt),
+        "xv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dt),
     }
 
 
-def prefill_cross(params: Params, cfg: ArchConfig, enc_out: jnp.ndarray, cache: Params) -> Params:
+def prefill_cross(params: Params, cfg: ArchConfig, enc_out: jnp.ndarray,
+                  cache: Params) -> Params:
     def per_layer(layer_p):
         return _cross_kv(layer_p, cfg, enc_out)
     xk, xv = jax.vmap(per_layer)(params["dec_layers"])

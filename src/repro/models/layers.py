@@ -136,7 +136,8 @@ def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
     if groups == 1:
         return k
     b, s, kv, d = k.shape
-    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, d)).reshape(b, s, kv * groups, d)
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, s, kv, groups, d)).reshape(b, s, kv * groups, d)
 
 
 def attention(
@@ -187,7 +188,8 @@ def attention(
         if cross_kv is None and spec.causal:
             cmask = pos_i[:, None, :, None] >= kv_pos[None, None, None, :]
             if spec_window is not None:
-                cmask &= pos_i[:, None, :, None] - kv_pos[None, None, None, :] < spec_window
+                cmask &= (pos_i[:, None, :, None]
+                          - kv_pos[None, None, None, :] < spec_window)
             scores = jnp.where(cmask, scores, -1e30)
         out = jax.nn.softmax(scores, axis=-1).astype(q_i.dtype)
         return jnp.einsum("bhcs,bshk->bchk", out, v)
@@ -233,8 +235,10 @@ def attention_decode(
     b = x.shape[0]
     positions = jnp.full((b, 1), pos, dtype=jnp.int32)
     q, k_new, v_new = _qkv(p, spec, x, positions)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
     groups = spec.n_heads // spec.n_kv
     k = _repeat_kv(cache_k.astype(x.dtype), groups)
     v = _repeat_kv(cache_v.astype(x.dtype), groups)
@@ -296,8 +300,10 @@ def _attention_decode_flash(p, spec, x, cache_k, cache_v, pos, window, mesh):
         # owning shard writes the new token's K/V at local offset
         off = jnp.clip(pos - base, 0, s_loc - 1)
         owns = (pos >= base) & (pos < base + s_loc)
-        upd_k = jax.lax.dynamic_update_slice(ck_l, kn_l.astype(ck_l.dtype), (0, off, 0, 0))
-        upd_v = jax.lax.dynamic_update_slice(cv_l, vn_l.astype(cv_l.dtype), (0, off, 0, 0))
+        upd_k = jax.lax.dynamic_update_slice(
+            ck_l, kn_l.astype(ck_l.dtype), (0, off, 0, 0))
+        upd_v = jax.lax.dynamic_update_slice(
+            cv_l, vn_l.astype(cv_l.dtype), (0, off, 0, 0))
         ck_l = jnp.where(owns, upd_k, ck_l)
         cv_l = jnp.where(owns, upd_v, cv_l)
         k = _repeat_kv(ck_l.astype(q_l.dtype), groups)
@@ -316,7 +322,9 @@ def _attention_decode_flash(p, spec, x, cache_k, cache_v, pos, window, mesh):
         # exact combine: rescale by exp(mx_l - global max), then psum
         mx_g = jax.lax.pmax(mx_l, "model")
         corr = jnp.exp(mx_l - mx_g)                          # (B,H,1)
-        num = jax.lax.psum(num_l * jnp.swapaxes(corr, 1, 2)[..., None].astype(num_l.dtype), "model")
+        num = jax.lax.psum(
+            num_l * jnp.swapaxes(corr, 1, 2)[..., None].astype(num_l.dtype),
+            "model")
         den = jax.lax.psum(den_l * corr, "model")
         o = num / jnp.swapaxes(den, 1, 2)[..., None].astype(num.dtype)
         return o, ck_l, cv_l

@@ -34,7 +34,8 @@ class Model:
     init_cache: Callable
     decode: Callable
 
-    def batch_spec(self, shape: ShapeConfig, per_host_batch: Optional[int] = None) -> Dict[str, Any]:
+    def batch_spec(self, shape: ShapeConfig,
+                   per_host_batch: Optional[int] = None) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for the inputs of this (arch, shape)."""
         b = per_host_batch or shape.global_batch
         s = shape.seq_len

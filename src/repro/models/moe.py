@@ -55,7 +55,8 @@ def moe_ffn_init(key, cfg: ArchConfig) -> Params:
     return p
 
 
-def moe_ffn(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def moe_ffn(p: Params, cfg: ArchConfig,
+            x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, d) -> (out, aux_loss).
 
     With an active mesh this takes the GShard-style shard_map path: local
@@ -70,7 +71,8 @@ def moe_ffn(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jn
     return _moe_ffn_local(p, cfg, x)
 
 
-def _moe_ffn_local(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _moe_ffn_local(p: Params, cfg: ArchConfig,
+                   x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     b, s, d = x.shape
     t = b * s
     k = cfg.experts_per_token
@@ -217,7 +219,8 @@ def _moe_ffn_shardmap(p: Params, cfg: ArchConfig, x: jnp.ndarray, mesh
 
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(dp if dp else None, None, None), P(), P("model",), P("model",), P("model",)),
+        in_specs=(P(dp if dp else None, None, None), P(), P("model",),
+                  P("model",), P("model",)),
         out_specs=(P(dp if dp else None, None, None), P()),
         check_rep=False,
     )

@@ -111,8 +111,8 @@ def mamba_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
 
     # ---- intra-chunk (quadratic) term:
     # Y_intra[i] = sum_{j<=i} C_i.B_j * exp(seg_i - seg_j) * dt_j * x_j
-    CB = jnp.einsum("bnis,bnjs->bnij", C_c, B_c)               # (B,nc,c,c); n = chunk idx
-    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]      # (B,nc,c,c,nh) = seg_i - seg_j
+    CB = jnp.einsum("bnis,bnjs->bnij", C_c, B_c)   # (B,nc,c,c); n = chunk idx
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,c,c,nh): i-j
     causal = jnp.tril(jnp.ones((c, c), bool))
     gate = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
     M = (CB[..., None] * gate * dt_c[:, :, None, :, :]).astype(x.dtype)  # (B,nc,i,j,nh)
@@ -159,7 +159,8 @@ def mamba_decode(p: Params, cfg: ArchConfig, x: jnp.ndarray,
     hp = d_in // nh
     xs, z, B, C, dtv = _mamba_proj(p, cfg, x)
     conv_state = jnp.concatenate([conv_state[:, 1:], xs], axis=1)  # (B,4,d_in)
-    xs = jax.nn.silu(jnp.einsum("bwd,wd->bd", conv_state, p["conv"].astype(x.dtype)))[:, None]
+    xs = jax.nn.silu(
+        jnp.einsum("bwd,wd->bd", conv_state, p["conv"].astype(x.dtype)))[:, None]
     xh = xs.reshape(b, nh, hp)
     A = -jnp.exp(p["A_log"])
     dA = jnp.exp(dtv[:, 0] * A)                                # (B, nh)
@@ -253,7 +254,8 @@ def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     return rmsnorm(params["ln_f"], x)
 
 
-def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+def loss_fn(params: Params, cfg: ArchConfig,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     hidden = forward(params, cfg, batch["tokens"])
     return chunked_xent(hidden, params["embed"], batch["labels"])
 

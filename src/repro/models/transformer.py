@@ -48,7 +48,8 @@ def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
     if not cfg.local_global_ratio:
         return jnp.full((cfg.n_layers,), cfg.sliding_window, dtype=jnp.int32)
     r = cfg.local_global_ratio
-    pattern = [(0 if (i % (r + 1)) == r else cfg.sliding_window) for i in range(cfg.n_layers)]
+    pattern = [(0 if (i % (r + 1)) == r else cfg.sliding_window)
+               for i in range(cfg.n_layers)]
     return jnp.asarray(pattern, dtype=jnp.int32)
 
 

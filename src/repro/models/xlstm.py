@@ -55,14 +55,17 @@ def mlstm_init(key, cfg: ArchConfig) -> Params:
     }
 
 
-def mlstm_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+def mlstm_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                  chunk: int = 256) -> jnp.ndarray:
     b, s, d = x.shape
     d_up, nh, hd = _dims(cfg)
     h = rmsnorm(p["ln"], x)
     up = h @ ctx.constrain(p["w_up"].astype(x.dtype), (None, "model"))
     v, og = jnp.split(up, 2, axis=-1)
-    q = (h @ ctx.constrain(p["wq"].astype(x.dtype), (None, "model"))).reshape(b, s, nh, hd)
-    k = (h @ ctx.constrain(p["wk"].astype(x.dtype), (None, "model"))).reshape(b, s, nh, hd) / math.sqrt(hd)
+    q = (h @ ctx.constrain(p["wq"].astype(x.dtype),
+                           (None, "model"))).reshape(b, s, nh, hd)
+    k = (h @ ctx.constrain(p["wk"].astype(x.dtype),
+                           (None, "model"))).reshape(b, s, nh, hd) / math.sqrt(hd)
     v = v.reshape(b, s, nh, hd)
     gates = (h @ p["w_if"].astype(x.dtype)).astype(jnp.float32)
     ig, fg = jnp.split(gates, 2, axis=-1)                  # (B, S, nh)
@@ -239,7 +242,8 @@ def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
     return rmsnorm(params["ln_f"], x)
 
 
-def loss_fn(params: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+def loss_fn(params: Params, cfg: ArchConfig,
+            batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     hidden = forward(params, cfg, batch["tokens"])
     return chunked_xent(hidden, params["embed"], batch["labels"])
 

@@ -57,10 +57,11 @@ class QueryResult:
     ``latency_us`` is per-query wall time for host paths and the amortized
     ``batch_us`` (bucket wall / bucket size) for device buckets;
     ``algorithm`` names the executed path (``"rangroupscan"``,
-    ``"rangroupscan/device"``, ``"rangroupscan/sharded"``, ``"hashbin"``,
-    ``"empty"``); ``stats`` is
+    ``"rangroupscan/device"``, ``"rangroupscan/sharded"``,
+    ``"rangroupscan/mesh2d"``, ``"hashbin"``, ``"empty"``); ``stats`` is
     path-specific (device stats include ``r``, ``tuples_survived``,
-    ``capacity``, ``batch_size``; cache hits carry ``{"cached": True}``).
+    ``capacity``, ``batch_size``; balancer-dispatched buckets carry
+    ``replica``; cache hits carry ``{"cached": True}``).
     ``doc_ids`` may be shared with the result cache — treat it as
     immutable.
     """
@@ -69,6 +70,17 @@ class QueryResult:
     latency_us: float
     algorithm: str
     stats: Dict
+
+
+def _device_result_name(stats: Dict) -> str:
+    """Executed-path label from a device bucket's stats: the 2-D pipeline
+    stamps ``n_replicas`` (even when 1 — the 1-D path never does), the 1-D
+    sharded pipeline stamps ``n_shards > 1``."""
+    if "n_replicas" in stats:
+        return "rangroupscan/mesh2d"
+    if stats.get("n_shards", 1) > 1:
+        return "rangroupscan/sharded"
+    return "rangroupscan/device"
 
 
 class SearchEngine:
@@ -81,21 +93,28 @@ class SearchEngine:
     ``use_device``) additionally builds z-sharded mirrors and routes
     huge-G queries (largest set with ``2^t >= shard_min_g`` group tuples)
     through the zero-communication sharded pipeline; everything else stays
-    single-device.  The cache registers itself on the device engine's
-    mutation hook, so index changes (:meth:`add_postings`, or direct
-    ``device.add``) can never serve stale cached results.
+    single-device.  A 2-D ``topology``
+    (``exec.topology.Topology``; exclusive with ``mesh``, implies
+    ``use_device``) composes data-parallel replicas with z-sharding:
+    huge-G queries run on the full data x shard mesh (batch split over the
+    replica rows), and single-device buckets are spread across the
+    replicas by the topology's load balancer.  The cache registers itself
+    on the device engine's mutation hook, so index changes
+    (:meth:`add_postings`, or direct ``device.add``) can never serve stale
+    cached results.
     """
 
     def __init__(self, postings: Dict[int, np.ndarray], w: int = 256,
                  m: int = 2, seed: int = 0, use_device: bool = False,
                  hashbin_ratio: float = 100.0, result_cache: int = 0,
                  mesh=None, shard_min_g: int = SHARD_MIN_G,
-                 adaptive_capacity=False):
+                 adaptive_capacity=False, topology=None):
         self.family = random_hash_family(m, w, seed=seed)
         self.perm = default_permutation(seed)
         self.w, self.m = w, m
         self.hashbin_ratio = hashbin_ratio
-        self.use_device = use_device or mesh is not None
+        self.use_device = (use_device or mesh is not None
+                           or topology is not None)
         t0 = time.perf_counter()
         self.index = {
             t: preprocess_prefix(p, w=w, m=m, family=self.family,
@@ -104,7 +123,8 @@ class SearchEngine:
         }
         self.build_s = time.perf_counter() - t0
         self.device = (BatchedEngine(use_pallas="auto", mesh=mesh,
-                                     shard_min_g=shard_min_g)
+                                     shard_min_g=shard_min_g,
+                                     topology=topology)
                        if self.use_device else None)
         if self.device:
             for t, idx in self.index.items():
@@ -132,13 +152,15 @@ class SearchEngine:
 
     def plan(self, terms: Sequence[int]) -> QueryPlan:
         """Normalize + route one query (dedup, §3.4 policy, shape sig,
-        shard routing when a mesh is attached, learned capacity tier when
-        an adaptive model is attached)."""
+        mesh routing when a mesh or 2-D topology is attached, learned
+        capacity tier when an adaptive model is attached)."""
         return plan_query(self.index, terms,
                           hashbin_ratio=self.hashbin_ratio,
                           device=self.device is not None,
                           mesh_shards=(self.device.n_shards
                                        if self.device else 1),
+                          mesh_replicas=(self.device.n_replicas
+                                         if self.device else 1),
                           shard_min_g=(self.device.shard_min_g
                                        if self.device else SHARD_MIN_G),
                           capacity_model=self.capacity_model)
@@ -173,7 +195,10 @@ class SearchEngine:
             [plan], lambda t: self.device.sets[str(t)], top_k=1,
             b_tiers=b_tiers, use_pallas=self.device.use_pallas,
             mesh=self.device.mesh, axis=self.device.shard_axis,
-            get_sharded_set=lambda t: self.device.sharded_sets[str(t)])
+            get_sharded_set=lambda t: self.device.get_mesh_set(str(t)),
+            topology=self.device.topology,
+            get_replica_set=lambda r, t: self.device.get_replica_set(
+                r, str(t)))
         if plan.sig not in self.warmed_sigs:
             self.warmed_sigs.append(plan.sig)
 
@@ -220,7 +245,10 @@ class SearchEngine:
             plans, lambda t: self.device.sets[str(t)], top_k=top_k,
             b_tiers=b_tiers, use_pallas=self.device.use_pallas,
             mesh=self.device.mesh, axis=self.device.shard_axis,
-            get_sharded_set=lambda t: self.device.sharded_sets[str(t)])
+            get_sharded_set=lambda t: self.device.get_mesh_set(str(t)),
+            topology=self.device.topology,
+            get_replica_set=lambda r, t: self.device.get_replica_set(
+                r, str(t)))
         # remember one representative per warmed signature so an adaptive
         # capacity-tier promotion can re-warm the new executable (the
         # warming key follows the learned tier: plans above already carry
@@ -298,16 +326,16 @@ class SearchEngine:
                 use_pallas=self.device.use_pallas,
                 mesh=self.device.mesh,
                 shard_axis=self.device.shard_axis,
-                get_sharded_set=lambda term: self.device.sharded_sets[str(term)],
+                get_sharded_set=lambda term: self.device.get_mesh_set(str(term)),
                 capacity_model=self.capacity_model,
+                topology=self.device.topology,
+                get_replica_set=lambda r, term: self.device.get_replica_set(
+                    r, str(term)),
             )
             for i, plan in device_plans:
                 res, stats = by_index[i]
-                name = ("rangroupscan/sharded"
-                        if stats.get("n_shards", 1) > 1
-                        else "rangroupscan/device")
                 results[i] = QueryResult(res, stats.get("batch_us", 0.0),
-                                         name, stats)
+                                         _device_result_name(stats), stats)
                 self._store(plan, results[i], generation=gen)
         return results  # type: ignore[return-value]
 
@@ -631,8 +659,11 @@ class AsyncSearchEngine(SearchEngine):
                     use_pallas=self.device.use_pallas,
                     mesh=self.device.mesh,
                     shard_axis=self.device.shard_axis,
-                    get_sharded_set=lambda term: self.device.sharded_sets[str(term)],
+                    get_sharded_set=lambda term: self.device.get_mesh_set(str(term)),
                     capacity_model=self.capacity_model,
+                    topology=self.device.topology,
+                    get_replica_set=lambda r, term: self.device.get_replica_set(
+                        r, str(term)),
                 )
             except Exception as exc:
                 for ticket, _ in entries:
@@ -641,11 +672,8 @@ class AsyncSearchEngine(SearchEngine):
             else:
                 for row, (ticket, plan) in enumerate(entries):
                     res, stats = by_row[row]
-                    name = ("rangroupscan/sharded"
-                            if stats.get("n_shards", 1) > 1
-                            else "rangroupscan/device")
                     result = QueryResult(res, stats.get("batch_us", 0.0),
-                                         name, stats)
+                                         _device_result_name(stats), stats)
                     self._store(plan, result, generation=gen)
                     wait_us = (flush_at - ticket.submitted_at) * 1e6
                     ticket.resolve(result, wait_us=wait_us)

@@ -90,7 +90,73 @@ def test_learned_tier_can_shrink_below_static_rule():
     model.observe_bucket(sig, [{"tuples_survived": 10}] * 8)
     # 10 * 1.25 -> pow2 16, floored at 64: less phase-2 work than G/4
     assert model.capacity_for(key, 128) == 64
+    # a shrink below the static rule is a DEMOTION, counted separately
+    assert EXEC_COUNTERS["adaptive_demotions"] == 1
+    assert EXEC_COUNTERS["adaptive_promotions"] == 0
+
+
+def test_decayed_window_demotes_after_workload_drift():
+    """The drift contract: a tier inflated by a survivor burst shrinks once
+    the burst ages past the decay horizon and fresh traffic shows smaller
+    survivors — with the demotion counted and the change hook fired
+    (symmetric to promotion, so the serving layer invalidates its cache
+    and re-warms)."""
+    now = [0.0]
+    model = CapacityModel(min_observations=8, decay_s=10.0,
+                          clock=lambda: now[0])
+    sig = _sig(ts=(9, 9))                       # G = 512, static tier 128
+    key = adaptive_key(sig)
+    changes = []
+    model.on_promotion(lambda *a: changes.append(a))
+    model.observe_bucket(sig, [{"tuples_survived": 400}] * 8)
+    assert model.capacity_for(key, 128) == 512  # 400 * 1.25 -> 512
     assert EXEC_COUNTERS["adaptive_promotions"] == 1
+    assert changes == [(key, 128, 512)]
+    # drift: the burst ages out, fresh traffic has tiny survivor counts
+    now[0] = 11.0
+    model.observe_bucket(sig, [{"tuples_survived": 10}] * 8)
+    assert model.capacity_for(key, 128) == 64
+    assert EXEC_COUNTERS["adaptive_demotions"] == 1
+    assert EXEC_COUNTERS["adaptive_promotions"] == 1
+    assert changes[-1] == (key, 512, 64)
+    assert model.observations(key) == 8         # burst samples pruned
+
+
+def test_pruned_window_below_min_observations_keeps_tier():
+    """A traffic lull must not flap a learned tier back to the static
+    rule: when pruning leaves fewer than min_observations fresh samples,
+    the current tier stands until enough new evidence accumulates."""
+    now = [0.0]
+    model = CapacityModel(min_observations=8, decay_s=10.0,
+                          clock=lambda: now[0])
+    sig = _sig(ts=(9, 9))
+    key = adaptive_key(sig)
+    model.observe_bucket(sig, [{"tuples_survived": 400}] * 8)
+    assert model.capacity_for(key, 128) == 512
+    now[0] = 20.0                               # everything decayed
+    model.observe_bucket(sig, [{"tuples_survived": 10}] * 2)
+    assert model.observations(key) == 2         # old window gone
+    assert model.capacity_for(key, 128) == 512  # tier kept, no flap
+    assert EXEC_COUNTERS["adaptive_demotions"] == 0
+    # once min_observations fresh samples accumulate, the tier moves
+    model.observe_bucket(sig, [{"tuples_survived": 10}] * 6)
+    assert model.capacity_for(key, 128) == 64
+    assert EXEC_COUNTERS["adaptive_demotions"] == 1
+
+
+def test_adaptive_key_separates_replica_widths():
+    """Mesh-routed (replicas > 1) and single-device executions of the same
+    shapes are different executables: their survivor histories must not
+    share a learning key."""
+    ts = (9, 9)
+    flat = ShapeSig(k=2, ts=ts, gmaxes=(8, 8), capacity_tier=128)
+    wide = ShapeSig(k=2, ts=ts, gmaxes=(8, 8), capacity_tier=128,
+                    shards=2, replicas=2)
+    assert adaptive_key(flat) != adaptive_key(wide)
+    model = CapacityModel(min_observations=4)
+    model.observe_bucket(wide, [{"tuples_survived": 400}] * 4)
+    assert model.capacity_for(adaptive_key(flat), 128) == 128  # untouched
+    assert model.capacity_for(adaptive_key(wide), 128) == 512
 
 
 def test_sharded_stats_observe_per_shard_survivors():

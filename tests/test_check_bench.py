@@ -127,3 +127,46 @@ def test_empty_current_dir_fails(tmp_path):
     base.mkdir(), cur.mkdir()
     failures = check_bench.check_dirs(base, cur)
     assert failures and "no BENCH_" in failures[0]
+
+
+def _mesh2d(speedup: float, identical: int = 1, qps_1x4: float = 70.0,
+            qps_2x2: float = 250.0, queries: int = 256):
+    return {
+        "queries": queries, "set_size": 50000, "n_terms": 12, "overlap": 400,
+        "identical_to_baseline": identical,
+        "baseline": {"qps": 220.0},
+        "layouts": [
+            {"layout": "1x4", "qps": qps_1x4},
+            {"layout": "2x2", "qps": qps_2x2},
+            {"layout": "4x1", "qps": 250.0},
+        ],
+        "speedup_2x2_vs_1x4": speedup,
+    }
+
+
+def test_mesh2d_identity_and_speedup_floor_gate(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_mesh2d_qps.json", _mesh2d(3.7))
+    cur = _write(tmp_path, "cur", "BENCH_mesh2d_qps.json", _mesh2d(3.5))
+    assert check_bench.check_dirs(base, cur) == []
+    # equality breakage is an absolute failure at any scale
+    cur2 = _write(tmp_path, "cur2", "BENCH_mesh2d_qps.json",
+                  _mesh2d(3.5, identical=0, queries=64))
+    failures = check_bench.check_dirs(base, cur2)
+    assert any("identical_to_baseline" in f for f in failures)
+    # 2x2 losing to the pure z-shard layout fails even without a baseline
+    cur3 = _write(tmp_path, "cur3", "BENCH_mesh2d_qps.json", _mesh2d(0.9))
+    failures = check_bench.check_dirs(base, cur3)
+    assert any("speedup_2x2_vs_1x4" in f for f in failures)
+
+
+def test_mesh2d_layout_qps_regression_fails_same_scale_only(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_mesh2d_qps.json", _mesh2d(3.7))
+    # 2x2 QPS drops 60% at the same workload scale -> relative rule fires
+    cur = _write(tmp_path, "cur", "BENCH_mesh2d_qps.json",
+                 _mesh2d(3.7, qps_2x2=100.0))
+    failures = check_bench.check_dirs(base, cur)
+    assert any("layouts[layout=2x2].qps" in f for f in failures)
+    # same drop against a differently-sized baseline (CI smoke) -> skipped
+    cur2 = _write(tmp_path, "cur2", "BENCH_mesh2d_qps.json",
+                  _mesh2d(3.7, qps_2x2=100.0, queries=64))
+    assert check_bench.check_dirs(base, cur2) == []

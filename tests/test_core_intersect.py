@@ -135,7 +135,8 @@ def test_group_size_optimizer_a11():
 # ------------------------------------------------------------ property tests
 
 small_set = st.lists(
-    st.integers(min_value=0, max_value=(1 << 20) - 1), min_size=1, max_size=300, unique=True
+    st.integers(min_value=0, max_value=(1 << 20) - 1), min_size=1, max_size=300,
+    unique=True
 )
 
 

@@ -42,7 +42,8 @@ def test_device_engine_matches_oracle(corpus):
 def test_device_engine_k3_pallas(corpus):
     sets, idxs = corpus
     truth = np.intersect1d(np.intersect1d(sets["alpha"], sets["beta"]), sets["gamma"])
-    res, _ = intersect_device([DeviceSet.from_host(idxs[k]) for k in ("alpha", "beta", "gamma")],
+    res, _ = intersect_device(
+        [DeviceSet.from_host(idxs[k]) for k in ("alpha", "beta", "gamma")],
                               use_pallas=True)
     assert np.array_equal(res, truth)
 

@@ -153,7 +153,8 @@ def test_query_batch_zipf_jit_executions_bounded():
     assert device_sigs, "zipf log produced no device-routed queries"
     EXEC_COUNTERS.reset()
     results = eng.query_batch(log)
-    assert EXEC_COUNTERS["batch_calls"] <= len(device_sigs) + EXEC_COUNTERS["rerun_calls"]
+    assert EXEC_COUNTERS["batch_calls"] <= \
+        len(device_sigs) + EXEC_COUNTERS["rerun_calls"]
     assert EXEC_COUNTERS["batch_calls"] < len(log)
     # and the batch is correct: spot-check every 8th query vs the host truth
     for q, r in list(zip(log, results))[::8]:

@@ -13,7 +13,8 @@ from repro.kernels.group_intersect import group_match_pallas
 @pytest.mark.parametrize("m,W", [(1, 2), (2, 8), (3, 4), (4, 2)])
 def test_bitmap_filter_sweep(k, G, m, W):
     rng = np.random.default_rng(k * 1000 + G + m * 10 + W)
-    imgs = rng.integers(0, 1 << 32, size=(k, G, m, W), dtype=np.uint64).astype(np.uint32)
+    imgs = rng.integers(0, 1 << 32, size=(k, G, m, W),
+                        dtype=np.uint64).astype(np.uint32)
     imgs[rng.random((k, G, m, W)) < 0.6] = 0
     x = jnp.asarray(imgs)
     out_ref = np.asarray(ref.bitmap_filter_ref(x))
@@ -47,7 +48,8 @@ def test_group_match_sweep(S, ga, gb):
     a[rng.random((S, ga)) < 0.25] = -1
     b[rng.random((S, gb)) < 0.25] = -1
     out_ref = np.asarray(ref.group_match_ref(jnp.asarray(a), jnp.asarray(b)))
-    out_pal = np.asarray(group_match_pallas(jnp.asarray(a), jnp.asarray(b), interpret=True))
+    out_pal = np.asarray(
+        group_match_pallas(jnp.asarray(a), jnp.asarray(b), interpret=True))
     np.testing.assert_array_equal(out_ref, out_pal)
 
 
@@ -56,7 +58,8 @@ def test_group_match_sweep(S, ga, gb):
 def test_bitmap_filter_batched_folds_grid(B, G):
     """(B, k, G, m, W) batch axis == B independent unbatched calls."""
     rng = np.random.default_rng(B * 17 + G)
-    imgs = rng.integers(0, 1 << 32, size=(B, 3, G, 2, 8), dtype=np.uint64).astype(np.uint32)
+    imgs = rng.integers(0, 1 << 32, size=(B, 3, G, 2, 8),
+                        dtype=np.uint64).astype(np.uint32)
     imgs[rng.random(imgs.shape) < 0.6] = 0
     x = jnp.asarray(imgs)
     out_ref = np.asarray(ref.bitmap_filter_ref(x))
@@ -77,12 +80,14 @@ def test_group_match_batched_folds_rows(B, S):
     b[rng.random(b.shape) < 0.25] = -1
     out_ref = np.asarray(ref.group_match_ref(jnp.asarray(a), jnp.asarray(b)))
     assert out_ref.shape == (B, S, 16)
-    out_pal = np.asarray(group_match_pallas(jnp.asarray(a), jnp.asarray(b), interpret=True))
+    out_pal = np.asarray(
+        group_match_pallas(jnp.asarray(a), jnp.asarray(b), interpret=True))
     np.testing.assert_array_equal(out_ref, out_pal)
     for i in range(B):
         np.testing.assert_array_equal(
             out_ref[i],
-            np.asarray(group_match_pallas(jnp.asarray(a[i]), jnp.asarray(b[i]), interpret=True)))
+            np.asarray(group_match_pallas(jnp.asarray(a[i]), jnp.asarray(b[i]),
+                                          interpret=True)))
 
 
 def test_group_match_sentinel_never_matches():
@@ -94,7 +99,8 @@ def test_group_match_sentinel_never_matches():
 
 def test_ops_dispatch_paths_agree():
     rng = np.random.default_rng(7)
-    imgs = jnp.asarray(rng.integers(0, 1 << 32, size=(2, 200, 2, 8), dtype=np.uint64).astype(np.uint32))
+    imgs = jnp.asarray(rng.integers(0, 1 << 32, size=(2, 200, 2, 8),
+                                    dtype=np.uint64).astype(np.uint32))
     np.testing.assert_array_equal(
         np.asarray(ops.bitmap_filter(imgs, use_pallas=True)),
         np.asarray(ops.bitmap_filter(imgs, use_pallas=False)),

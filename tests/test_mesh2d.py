@@ -1,0 +1,496 @@
+"""Tests for the 2-D mesh topology subsystem (data-parallel replicas
+composed with z-sharding).
+
+Covers: the replica balancer's least-loaded accounting (pure python),
+planner routing by ``(shards, replicas)``, oracle equivalence of
+``intersect_mesh2d_batch`` across the 1x4 / 2x2 / 4x1 layouts, the
+per-(query, shard) forced-overflow re-run property, engine end-to-end
+equivalence with balancer spreading, and topology-aware compile warming.
+
+Mesh tests need >= 4 devices (``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` exported before jax initializes — the CI multi-device job
+does this).  On a single-device run those skip, but the subprocess oracle
+test always runs: it re-executes bit-identity vs ``query_batch`` across
+all three layouts, the forced-overflow property, the balancer
+distribution, and warming zero-traces in a fresh interpreter with the
+flag set, so the acceptance guarantees are exercised by every tier-1 run.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.engine import (
+    EXEC_COUNTERS, DeviceSet, ReplicatedDeviceSet, clear_exec_jit_cache,
+    intersect_device_batch, intersect_mesh2d_batch, make_mesh2d,
+)
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.intersect import rangroupscan
+from repro.core.partition import preprocess_prefix
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.exec.plan import plan_query
+from repro.exec.topology import ReplicaBalancer, make_topology
+from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
+
+N_DEVICES = 4
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < N_DEVICES,
+    reason=f"needs >= {N_DEVICES} devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+LAYOUTS = ((1, 4), (2, 2), (4, 1))
+
+
+# ---------------------------------------------------------------------------
+# Replica balancer (pure python — runs on any device count)
+# ---------------------------------------------------------------------------
+
+def test_balancer_least_loaded_pick_and_release():
+    bal = ReplicaBalancer(3)
+    # empty: ties break by replica id
+    assert bal.acquire(10.0) == 0
+    # replica 0 has 10 in flight -> next goes elsewhere
+    assert bal.acquire(1.0) == 1
+    assert bal.acquire(1.0) == 2
+    # 1 and 2 tie on in-flight; cumulative weight breaks it (2 < 1? no:
+    # both 1.0 -> id breaks) — release 1 fully, it becomes least loaded
+    bal.release(1, 1.0)
+    assert bal.acquire(1.0) == 1
+    loads = bal.loads()
+    assert [d["dispatched"] for d in loads] == [1, 2, 1]
+    assert loads[0]["in_flight"] == 10.0
+    # release never goes negative
+    bal.release(2, 99.0)
+    assert bal.loads()[2]["in_flight"] == 0.0
+
+
+def test_balancer_degenerates_to_weighted_round_robin_when_idle():
+    """Synchronous serving (acquire -> execute -> release) always sees zero
+    in-flight load, so equal-weight buckets spread evenly."""
+    bal = ReplicaBalancer(4)
+    for _ in range(12):
+        r = bal.acquire(5.0)
+        bal.release(r, 5.0)
+    assert [d["dispatched"] for d in bal.loads()] == [3, 3, 3, 3]
+
+
+# ---------------------------------------------------------------------------
+# Planner routing by (shards, replicas) — metadata only, no mesh needed
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def corpus():
+    """Three overlapping sets big enough to split over 4 shards
+    (t = 8/9/10 -> 256/512/1024 z-groups)."""
+    rng = np.random.default_rng(0)
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    common = rng.choice(1 << 24, 60, replace=False).astype(np.uint32)
+    raw, idxs = {}, {}
+    for name, n in [("a", 3000), ("b", 5000), ("c", 9000)]:
+        s = np.unique(np.concatenate(
+            [rng.choice(1 << 24, n, replace=False).astype(np.uint32), common]))
+        raw[name] = s
+        idxs[name] = preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+    return raw, idxs
+
+
+def test_plan_routes_by_shards_and_replicas(corpus):
+    _, idxs = corpus
+    # 2-D mesh + low threshold -> both axes stamped into the signature
+    sig = plan_query(idxs, ["a", "b"], mesh_shards=2, mesh_replicas=2,
+                     shard_min_g=64).sig
+    assert (sig.shards, sig.replicas) == (2, 2)
+    # pure data-parallel topology: shards == 1 never blocks alignment
+    sig = plan_query(idxs, ["a", "b"], mesh_shards=1, mesh_replicas=4,
+                     shard_min_g=64).sig
+    assert (sig.shards, sig.replicas) == (1, 4)
+    # below the size threshold -> single-device, replicas not stamped
+    sig = plan_query(idxs, ["a", "b"], mesh_shards=2, mesh_replicas=2,
+                     shard_min_g=1 << 20).sig
+    assert (sig.shards, sig.replicas) == (1, 1)
+    # alignment failure on the shard axis blocks the whole mesh route
+    fam, perm = idxs["a"].family, idxs["a"].perm
+    tiny = preprocess_prefix(np.arange(1, 9, dtype=np.uint32), w=256, m=2,
+                             family=fam, perm=perm, t=1)
+    mixed = dict(idxs, tiny=tiny)
+    sig = plan_query(mixed, ["tiny", "c"], hashbin_ratio=float("inf"),
+                     mesh_shards=4, mesh_replicas=2, shard_min_g=64).sig
+    assert (sig.shards, sig.replicas) == (1, 1)
+    # layouts never share a bucket: all four routings are distinct sigs
+    sigs = {
+        plan_query(idxs, ["a", "b"], mesh_shards=s, mesh_replicas=r,
+                   shard_min_g=64).sig
+        for r, s in [(1, 4), (2, 2), (4, 1), (1, 1)]
+    }
+    assert len(sigs) == 4
+
+
+# ---------------------------------------------------------------------------
+# Topology construction
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_topology_layout_and_row_meshes():
+    topo = make_topology(2, 2)
+    assert (topo.replicas, topo.shards) == (2, 2)
+    assert topo.describe() == "2x2"
+    devices = {d for r in range(2) for d in topo.replica_devices(r)}
+    assert len(devices) == 4
+    # rows are disjoint; the row mesh is cached (jit cache key identity)
+    assert topo.row_mesh(0) is topo.row_mesh(0)
+    assert set(topo.row_mesh(0).devices.ravel()).isdisjoint(
+        topo.row_mesh(1).devices.ravel())
+    assert topo.replica_device(1) == topo.replica_devices(1)[0]
+
+
+@multi_device
+def test_mesh2d_replicas_must_be_pow2():
+    if len(jax.devices()) < 6:
+        pytest.skip("needs 6 devices to attempt a 3x2 grid")
+    with pytest.raises(AssertionError):
+        make_mesh2d(3, 2)
+
+
+# ---------------------------------------------------------------------------
+# Oracle equivalence across layouts
+# ---------------------------------------------------------------------------
+
+def _replicated(idxs, topo):
+    """Build ReplicatedDeviceSet mirrors the way BatchedEngine.add does."""
+    out = {}
+    for name, idx in idxs.items():
+        ds = DeviceSet.from_host(idx)
+        if topo.shards > 1:
+            rows = tuple(ds.shard(topo.row_mesh(r), topo.shard_axis)
+                         for r in range(topo.replicas))
+        else:
+            rows = tuple(ds.place(topo.replica_device(r))
+                         for r in range(topo.replicas))
+        out[name] = ReplicatedDeviceSet(rows)
+    return out
+
+
+def truth_of(raw, names):
+    out = raw[names[0]]
+    for n in names[1:]:
+        out = np.intersect1d(out, raw[n])
+    return out
+
+
+@multi_device
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_mesh2d_matches_host_and_device_oracles(corpus, layout):
+    raw, idxs = corpus
+    topo = make_topology(*layout)
+    sets = _replicated(idxs, topo)
+    for names in [["a", "b"], ["b", "c"], ["a", "b", "c"]]:
+        truth = truth_of(raw, names)
+        host, _ = rangroupscan([idxs[n] for n in names])
+        row = [sets[n] for n in names]
+        # batch of three (arg order varies) + check vs single-device path
+        out = intersect_mesh2d_batch([row, row[::-1], row], topo,
+                                     use_pallas=False)
+        unsharded = intersect_device_batch(
+            [[DeviceSet.from_host(idxs[n]) for n in names]], use_pallas=False)
+        assert np.array_equal(host, truth)
+        assert np.array_equal(unsharded[0][0], truth)
+        for res, stats in out:
+            assert np.array_equal(res, truth), (layout, names)
+            assert stats["r"] == len(truth)
+            assert stats["n_shards"] == layout[1]
+            assert stats["n_replicas"] == layout[0]
+        # survivors aggregate identically however the mesh is laid out
+        assert out[0][1]["tuples_survived"] == \
+            unsharded[0][1]["tuples_survived"]
+
+
+@multi_device
+def test_mesh2d_spreads_batch_rows_over_replicas(corpus):
+    _, idxs = corpus
+    topo = make_topology(4, 1)
+    sets = _replicated(idxs, topo)
+    row = [sets["a"], sets["b"]]
+    # full local-G capacity: overflow impossible, so call counts are exact
+    cap = 1 << max(sets["a"].t, sets["b"].t)
+    out = intersect_mesh2d_batch([row] * 8, topo, capacity_per_shard=cap,
+                                 use_pallas=False)
+    # contiguous slices: 8 queries over 4 rows = 2 per replica
+    assert [stats["replica"] for _, stats in out] == \
+        [0, 0, 1, 1, 2, 2, 3, 3]
+    EXEC_COUNTERS.reset()
+    intersect_mesh2d_batch([row] * 8, topo, capacity_per_shard=cap,
+                           use_pallas=False)
+    assert EXEC_COUNTERS["mesh2d_calls"] == 1
+    assert EXEC_COUNTERS["mesh2d_row_dispatches"] == 4
+    # a 1-query bucket pads B to the replica count, but padding-only rows
+    # are never dispatched: one row runs, three stay idle
+    EXEC_COUNTERS.reset()
+    (res, stats), = intersect_mesh2d_batch([row], topo,
+                                           capacity_per_shard=cap,
+                                           use_pallas=False)
+    assert stats["replica"] == 0
+    assert EXEC_COUNTERS["mesh2d_row_dispatches"] == 1
+
+
+@multi_device
+def test_mesh2d_mixed_signature_rejected(corpus):
+    _, idxs = corpus
+    topo = make_topology(2, 2)
+    sets = _replicated(idxs, topo)
+    with pytest.raises(AssertionError):
+        intersect_mesh2d_batch(
+            [[sets["a"], sets["b"]], [sets["a"], sets["c"]]],
+            topo, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Forced overflow: per-(query, shard) flags, ONE enlarged re-run, exact
+# ---------------------------------------------------------------------------
+
+@multi_device
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_mesh2d_forced_overflow_rerun_is_exact(corpus, layout):
+    raw, idxs = corpus
+    topo = make_topology(*layout)
+    sets = _replicated(idxs, topo)
+    truth = truth_of(raw, ["a", "b"])
+    row = [sets["a"], sets["b"]]
+    EXEC_COUNTERS.reset()
+    out = intersect_mesh2d_batch([row] * 4, topo, capacity_per_shard=2,
+                                 use_pallas=False)
+    for res, stats in out:
+        assert np.array_equal(res, truth), layout
+        assert stats["r"] == len(truth)
+        assert stats["capacity_per_shard"] > 2  # re-ran at local G
+    assert EXEC_COUNTERS["mesh2d_rerun_calls"] == 1
+    assert EXEC_COUNTERS["mesh2d_calls"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end over a topology
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def postings():
+    docs = zipf_corpus(3000, vocab=400, mean_len=40, seed=3)
+    return inverted_index(docs)
+
+
+@multi_device
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_search_engine_topology_matches_baseline(postings, layout):
+    topo = make_topology(*layout)
+    eng = SearchEngine(postings, seed=3, topology=topo, shard_min_g=4)
+    base = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(eng.index), 48, seed=11)
+    plans = [eng.plan(q) for q in log]
+    assert any(p.algorithm == "device" and p.sig.replicas == layout[0]
+               and p.sig.shards == layout[1] for p in plans), (
+        "threshold routed nothing to the mesh")
+    got = eng.query_batch(log)
+    want = base.query_batch(log)
+    for q, a, b in zip(log, got, want):
+        assert np.array_equal(a.doc_ids, b.doc_ids), (layout, q)
+    assert any(r.algorithm == "rangroupscan/mesh2d" for r in got)
+
+
+@multi_device
+def test_balancer_spreads_single_device_buckets(postings):
+    """With the mesh threshold out of reach, every bucket is single-device
+    and the topology's balancer must spread them across replica rows."""
+    topo = make_topology(4, 1)
+    eng = SearchEngine(postings, seed=3, topology=topo, shard_min_g=1 << 20)
+    base = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(eng.index), 48, seed=11)
+    EXEC_COUNTERS.reset()
+    got = eng.query_batch(log)
+    for q, a, b in zip(log, got, base.query_batch(log)):
+        assert np.array_equal(a.doc_ids, b.doc_ids), q
+    assert EXEC_COUNTERS["replica_dispatches"] > 0
+    assert EXEC_COUNTERS["mesh2d_calls"] == 0
+    dispatched = [d["dispatched"] for d in topo.load_snapshot()]
+    assert sum(dispatched) == EXEC_COUNTERS["replica_dispatches"]
+    # least-loaded spreading: no replica hoards, none starves
+    assert sum(1 for d in dispatched if d > 0) >= 3
+    assert {r.stats.get("replica") for r in got
+            if "replica" in r.stats} >= {0, 1, 2}
+
+
+@multi_device
+def test_query_many_balancer_path_on_2x2_topology(postings):
+    """Regression: name-keyed ``BatchedEngine.query_many`` must resolve
+    per-replica mirrors through the engine's lazy builders — raw mapping
+    access crashed with KeyError once topology mirrors went lazy (nothing
+    populates them at add time anymore)."""
+    topo = make_topology(2, 2)
+    eng = SearchEngine(postings, seed=3, topology=topo, shard_min_g=1 << 20)
+    base = SearchEngine(postings, seed=3, use_device=True)
+    names = [str(t) for t in sorted(eng.index)[:4]]
+    queries = [[names[0], names[1]], [names[2], names[3]],
+               [names[0], names[2]]]
+    EXEC_COUNTERS.reset()
+    got = eng.device.query_many(queries)
+    want = base.device.query_many(queries)
+    for q, (a, _), (b, _) in zip(queries, got, want):
+        assert np.array_equal(a, b), q
+    assert EXEC_COUNTERS["replica_dispatches"] > 0
+
+
+@multi_device
+def test_async_engine_topology_matches_oracle(postings):
+    topo = make_topology(2, 2)
+    eng = AsyncSearchEngine(postings, seed=3, topology=topo, shard_min_g=4,
+                            flush_tier=4, result_cache=0)
+    base = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(eng.index), 24, seed=5)
+    tickets = [eng.submit(q) for q in log]
+    eng.drain()
+    assert all(t.done for t in tickets)
+    for q, t, o in zip(log, tickets, base.query_batch(log)):
+        assert np.array_equal(t.value.doc_ids, o.doc_ids), q
+
+
+@multi_device
+def test_mesh2d_warming_zero_traces_at_serve_time(postings):
+    topo = make_topology(2, 2)
+    eng = AsyncSearchEngine(postings, seed=3, topology=topo, shard_min_g=4,
+                            flush_tier=2, result_cache=0)
+    sample = zipf_query_log(sorted(eng.index), 48, seed=13)
+    clear_exec_jit_cache()
+    EXEC_COUNTERS.reset()
+    warmed = eng.warm(sample, top_k=32, b_tiers=(1, 2))
+    mesh_warmed = [s for s in warmed if s.replicas == 2 and s.shards == 2]
+    assert mesh_warmed, "warming saw no mesh-routed signatures"
+    assert EXEC_COUNTERS["mesh2d_traces"] >= len(mesh_warmed)
+    q = next(q for q in sample if eng.plan(q).sig in mesh_warmed)
+    # first serve may trace the (rare) overflow re-run executable; the
+    # second serve of the same query must hit only compiled code
+    eng.submit(q)
+    eng.drain()
+    EXEC_COUNTERS.reset()
+    ticket = eng.submit(q)
+    eng.drain()
+    assert ticket.done
+    assert EXEC_COUNTERS["mesh2d_calls"] >= 1
+    assert EXEC_COUNTERS["mesh2d_traces"] == 0  # compiled at build time
+    assert EXEC_COUNTERS["batch_traces"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Subprocess guarantee: runs even when this process is single-device
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# CPU explicitly: with libtpu on the image, a second jax process would
+# otherwise block minutes on the parent's /tmp/libtpu_lockfile
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np
+from repro.core.engine import EXEC_COUNTERS
+from repro.exec.topology import make_topology
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.serve.search import SearchEngine, zipf_query_log
+
+docs = zipf_corpus(2000, vocab=300, mean_len=30, seed=3)
+postings = inverted_index(docs)
+base = SearchEngine(postings, seed=3, use_device=True)
+log = zipf_query_log(sorted(base.index), 24, seed=11)
+want = base.query_batch(log)
+
+# bit-identity vs query_batch across all three layouts
+for layout in [(1, 4), (2, 2), (4, 1)]:
+    topo = make_topology(*layout)
+    eng = SearchEngine(postings, seed=3, topology=topo, shard_min_g=4)
+    EXEC_COUNTERS.reset()
+    got = eng.query_batch(log)
+    for q, a, b in zip(log, got, want):
+        assert np.array_equal(a.doc_ids, b.doc_ids), (layout, q)
+    assert EXEC_COUNTERS["mesh2d_calls"] > 0, layout
+    # every pass dispatches at least one row and at most `replicas`
+    # (padding-only rows are skipped entirely)
+    assert (EXEC_COUNTERS["mesh2d_calls"]
+            <= EXEC_COUNTERS["mesh2d_row_dispatches"]
+            <= layout[0] * EXEC_COUNTERS["mesh2d_calls"]), layout
+
+# forced overflow: tiny per-shard capacity still yields exact results
+from repro.core.engine import DeviceSet, ReplicatedDeviceSet, \
+    intersect_mesh2d_batch
+topo = make_topology(2, 2)
+idxs = {t: base.index[t] for t in sorted(base.index)}
+big = [t for t in sorted(idxs) if idxs[t].t >= 2][:2]
+rows = []
+for t in big:
+    ds = DeviceSet.from_host(idxs[t])
+    rows.append(ReplicatedDeviceSet(tuple(
+        ds.shard(topo.row_mesh(r), topo.shard_axis) for r in range(2))))
+truth = np.intersect1d(postings[big[0]], postings[big[1]])
+EXEC_COUNTERS.reset()
+(res, stats), = intersect_mesh2d_batch([rows], topo, capacity_per_shard=1,
+                                       use_pallas=False)
+assert np.array_equal(res, truth), (len(res), len(truth))
+assert EXEC_COUNTERS["mesh2d_rerun_calls"] == 1
+assert EXEC_COUNTERS["mesh2d_calls"] == 2
+
+# balancer distribution: single-device buckets spread over 4 replicas
+topo = make_topology(4, 1)
+eng = SearchEngine(postings, seed=3, topology=topo, shard_min_g=1 << 20)
+EXEC_COUNTERS.reset()
+got = eng.query_batch(log)
+for q, a, b in zip(log, got, want):
+    assert np.array_equal(a.doc_ids, b.doc_ids), q
+assert EXEC_COUNTERS["replica_dispatches"] > 0
+dispatched = [d["dispatched"] for d in topo.load_snapshot()]
+assert sum(1 for d in dispatched if d > 0) >= 3, dispatched
+
+# name-keyed query_many resolves lazy mirrors (KeyError regression)
+names = [str(t) for t in sorted(base.index)[:4]]
+nq = [[names[0], names[1]], [names[2], names[3]]]
+got_nm = eng.device.query_many(nq)
+want_nm = base.device.query_many(nq)
+for q, (a, _), (b, _) in zip(nq, got_nm, want_nm):
+    assert np.array_equal(a, b), q
+
+# routing + warming: a warmed mesh signature serves with zero traces
+from repro.core.engine import clear_exec_jit_cache
+from repro.serve.search import AsyncSearchEngine
+topo = make_topology(2, 2)
+eng = AsyncSearchEngine(postings, seed=3, topology=topo, shard_min_g=4,
+                        flush_tier=2, result_cache=0)
+clear_exec_jit_cache()
+warmed = eng.warm(log, top_k=32, b_tiers=(1, 2))
+mesh_warmed = [s for s in warmed if s.replicas == 2 and s.shards == 2]
+assert mesh_warmed
+q = next(q for q in log if eng.plan(q).sig in mesh_warmed)
+eng.submit(q); eng.drain()          # may trace the overflow re-run variant
+EXEC_COUNTERS.reset()
+ticket = eng.submit(q); eng.drain()
+assert ticket.done
+assert EXEC_COUNTERS["mesh2d_traces"] == 0
+assert EXEC_COUNTERS["batch_traces"] == 0
+print("MESH2D_SUBPROCESS_OK")
+"""
+
+
+def test_mesh2d_oracle_in_forced_multidevice_subprocess():
+    """The acceptance guarantee, independent of this process's device
+    count: a fresh interpreter with 8 forced host devices must reproduce
+    ``query_batch`` bit-identically on 1x4, 2x2, and 4x1 topologies,
+    recover exactly from forced per-shard overflow (counter-verified
+    single re-run), spread balancer buckets over the replicas, and serve
+    warmed mesh signatures without retracing."""
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "MESH2D_SUBPROCESS_OK" in proc.stdout

@@ -72,9 +72,21 @@ RULES = {
         Rule("adaptive.qps_ratio_vs_static", "min_abs", 0.70),
     ],
     "BENCH_sharded_qps.json": [],  # multi-device artifact: no gate yet
+    "BENCH_mesh2d_qps.json": [
+        # 2-D topology invariants (absolute — hold at any workload scale):
+        # every layout stays bit-identical to the single-device baseline,
+        # and the 2x2 layout never loses to the pure z-shard 1x4 on the
+        # replica-friendly workload (committed full-size runs show >= 1.5x;
+        # the CI floor is 1.0 to keep smoke runs noise-proof)
+        Rule("identical_to_baseline", "equals", 1),
+        Rule("speedup_2x2_vs_1x4", "min_abs", 1.0),
+        Rule("layouts[layout].qps", "min_ratio", 0.70),
+        Rule("baseline.qps", "min_ratio", 0.70),
+    ],
 }
 
-_SCALE_KEYS = ("queries", "n_docs", "vocab", "vocab_kept", "distinct_pool")
+_SCALE_KEYS = ("queries", "n_docs", "vocab", "vocab_kept", "distinct_pool",
+               "set_size", "n_terms", "overlap")
 
 
 def _walk(base, cur, segs: List[str], label: str
