@@ -1,0 +1,260 @@
+"""Concurrent-serving benchmark: overlapped dispatch window vs the PR-5
+synchronous flusher, on the hot-z replica workload over a 2x2 mesh.
+
+The same burst of conjunctive queries is served twice by identically
+configured ``AsyncSearchEngine``\\ s whose only difference is the in-flight
+window bound:
+
+- *synchronous* (``max_inflight=1``): the PR-5 serving shape — every
+  bucket's dispatch blocks on its own collection (transfer + overflow
+  check) before the next bucket may dispatch, so the device idles during
+  each collect and the balancer never sees two buckets at once;
+- *overlapped* (``max_inflight=8``): the dispatch/collect split — the
+  flusher issues due buckets back-to-back under the exec lock and collects
+  outside it, so independent buckets execute concurrently on different
+  replica rows (the balancer spreads them because in-flight weight is now
+  visible until collect time).
+
+The workload keeps buckets single-device (``shard_min_g`` out of reach) so
+each tier-flush bucket lands on one replica row of the 2x2 mesh via the
+balancer: overlap turns the second row from dead weight into concurrent
+capacity, bounded at 2x by the row count.  Queries alternate 2-term and
+3-term hot conjunctions — two shape signatures, so the admission queue
+always feeds the window two independent buckets and the overlap is
+structural at any smoke scale, not an artifact of arrival timing.
+
+Measurement protocol: every engine is compile-warmed across all power-of-2
+batch tiers the burst can produce (serve-time compilation of an unwarmed
+partial-flush tier concurrent with execution stalls the pipeline for
+seconds and dominates any single pass), then the two modes run
+``--passes`` interleaved passes each and the per-mode median wall time is
+the headline — single passes on shared hosts swing far too much to gate
+on.  Reported per mode: served QPS (burst start -> last ticket resolved),
+per-pass walls, p50/p99 queue wait, and the new overlap telemetry
+(``inflight_dispatches`` / ``collect_us`` / ``overlap_high_water``).
+Results are checked bit-identical to the synchronous ``query_batch``
+oracle; the headline ``qps_ratio_overlapped_vs_sync`` is what the CI gate
+floors.
+
+Hardware bound, measured honestly: the ratio is capped by the host's
+spare parallelism.  On a single-hardware-thread container (where the
+committed artifact was produced) the forced host "devices" all multiplex
+one core, so overlapped and synchronous serving tie at ~1.0x — the window
+can only reclaim idle handoff latency, not create compute.  With real
+spare cores (multi-core CI runners, accelerator slices) the collect of
+bucket N runs concurrently with the execution of bucket N+1 and the ratio
+rises toward the replica-row bound (2x on 2x2); the CI floor is therefore
+a noise-tolerant "overlap never costs throughput" check rather than a
+speedup claim.
+
+Run:  PYTHONPATH=src python benchmarks/fig_concurrent_qps.py [--queries N]
+      [--set-size N] [--passes N] [--out BENCH_concurrent_qps.json]
+"""
+from __future__ import annotations
+
+import os
+
+# before the first jax import: forced host devices to lay out, and the CPU
+# backend explicitly (with libtpu on the image a concurrently running jax
+# process would otherwise serialize on the TPU lockfile)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from fig_mesh2d_qps import hot_z_postings
+from repro.core.engine import EXEC_COUNTERS
+from repro.exec.topology import make_topology
+from repro.serve.search import AsyncSearchEngine, SearchEngine
+
+LAYOUT = (2, 2)
+
+
+def hot_mixed_log(n_terms: int, n_queries: int, seed: int = 7):
+    """Alternating 2-term / 3-term hot conjunctions.
+
+    Two arities means two shape signatures, so the admission queue always
+    holds two independent buckets: the overlap window genuinely has two
+    buckets to overlap at ANY workload scale (a single-signature burst
+    would coalesce into one big bucket and the high-water mark could
+    degenerate to 1 on small smoke runs)."""
+    rng = np.random.default_rng(seed)
+    return [sorted(rng.choice(n_terms, 2 + (i % 2), replace=False).tolist())
+            for i in range(n_queries)]
+
+
+def _percentiles(xs):
+    arr = np.asarray(xs, dtype=np.float64)
+    if not len(arr):
+        return 0.0, 0.0
+    return (float(np.percentile(arr, 50)), float(np.percentile(arr, 99)))
+
+
+def serve_burst(eng: AsyncSearchEngine, log):
+    """Serve one closed-loop burst through the background flusher.
+
+    The submitter queues every query as fast as it can (tier flushes keep
+    the admission queue short) and then waits for all tickets; wall time
+    measures how fast the flusher drains the stream of same-signature
+    buckets — exactly the dispatch/collect pipelining the window bound
+    throttles.  Returns (tickets, metrics)."""
+    eng.cache.clear()
+    EXEC_COUNTERS.reset()
+    eng.start()
+    t0 = time.perf_counter()
+    tickets = [eng.submit(q) for q in log]
+    for t in tickets:
+        t.wait(timeout=300.0)
+    wall_s = time.perf_counter() - t0
+    eng.stop()
+    assert eng._flusher_error is None, eng._flusher_error
+    assert all(t.done for t in tickets)
+    queued = [t.wait_us for t in tickets
+              if t.value.stats.get("batch_size") and
+              not t.value.stats.get("cached")]
+    p50, p99 = _percentiles(queued)
+    return tickets, {
+        "max_inflight": eng.max_inflight,
+        "queries": len(log),
+        "wall_s": wall_s,
+        "served_qps": len(log) / wall_s,
+        "queued_queries": len(queued),
+        "p50_wait_us": p50,
+        "p99_wait_us": p99,
+        "inflight_dispatches": EXEC_COUNTERS["inflight_dispatches"],
+        "overlap_high_water": EXEC_COUNTERS["overlap_high_water"],
+        "collect_us": EXEC_COUNTERS["collect_us"],
+        "replica_dispatches": EXEC_COUNTERS["replica_dispatches"],
+        "tier_flushes": EXEC_COUNTERS["tier_flushes"],
+        "deadline_flushes": EXEC_COUNTERS["deadline_flushes"],
+        "flusher_wakeups": EXEC_COUNTERS["flusher_wakeups"],
+        "overflow_reruns": EXEC_COUNTERS["rerun_calls"],
+    }
+
+
+def _pow2_tiers(max_b: int):
+    """Every power-of-2 batch tier a flush of up to ``max_b`` rows can hit."""
+    return [1 << i for i in range(max(1, max_b - 1).bit_length() + 1)]
+
+
+def _make_engine(postings, log, m, seed, max_inflight, flush_tier,
+                 deadline_us):
+    topo = make_topology(*LAYOUT)
+    eng = AsyncSearchEngine(
+        postings, w=256, m=m, seed=seed, topology=topo,
+        shard_min_g=1 << 20,            # single-device buckets -> balancer
+        flush_tier=flush_tier, deadline_us=deadline_us,
+        result_cache=0,                 # repeats must hit the device
+        max_inflight=max_inflight)
+    # burst submission coalesces buckets far past flush_tier (take_due pops
+    # everything accumulated), so deadline flushes can land on ANY tier up
+    # to the per-signature query count — warm them all or a serve-time
+    # compile stalls the window mid-measurement
+    eng.warm(log, top_k=len(log), b_tiers=_pow2_tiers(len(log)))
+    return eng, topo
+
+
+def run(n_queries: int = 256, n_terms: int = 12, set_size: int = 50000,
+        overlap: int = 400, m: int = 6, flush_tier: int = 8,
+        deadline_us: float = 2000.0, passes: int = 5, seed: int = 11):
+    # perm_seed == the engines' seed: the planted hot-quarter values must be
+    # hot under the SAME permutation the engines partition with
+    postings, planted = hot_z_postings(n_terms, set_size, overlap, seed=seed,
+                                       perm_seed=seed)
+    log = hot_mixed_log(n_terms, n_queries, seed=seed + 1)
+    avail = len(jax.devices())
+    assert avail >= LAYOUT[0] * LAYOUT[1], f"needs 4 devices, have {avail}"
+
+    oracle = SearchEngine(postings, w=256, m=m, seed=seed,
+                          use_device=True).query_batch(log)
+
+    plan = (("synchronous", 1), ("overlapped", 8))
+    engines = {}
+    for mode, max_inflight in plan:
+        eng, topo = _make_engine(postings, log, m, seed, max_inflight,
+                                 flush_tier, deadline_us)
+        serve_burst(eng, log)           # priming pass: lazy init + any
+        engines[mode] = (eng, topo)     # shape warming missed
+
+    # interleaved passes: mode A's pass k runs back-to-back with mode B's
+    # pass k, so slow drift on a shared host hits both modes alike; the
+    # per-mode MEDIAN pass is the headline
+    runs = {mode: [] for mode, _ in plan}
+    for _ in range(passes):
+        for mode, _ in plan:
+            eng, topo = engines[mode]
+            tickets, metrics = serve_burst(eng, log)
+            assert all(d["in_flight"] == 0 for d in topo.load_snapshot())
+            metrics["balancer_dispatched"] = [
+                d["dispatched"] for d in topo.load_snapshot()]
+            runs[mode].append((tickets, metrics))
+
+    modes = {}
+    identical = True
+    for mode, _ in plan:
+        walls = [m_["wall_s"] for _, m_ in runs[mode]]
+        # the pass with the median wall represents the mode (odd `passes`
+        # hits the true median; even picks the lower middle)
+        rep = sorted(range(len(walls)), key=lambda i: walls[i])[
+            (len(walls) - 1) // 2]
+        metrics = dict(runs[mode][rep][1])
+        metrics["passes"] = passes
+        metrics["walls_s"] = walls
+        modes[mode] = metrics
+        identical &= all(
+            np.array_equal(t.value.doc_ids, o.doc_ids)
+            for tickets, _ in runs[mode]
+            for t, o in zip(tickets, oracle))
+    assert identical, "overlapped serving diverged from query_batch oracle"
+
+    return {
+        "devices": avail,
+        "layout": f"{LAYOUT[0]}x{LAYOUT[1]}",
+        "queries": n_queries,
+        "n_terms": n_terms,
+        "set_size": set_size,
+        "overlap": len(planted),
+        "m": m,
+        "flush_tier": flush_tier,
+        "deadline_us": deadline_us,
+        "shard_min_g": 1 << 20,
+        "identical_to_query_batch": int(identical),
+        "modes": modes,
+        "qps_ratio_overlapped_vs_sync": (
+            modes["overlapped"]["served_qps"]
+            / modes["synchronous"]["served_qps"]),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--terms", type=int, default=12)
+    ap.add_argument("--set-size", type=int, default=50000)
+    ap.add_argument("--overlap", type=int, default=400)
+    ap.add_argument("--m", type=int, default=6)
+    ap.add_argument("--flush-tier", type=int, default=8)
+    ap.add_argument("--passes", type=int, default=5)
+    ap.add_argument("--out", type=str,
+                    default=str(pathlib.Path(__file__).resolve().parent.parent
+                                / "BENCH_concurrent_qps.json"))
+    args = ap.parse_args()
+    res = run(args.queries, args.terms, args.set_size, args.overlap,
+              m=args.m, flush_tier=args.flush_tier, passes=args.passes)
+    print(json.dumps(res, indent=2))
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

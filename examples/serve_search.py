@@ -7,7 +7,9 @@ with the paper's keyword-count mix, with online algorithm selection
 instead: single-query submits into the deadline-aware admission queue,
 with compile warming and the result cache on.  Add ``--flusher`` to let
 the background flusher thread own the flush cadence (no manual ``pump``
-calls anywhere — the autonomous serving runtime).
+calls anywhere — the autonomous serving runtime); ``--max-inflight N``
+bounds its overlapped dispatch window (1 = collect each bucket before
+dispatching the next, the synchronous shape).
 
 ``--mesh RxS`` (e.g. ``--mesh 2x2``) serves over a 2-D device topology:
 R data-parallel replica rows x S z-shards per row.  Huge-G queries run on
@@ -27,7 +29,8 @@ from repro.data.pipeline import inverted_index, zipf_corpus
 from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
 
 
-def serve_async(postings, queries, flusher: bool = False, topology=None):
+def serve_async(postings, queries, flusher: bool = False, topology=None,
+                max_inflight: int = 8):
     """Submit one query at a time; flushes run on the manual pump cadence
     or — with ``flusher`` — on the background flusher thread."""
     from repro.core.engine import EXEC_COUNTERS
@@ -36,7 +39,8 @@ def serve_async(postings, queries, flusher: bool = False, topology=None):
     # partial-flush size hits a pre-traced executable
     engine = AsyncSearchEngine(postings, w=256, m=2, deadline_us=2000,
                                flush_tier=8, warm_queries=queries,
-                               warm_top_k=64, topology=topology)
+                               warm_top_k=64, topology=topology,
+                               max_inflight=max_inflight)
     EXEC_COUNTERS.reset()
     t0 = time.perf_counter()
     tickets = []
@@ -84,6 +88,9 @@ def main():
     ap.add_argument("--mesh", type=str, default=None, metavar="RxS",
                     help="serve over a 2-D topology: R replica rows x S "
                          "z-shards (e.g. 2x2); needs R*S devices")
+    ap.add_argument("--max-inflight", type=int, default=8,
+                    help="with --async-front: bound on concurrently "
+                         "dispatched buckets (1 = synchronous collect)")
     args = ap.parse_args()
 
     topology = None
@@ -108,7 +115,8 @@ def main():
         queries = repeated_query_log(sorted(kept), args.queries,
                                      n_distinct=max(8, args.queries // 4),
                                      seed=2)
-        serve_async(kept, queries, flusher=args.flusher, topology=topology)
+        serve_async(kept, queries, flusher=args.flusher, topology=topology,
+                    max_inflight=args.max_inflight)
         return
     engine = SearchEngine(postings, w=256, m=2, use_device=args.device,
                           topology=topology)

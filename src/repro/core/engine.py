@@ -67,12 +67,22 @@ same single enlarged re-run, so 2-D results are bit-identical to the 1-D,
 unsharded, and host paths.  The topology layer (``exec/topology.py``) owns
 mesh construction, replica placement, and the per-replica load balancer
 that spreads single-device buckets across replica rows.
+
+Asynchronous dispatch: every pipeline is split into a non-blocking
+``dispatch_*_batch`` half (jit call issued; JAX async dispatch returns
+device arrays that are futures) and a blocking :meth:`PendingBatch.collect`
+half (deferred ``jax.device_get`` + overflow re-runs + host
+post-processing), with ``intersect_*_batch`` kept as the synchronous
+composition of the two.  The exec layer (``exec/batch.py``) builds its
+:class:`InFlightBucket` window on these halves so *independent buckets*
+overlap on the device — the serving-layer throughput win the per-bucket
+row overlap above cannot provide.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +100,10 @@ __all__ = [
     "SHARD_MIN_G",
     "default_capacity",
     "default_capacity_per_shard",
+    "PendingBatch",
+    "dispatch_device_batch",
+    "dispatch_mesh2d_batch",
+    "dispatch_sharded_batch",
     "intersect_device",
     "intersect_device_batch",
     "intersect_mesh2d_batch",
@@ -143,6 +157,17 @@ class ExecCounters(dict):
       counted separately in ``mesh2d_row_dispatches``).
     - ``replica_dispatches`` — single-device buckets routed to a replica
       row by the topology's load balancer (``exec/topology.py``).
+    - ``inflight_dispatches`` — buckets dispatched asynchronously through
+      ``exec/batch.py::dispatch_bucket`` (one per :class:`InFlightBucket`
+      handle, whether or not anything overlapped).
+    - ``collect_us`` — cumulative microseconds spent in the blocking
+      *collect* phase (``jax.device_get`` wait + overflow re-runs + host
+      post-processing); dispatch-to-collect overlap shows up as wall time
+      that is NOT in this counter.
+    - ``overlap_high_water`` — the maximum number of buckets that were
+      simultaneously in flight (dispatched, not yet collected) since the
+      last reset: ``>= 2`` is the signature of real dispatch/collect
+      overlap, ``<= 1`` means execution was effectively synchronous.
     - ``warm_executions`` pipeline executions issued by compile warming
       (:func:`warm_executables`) at index-build time.
     - ``result_cache_hits`` / ``result_cache_misses`` — lookups in the
@@ -171,6 +196,7 @@ class ExecCounters(dict):
         "sharded_calls", "sharded_traces", "sharded_rerun_calls",
         "mesh2d_calls", "mesh2d_traces", "mesh2d_rerun_calls",
         "mesh2d_row_dispatches", "replica_dispatches",
+        "inflight_dispatches", "collect_us", "overlap_high_water",
         "warm_executions",
         "result_cache_hits", "result_cache_misses",
         "tier_flushes", "deadline_flushes",
@@ -432,6 +458,128 @@ def _signature(sets: Sequence[DeviceSet]) -> Tuple[Tuple[int, ...], Tuple[int, .
     return tuple(s.t for s in sets), tuple(s.gmax for s in sets)
 
 
+@dataclasses.dataclass
+class PendingBatch:
+    """In-flight handle for one dispatched bucket pass.
+
+    JAX dispatch is asynchronous: the jit call returns device arrays that
+    are *futures* — compute proceeds while the host does other work, and
+    only ``jax.device_get`` blocks.  ``dispatch_*_batch`` issues the first
+    pass and wraps its handles here; :meth:`collect` performs the deferred
+    transfer, the host-side result processing, and the (rare) overflow
+    re-run passes, returning exactly what the synchronous
+    ``intersect_*_batch`` returns.  Overflow re-runs issue new jit calls
+    from inside collect — they resolve against the already-captured
+    DeviceSet rows, so collect never needs the dispatcher's locks.
+
+    ``handles`` is the first pass's raw output pytree; :meth:`is_ready`
+    polls it without blocking (a non-blocking peek for schedulers that
+    want to collect completed buckets first).  :meth:`collect` is
+    memoized — calling it twice returns the same result list.
+    """
+
+    n_queries: int
+    handles: object = None
+    _collect: Optional[Callable[[], List[Tuple[np.ndarray, Dict]]]] = None
+    _results: Optional[List[Tuple[np.ndarray, Dict]]] = None
+
+    def is_ready(self) -> bool:
+        """True when every first-pass device buffer has materialized (a
+        collect would not block on the transfer; overflow re-runs can
+        still add work).  Conservatively True for handle types without
+        ``is_ready`` (e.g. already-fetched results)."""
+        if self._results is not None:
+            return True
+        for leaf in jax.tree_util.tree_leaves(self.handles):
+            ready = getattr(leaf, "is_ready", None)
+            if ready is not None and not ready():
+                return False
+        return True
+
+    def collect(self) -> List[Tuple[np.ndarray, Dict]]:
+        """Block for the results: device transfer + overflow re-runs +
+        host post-processing.  Returns [(sorted values, stats), ...] in
+        query order (memoized)."""
+        if self._results is None:
+            self._results = self._collect()
+            self._collect = None  # drop closed-over device handles
+            self.handles = None
+        return self._results
+
+
+def dispatch_device_batch(
+    queries: Sequence[Sequence[DeviceSet]],
+    capacity: Optional[int] = None,
+    use_pallas="auto",
+) -> PendingBatch:
+    """Issue the first pass of a same-signature bucket without blocking.
+
+    The asynchronous half of :func:`intersect_device_batch`: validates the
+    bucket, issues ONE jit execution for the first pass (JAX returns
+    immediately — the arrays are futures), and returns a
+    :class:`PendingBatch` whose :meth:`~PendingBatch.collect` finishes the
+    job (transfer, overflow re-runs, result assembly).  Counter semantics
+    are unchanged: ``batch_calls`` per pass (the first bumps at dispatch
+    time, re-run passes bump inside collect), ``rerun_calls`` per overflow
+    pass.
+    """
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    ordered = [sorted(q, key=set_sort_key) for q in queries]
+    ts, gmaxes = _signature(ordered[0])
+    for q in ordered[1:]:
+        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
+    G = 1 << ts[-1]
+
+    def issue(active: List[int], cap: int):
+        b_tier = 1 << (len(active) - 1).bit_length()  # pad B to a pow2 tier
+        rows = active + [active[0]] * (b_tier - len(active))
+        vals = tuple(
+            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
+        )
+        images = tuple(
+            tuple(ordered[i][j].images for i in rows) for j in range(len(ts))
+        )
+        EXEC_COUNTERS["batch_calls"] += 1
+        return _intersect_k_batch(vals, images, ts, gmaxes, cap, use_pallas)
+
+    first_active = list(range(len(ordered)))
+    first_cap = capacity or default_capacity(ts)
+    first_handles = issue(first_active, first_cap)
+
+    def collect() -> List[Tuple[np.ndarray, Dict]]:
+        results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+        active, cap, handles = first_active, first_cap, first_handles
+        while True:
+            packed_h, r_h, n_surv_h, over_h = jax.device_get(handles)
+            rerun = []
+            for row, qi in enumerate(active):
+                if over_h[row]:
+                    rerun.append(qi)
+                    continue
+                row_vals = packed_h[row].ravel()
+                out = row_vals[row_vals != -1]
+                results[qi] = (
+                    np.sort(out.astype(np.uint32)),
+                    {
+                        "group_tuples": G,
+                        "tuples_survived": int(n_surv_h[row]),
+                        "capacity": cap,
+                        "r": int(r_h[row]),
+                        "batch_size": len(active),
+                    },
+                )
+            if not rerun:
+                return results  # type: ignore[return-value]
+            active = rerun
+            cap = G  # rare path: ONE re-run of the overflow subset at G
+            EXEC_COUNTERS["rerun_calls"] += 1
+            handles = issue(active, cap)
+
+    return PendingBatch(n_queries=len(ordered), handles=first_handles,
+                        _collect=collect)
+
+
 def intersect_device_batch(
     queries: Sequence[Sequence[DeviceSet]],
     capacity: Optional[int] = None,
@@ -454,58 +602,15 @@ def intersect_device_batch(
     executables per signature.  Padding rows are dropped before results
     materialize.
 
+    The synchronous composition of :func:`dispatch_device_batch` +
+    :meth:`PendingBatch.collect` — callers that can overlap buckets use
+    the two halves directly.
+
     Returns a list of (sorted result values, stats dict) in query order.
     """
-    if not len(queries):
-        return []
-    ordered = [sorted(q, key=set_sort_key) for q in queries]
-    ts, gmaxes = _signature(ordered[0])
-    for q in ordered[1:]:
-        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
-    G = 1 << ts[-1]
-    cap = capacity or default_capacity(ts)
-    results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
-    active = list(range(len(ordered)))
-    first_pass = True
-    while active:
-        b_tier = 1 << (len(active) - 1).bit_length()  # pad B to a pow2 tier
-        rows = active + [active[0]] * (b_tier - len(active))
-        vals = tuple(
-            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
-        )
-        images = tuple(
-            tuple(ordered[i][j].images for i in rows) for j in range(len(ts))
-        )
-        EXEC_COUNTERS["batch_calls"] += 1
-        if not first_pass:
-            EXEC_COUNTERS["rerun_calls"] += 1
-        packed, r, n_surv, overflow = _intersect_k_batch(
-            vals, images, ts, gmaxes, cap, use_pallas
-        )
-        packed_h, r_h, n_surv_h, over_h = jax.device_get(
-            (packed, r, n_surv, overflow)
-        )
-        rerun = []
-        for row, qi in enumerate(active):
-            if over_h[row]:
-                rerun.append(qi)
-                continue
-            row_vals = packed_h[row].ravel()
-            out = row_vals[row_vals != -1]
-            results[qi] = (
-                np.sort(out.astype(np.uint32)),
-                {
-                    "group_tuples": G,
-                    "tuples_survived": int(n_surv_h[row]),
-                    "capacity": cap,
-                    "r": int(r_h[row]),
-                    "batch_size": len(active),
-                },
-            )
-        active = rerun
-        cap = G  # rare path: one re-run of the overflow subset, never more
-        first_pass = False
-    return results  # type: ignore[return-value]
+    return dispatch_device_batch(
+        queries, capacity=capacity, use_pallas=use_pallas
+    ).collect()
 
 
 def intersect_device(
@@ -824,6 +929,89 @@ def _intersect_k_sharded_batch(
     return fn(*vals, *images)
 
 
+def dispatch_sharded_batch(
+    queries: Sequence[Sequence[DeviceSet]],
+    mesh: Mesh,
+    axis: str = SHARD_AXIS,
+    capacity_per_shard: Optional[int] = None,
+    use_pallas="auto",
+) -> PendingBatch:
+    """Issue the first z-sharded pass of a bucket without blocking.
+
+    The asynchronous half of :func:`intersect_sharded_batch` — see
+    :func:`dispatch_device_batch` for the dispatch/collect contract.
+    Counters: ``sharded_calls`` per pass, ``sharded_rerun_calls`` per
+    overflow pass (bumped inside collect).
+    """
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    n_shards = mesh.shape[axis]
+    ordered = [sorted(q, key=set_sort_key) for q in queries]
+    ts, gmaxes = _signature(ordered[0])
+    for q in ordered[1:]:
+        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
+    assert (1 << ts[0]) % n_shards == 0, (
+        f"smallest set (t={ts[0]}) must split over {n_shards} shards"
+    )
+    G = 1 << ts[-1]
+    G_local = G // n_shards
+
+    def issue(active: List[int], cap: int):
+        b_tier = 1 << (len(active) - 1).bit_length()  # pad B to a pow2 tier
+        rows = active + [active[0]] * (b_tier - len(active))
+        vals = tuple(
+            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
+        )
+        images = tuple(
+            tuple(ordered[i][j].images for i in rows) for j in range(len(ts))
+        )
+        EXEC_COUNTERS["sharded_calls"] += 1
+        return _intersect_k_sharded_batch(
+            vals, images, mesh, axis, ts, gmaxes, cap, use_pallas
+        )
+
+    first_active = list(range(len(ordered)))
+    first_cap = min(
+        capacity_per_shard or default_capacity_per_shard(ts, n_shards),
+        G_local,
+    )
+    first_handles = issue(first_active, first_cap)
+
+    def collect() -> List[Tuple[np.ndarray, Dict]]:
+        results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+        active, cap, handles = first_active, first_cap, first_handles
+        while True:
+            packed_h, r_h, n_surv_h, over_h = jax.device_get(handles)
+            rerun = []
+            for row, qi in enumerate(active):
+                if over_h[:, row].any():
+                    rerun.append(qi)
+                    continue
+                row_vals = packed_h[row].ravel()
+                out = row_vals[row_vals != -1]
+                results[qi] = (
+                    np.sort(out.astype(np.uint32)),
+                    {
+                        "group_tuples": G,
+                        "tuples_survived": int(n_surv_h[:, row].sum()),
+                        "max_shard_survivors": int(n_surv_h[:, row].max()),
+                        "capacity_per_shard": cap,
+                        "n_shards": n_shards,
+                        "r": int(r_h[:, row].sum()),
+                        "batch_size": len(active),
+                    },
+                )
+            if not rerun:
+                return results  # type: ignore[return-value]
+            active = rerun
+            cap = G_local  # rare path: one re-run at local G, no overflow
+            EXEC_COUNTERS["sharded_rerun_calls"] += 1
+            handles = issue(active, cap)
+
+    return PendingBatch(n_queries=len(ordered), handles=first_handles,
+                        _collect=collect)
+
+
 def intersect_sharded_batch(
     queries: Sequence[Sequence[DeviceSet]],
     mesh: Mesh,
@@ -850,66 +1038,13 @@ def intersect_sharded_batch(
 
     Pass z-sharded mirrors (:meth:`DeviceSet.shard`) to keep posting data
     resident on its shard across calls; plain mirrors also work but are
-    re-partitioned on entry.
+    re-partitioned on entry.  The synchronous composition of
+    :func:`dispatch_sharded_batch` + :meth:`PendingBatch.collect`.
     """
-    if not len(queries):
-        return []
-    n_shards = mesh.shape[axis]
-    ordered = [sorted(q, key=set_sort_key) for q in queries]
-    ts, gmaxes = _signature(ordered[0])
-    for q in ordered[1:]:
-        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
-    assert (1 << ts[0]) % n_shards == 0, (
-        f"smallest set (t={ts[0]}) must split over {n_shards} shards"
-    )
-    G = 1 << ts[-1]
-    G_local = G // n_shards
-    cap = capacity_per_shard or default_capacity_per_shard(ts, n_shards)
-    cap = min(cap, G_local)
-    results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
-    active = list(range(len(ordered)))
-    first_pass = True
-    while active:
-        b_tier = 1 << (len(active) - 1).bit_length()  # pad B to a pow2 tier
-        rows = active + [active[0]] * (b_tier - len(active))
-        vals = tuple(
-            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
-        )
-        images = tuple(
-            tuple(ordered[i][j].images for i in rows) for j in range(len(ts))
-        )
-        EXEC_COUNTERS["sharded_calls"] += 1
-        if not first_pass:
-            EXEC_COUNTERS["sharded_rerun_calls"] += 1
-        packed, r, n_surv, overflow = _intersect_k_sharded_batch(
-            vals, images, mesh, axis, ts, gmaxes, cap, use_pallas
-        )
-        packed_h, r_h, n_surv_h, over_h = jax.device_get(
-            (packed, r, n_surv, overflow)
-        )
-        rerun = []
-        for row, qi in enumerate(active):
-            if over_h[:, row].any():
-                rerun.append(qi)
-                continue
-            row_vals = packed_h[row].ravel()
-            out = row_vals[row_vals != -1]
-            results[qi] = (
-                np.sort(out.astype(np.uint32)),
-                {
-                    "group_tuples": G,
-                    "tuples_survived": int(n_surv_h[:, row].sum()),
-                    "max_shard_survivors": int(n_surv_h[:, row].max()),
-                    "capacity_per_shard": cap,
-                    "n_shards": n_shards,
-                    "r": int(r_h[:, row].sum()),
-                    "batch_size": len(active),
-                },
-            )
-        active = rerun
-        cap = G_local  # rare path: one re-run at local G, overflow impossible
-        first_pass = False
-    return results  # type: ignore[return-value]
+    return dispatch_sharded_batch(
+        queries, mesh, axis=axis, capacity_per_shard=capacity_per_shard,
+        use_pallas=use_pallas,
+    ).collect()
 
 
 def intersect_sharded(
@@ -938,6 +1073,131 @@ def intersect_sharded(
 # --------------------------------------------------------------------------
 # 2-D distribution: data-parallel replicas x z-sharding
 # --------------------------------------------------------------------------
+
+def dispatch_mesh2d_batch(
+    queries: Sequence[Sequence[ReplicatedDeviceSet]],
+    topology,
+    capacity_per_shard: Optional[int] = None,
+    use_pallas="auto",
+) -> PendingBatch:
+    """Issue the first 2-D pass of a bucket without blocking.
+
+    The asynchronous half of :func:`intersect_mesh2d_batch` — see
+    :func:`dispatch_device_batch` for the dispatch/collect contract.  A
+    pass already issues all replica rows back-to-back before any
+    transfer; this additionally defers the single collection point, so
+    *different buckets* can have their rows in flight simultaneously.
+    Counters: ``mesh2d_calls`` per pass, ``mesh2d_row_dispatches`` per row
+    execution, ``mesh2d_rerun_calls`` per overflow pass (inside collect).
+    """
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    n_replicas = topology.replicas
+    n_shards = topology.shards
+    assert n_replicas & (n_replicas - 1) == 0, (
+        "data axis must be a power of two (batch tiers are pow2)"
+    )
+    ordered = [sorted(q, key=set_sort_key) for q in queries]
+    ts, gmaxes = _signature(ordered[0])
+    for q in ordered[1:]:
+        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
+    assert (1 << ts[0]) % n_shards == 0, (
+        f"smallest set (t={ts[0]}) must split over {n_shards} shards"
+    )
+    G = 1 << ts[-1]
+    G_local = G // n_shards
+
+    def issue(active: List[int], cap: int):
+        # pow2 B-tier, floored at the replica count so `data` splits evenly
+        # into equal pow2 row slices (one executable shape per pass)
+        b_tier = max(n_replicas, 1 << (len(active) - 1).bit_length())
+        rows = active + [active[0]] * (b_tier - len(active))
+        slice_len = b_tier // n_replicas
+        EXEC_COUNTERS["mesh2d_calls"] += 1
+        handles = {}
+        for rr in range(n_replicas):
+            if rr * slice_len >= len(active):
+                continue  # slice is pure padding: nothing real to compute
+            chunk = rows[rr * slice_len:(rr + 1) * slice_len]
+            vals = tuple(
+                tuple(ordered[i][j].row(rr).vals for i in chunk)
+                for j in range(len(ts))
+            )
+            images = tuple(
+                tuple(ordered[i][j].row(rr).images for i in chunk)
+                for j in range(len(ts))
+            )
+            EXEC_COUNTERS["mesh2d_row_dispatches"] += 1
+            if n_shards > 1:
+                out = _intersect_k_sharded_batch(
+                    vals, images, topology.row_mesh(rr),
+                    topology.shard_axis, ts, gmaxes, cap, use_pallas,
+                    trace_counter="mesh2d_traces",
+                )
+            else:
+                packed, r, n_surv, overflow = _intersect_k_batch(
+                    vals, images, ts, gmaxes, cap, use_pallas,
+                    trace_counter="mesh2d_traces",
+                )
+                # single-shard layout: add the length-1 shard axis the
+                # sharded kernel's (n_shards, B) outputs carry
+                out = (packed, r[None], n_surv[None], overflow[None])
+            handles[rr] = out
+        return handles, slice_len
+
+    first_active = list(range(len(ordered)))
+    first_cap = min(
+        capacity_per_shard or default_capacity_per_shard(ts, n_shards),
+        G_local,
+    )
+    first_handles, first_slice_len = issue(first_active, first_cap)
+
+    def collect() -> List[Tuple[np.ndarray, Dict]]:
+        results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+        active, cap = first_active, first_cap
+        handles, slice_len = first_handles, first_slice_len
+        while True:
+            # one collection point: every row was in flight before any
+            # transfer started
+            fetched = jax.device_get(handles)
+            rerun = []
+            for rr, (packed_h, r_h, n_surv_h, over_h) in fetched.items():
+                chunk_start = rr * slice_len
+                for local_row in range(slice_len):
+                    pos = chunk_start + local_row
+                    if pos >= len(active):
+                        continue  # padding rows repeat query active[0]
+                    qi = active[pos]
+                    if over_h[:, local_row].any():
+                        rerun.append(qi)
+                        continue
+                    row_vals = packed_h[local_row].ravel()
+                    out_vals = row_vals[row_vals != -1]
+                    results[qi] = (
+                        np.sort(out_vals.astype(np.uint32)),
+                        {
+                            "group_tuples": G,
+                            "tuples_survived": int(n_surv_h[:, local_row].sum()),
+                            "max_shard_survivors": int(
+                                n_surv_h[:, local_row].max()),
+                            "capacity_per_shard": cap,
+                            "n_shards": n_shards,
+                            "n_replicas": n_replicas,
+                            "replica": rr,
+                            "r": int(r_h[:, local_row].sum()),
+                            "batch_size": len(active),
+                        },
+                    )
+            if not rerun:
+                return results  # type: ignore[return-value]
+            active = rerun
+            cap = G_local  # rare path: one re-run at local G, no overflow
+            EXEC_COUNTERS["mesh2d_rerun_calls"] += 1
+            handles, slice_len = issue(active, cap)
+
+    return PendingBatch(n_queries=len(ordered), handles=first_handles,
+                        _collect=collect)
+
 
 def intersect_mesh2d_batch(
     queries: Sequence[Sequence[ReplicatedDeviceSet]],
@@ -979,99 +1239,14 @@ def intersect_mesh2d_batch(
     every case.  Counters: ``mesh2d_calls`` per bucket pass,
     ``mesh2d_row_dispatches`` per row execution, ``mesh2d_traces`` /
     ``mesh2d_rerun_calls`` as in the ``sharded_*`` family.
+
+    The synchronous composition of :func:`dispatch_mesh2d_batch` +
+    :meth:`PendingBatch.collect`.
     """
-    if not len(queries):
-        return []
-    n_replicas = topology.replicas
-    n_shards = topology.shards
-    assert n_replicas & (n_replicas - 1) == 0, (
-        "data axis must be a power of two (batch tiers are pow2)"
-    )
-    ordered = [sorted(q, key=set_sort_key) for q in queries]
-    ts, gmaxes = _signature(ordered[0])
-    for q in ordered[1:]:
-        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
-    assert (1 << ts[0]) % n_shards == 0, (
-        f"smallest set (t={ts[0]}) must split over {n_shards} shards"
-    )
-    G = 1 << ts[-1]
-    G_local = G // n_shards
-    cap = capacity_per_shard or default_capacity_per_shard(ts, n_shards)
-    cap = min(cap, G_local)
-    results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
-    active = list(range(len(ordered)))
-    first_pass = True
-    while active:
-        # pow2 B-tier, floored at the replica count so `data` splits evenly
-        # into equal pow2 row slices (one executable shape per pass)
-        b_tier = max(n_replicas, 1 << (len(active) - 1).bit_length())
-        rows = active + [active[0]] * (b_tier - len(active))
-        slice_len = b_tier // n_replicas
-        EXEC_COUNTERS["mesh2d_calls"] += 1
-        if not first_pass:
-            EXEC_COUNTERS["mesh2d_rerun_calls"] += 1
-        handles = {}
-        for rr in range(n_replicas):
-            if rr * slice_len >= len(active):
-                continue  # slice is pure padding: nothing real to compute
-            chunk = rows[rr * slice_len:(rr + 1) * slice_len]
-            vals = tuple(
-                tuple(ordered[i][j].row(rr).vals for i in chunk)
-                for j in range(len(ts))
-            )
-            images = tuple(
-                tuple(ordered[i][j].row(rr).images for i in chunk)
-                for j in range(len(ts))
-            )
-            EXEC_COUNTERS["mesh2d_row_dispatches"] += 1
-            if n_shards > 1:
-                out = _intersect_k_sharded_batch(
-                    vals, images, topology.row_mesh(rr),
-                    topology.shard_axis, ts, gmaxes, cap, use_pallas,
-                    trace_counter="mesh2d_traces",
-                )
-            else:
-                packed, r, n_surv, overflow = _intersect_k_batch(
-                    vals, images, ts, gmaxes, cap, use_pallas,
-                    trace_counter="mesh2d_traces",
-                )
-                # single-shard layout: add the length-1 shard axis the
-                # sharded kernel's (n_shards, B) outputs carry
-                out = (packed, r[None], n_surv[None], overflow[None])
-            handles[rr] = out
-        # one collection point: every row is in flight before any transfer
-        fetched = jax.device_get(handles)
-        rerun = []
-        for rr, (packed_h, r_h, n_surv_h, over_h) in fetched.items():
-            chunk_start = rr * slice_len
-            for local_row in range(slice_len):
-                pos = chunk_start + local_row
-                if pos >= len(active):
-                    continue  # padding rows repeat query active[0]
-                qi = active[pos]
-                if over_h[:, local_row].any():
-                    rerun.append(qi)
-                    continue
-                row_vals = packed_h[local_row].ravel()
-                out_vals = row_vals[row_vals != -1]
-                results[qi] = (
-                    np.sort(out_vals.astype(np.uint32)),
-                    {
-                        "group_tuples": G,
-                        "tuples_survived": int(n_surv_h[:, local_row].sum()),
-                        "max_shard_survivors": int(n_surv_h[:, local_row].max()),
-                        "capacity_per_shard": cap,
-                        "n_shards": n_shards,
-                        "n_replicas": n_replicas,
-                        "replica": rr,
-                        "r": int(r_h[:, local_row].sum()),
-                        "batch_size": len(active),
-                    },
-                )
-        active = rerun
-        cap = G_local  # rare path: one re-run at local G, overflow impossible
-        first_pass = False
-    return results  # type: ignore[return-value]
+    return dispatch_mesh2d_batch(
+        queries, topology, capacity_per_shard=capacity_per_shard,
+        use_pallas=use_pallas,
+    ).collect()
 
 
 class BatchedEngine:

@@ -5,7 +5,11 @@ Dataflow: :mod:`plan` normalizes raw queries into shape-keyed
 signature and drives one jit execution per bucket through
 ``core.engine.intersect_device_batch`` (:func:`~repro.exec.batch.
 execute_bucket` is the single-bucket entry the async admission front-end
-flushes into); :mod:`cache` remembers results of repeated normalized plans
+flushes into, and :func:`~repro.exec.batch.dispatch_bucket` /
+:class:`~repro.exec.batch.InFlightBucket` its asynchronous split — issue
+the jit call now, collect the transfer + overflow re-run later — so a
+serving loop overlaps independent buckets); :mod:`cache` remembers
+results of repeated normalized plans
 so hits skip the device entirely; :mod:`adaptive` closes the telemetry
 loop — learned capacity tiers from observed survivor counts and adaptive
 flush budgets from observed arrival rates; :mod:`topology` owns the 2-D
@@ -16,7 +20,9 @@ targets.
 from .plan import QueryPlan, ShapeSig, plan_query
 from .adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
 from .batch import (
+    InFlightBucket,
     bucket_plans,
+    dispatch_bucket,
     execute_bucket,
     execute_name_queries,
     execute_plan_buckets,
@@ -31,7 +37,9 @@ __all__ = [
     "AdaptiveDeadline",
     "CapacityModel",
     "adaptive_key",
+    "InFlightBucket",
     "bucket_plans",
+    "dispatch_bucket",
     "execute_bucket",
     "execute_name_queries",
     "execute_plan_buckets",

@@ -22,9 +22,23 @@ part of the signature — the same bucket may run on any replica.
 Per-query timing is amortized: each result's stats carry ``batch_us`` (the
 bucket wall time divided by bucket size), which is the honest per-query
 cost under heavy traffic.
+
+Asynchronous dispatch: :func:`dispatch_bucket` is the non-blocking half of
+:func:`execute_bucket` — it issues the bucket's first jit pass (routing,
+balancer placement, lazy-mirror resolution) and returns an
+:class:`InFlightBucket` whose :meth:`~InFlightBucket.collect` blocks for
+the transfer, runs overflow re-runs, releases the balancer, and feeds the
+capacity model.  JAX's async dispatch means the device computes while the
+handle is held, so a caller that dispatches several buckets before
+collecting overlaps them — across replica rows, and host post-processing
+against device compute.  The module tracks the overlap in
+``EXEC_COUNTERS``: ``inflight_dispatches`` per dispatched bucket,
+``overlap_high_water`` (max simultaneous in-flight buckets), and
+``collect_us`` (cumulative blocking-collect time).
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import defaultdict
 from typing import (
@@ -34,17 +48,42 @@ from typing import (
 import numpy as np
 
 from ..core.engine import (
-    EXEC_COUNTERS, SHARD_AXIS, DeviceSet, default_capacity_per_shard,
-    intersect_device_batch, intersect_mesh2d_batch, intersect_sharded_batch,
+    EXEC_COUNTERS, SHARD_AXIS, DeviceSet, PendingBatch,
+    default_capacity_per_shard, dispatch_device_batch, dispatch_mesh2d_batch,
+    dispatch_sharded_batch,
 )
 from .plan import QueryPlan, ShapeSig, plan_query
 
 __all__ = [
     "bucket_plans",
+    "InFlightBucket",
+    "dispatch_bucket",
     "execute_bucket",
     "execute_plan_buckets",
     "execute_name_queries",
 ]
+
+# process-global in-flight gauge behind overlap_high_water: dispatch_bucket
+# increments, InFlightBucket.collect decrements, and the high-water mark
+# lands in EXEC_COUNTERS (counters themselves stay unlocked/approximate;
+# the gauge gets a lock because overlap accounting is the one telemetry
+# tests assert exactly across threads)
+_inflight_lock = threading.Lock()
+_inflight_now = 0
+
+
+def _inflight_enter() -> None:
+    global _inflight_now
+    with _inflight_lock:
+        _inflight_now += 1
+        if _inflight_now > EXEC_COUNTERS["overlap_high_water"]:
+            EXEC_COUNTERS["overlap_high_water"] = _inflight_now
+
+
+def _inflight_exit() -> None:
+    global _inflight_now
+    with _inflight_lock:
+        _inflight_now = max(0, _inflight_now - 1)
 
 
 def bucket_plans(
@@ -63,6 +102,183 @@ def bucket_plans(
         )
         buckets[plan.sig].append((qi, plan))
     return dict(buckets)
+
+
+class InFlightBucket:
+    """Handle for one dispatched-but-not-collected bucket.
+
+    Created by :func:`dispatch_bucket`; holds the pipeline's
+    :class:`~repro.core.engine.PendingBatch`, the bucket bookkeeping
+    (items, signature, balancer placement), and finishes the job in
+    :meth:`collect`.  The split is what lets a serving loop keep several
+    buckets on the device at once: dispatch is cheap host work (routing +
+    jit call issue), collect is where the blocking transfer lives.
+
+    Balancer accounting: a balancer-placed bucket holds its replica's
+    in-flight weight from dispatch until :meth:`collect` — so
+    ``ReplicaBalancer.load_snapshot()["in_flight"]`` reflects work that is
+    *actually on the device*, and least-loaded routing of the next
+    dispatch sees it.  Release happens exactly once, even when collect
+    raises.
+
+    :meth:`collect` is idempotent (memoized) and thread-safe against
+    double-release, but is meant to be called by one owner; ``is_ready()``
+    is safe to poll from anywhere.
+    """
+
+    def __init__(self, sig: ShapeSig, items: Sequence[Tuple[int, QueryPlan]],
+                 pending: PendingBatch, dispatched_at: float,
+                 capacity_model=None, topology=None,
+                 replica: Optional[int] = None, weight: float = 0.0):
+        self.sig = sig
+        self.items = list(items)
+        self.pending = pending
+        self.dispatched_at = dispatched_at
+        self.capacity_model = capacity_model
+        self.topology = topology
+        self.replica = replica
+        self.weight = weight
+        self._out: Optional[Dict[int, Tuple[np.ndarray, Dict]]] = None
+        self._finished = False
+
+    def is_ready(self) -> bool:
+        """Non-blocking readiness peek: True when the first pass's device
+        buffers have materialized (collect would only pay host work and
+        any rare overflow re-run)."""
+        return self.pending.is_ready()
+
+    def _finish(self) -> None:
+        """One-shot teardown: return the balancer weight and leave the
+        in-flight gauge.  Runs on first collect completion OR failure."""
+        if self._finished:
+            return
+        self._finished = True
+        if self.replica is not None and self.topology is not None:
+            self.topology.balancer.release(self.replica, self.weight)
+        _inflight_exit()
+
+    def collect(self) -> Dict[int, Tuple[np.ndarray, Dict]]:
+        """Block for the bucket's results; returns {query_index: (values,
+        stats)} exactly as :func:`execute_bucket` does.
+
+        Performs the deferred ``jax.device_get``, the overflow re-run
+        passes, balancer release, ``batch_us`` stamping (dispatch-to-
+        collect wall over bucket size), and the capacity-model feedback.
+        Needs no executor lock: re-runs resolve against the DeviceSet rows
+        captured at dispatch (no lazy-mirror mutation), the balancer and
+        the capacity model are internally locked.  Adds the blocking time
+        to ``EXEC_COUNTERS["collect_us"]``.
+        """
+        if self._out is not None:
+            return self._out
+        c0 = time.perf_counter()
+        try:
+            results = self.pending.collect()
+        finally:
+            self._finish()
+        EXEC_COUNTERS["collect_us"] += int((time.perf_counter() - c0) * 1e6)
+        us = (time.perf_counter() - self.dispatched_at) * 1e6
+        out: Dict[int, Tuple[np.ndarray, Dict]] = {}
+        for (qi, _), (values, stats) in zip(self.items, results):
+            stats["batch_us"] = us / len(self.items)
+            if self.replica is not None:
+                stats["replica"] = self.replica
+            out[qi] = (values, stats)
+        if self.capacity_model is not None:
+            self.capacity_model.observe_bucket(
+                self.sig, [stats for _, stats in out.values()])
+        self._out = out
+        return out
+
+
+def dispatch_bucket(
+    get_set: Callable[[object], DeviceSet],
+    sig: ShapeSig,
+    items: Sequence[Tuple[int, QueryPlan]],
+    use_pallas="auto",
+    mesh=None,
+    shard_axis: str = SHARD_AXIS,
+    get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
+    capacity_model=None,
+    topology=None,
+    get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
+) -> InFlightBucket:
+    """Dispatch ONE same-signature bucket without blocking; returns an
+    :class:`InFlightBucket` whose :meth:`~InFlightBucket.collect` yields
+    {query_index: (values, stats)}.
+
+    Routing is identical to :func:`execute_bucket` (which is now just
+    ``dispatch_bucket(...).collect()``): 2-D topology-routed signatures go
+    through ``dispatch_mesh2d_batch``, ``shards > 1`` through
+    ``dispatch_sharded_batch`` on ``mesh``, and single-device buckets on a
+    multi-replica topology are placed on the least-loaded replica row by
+    the balancer — whose weight is now held until collect, so overlapping
+    dispatches see each other's in-flight load.
+
+    Caller contract: dispatch resolves terms through ``get_set`` /
+    ``get_sharded_set`` / ``get_replica_set``, which on the engines build
+    lazy per-row mirrors — serialize *dispatches* (the serving layer holds
+    its exec lock here) but collect freely outside any lock.
+
+    Counters: ``inflight_dispatches`` per bucket; ``overlap_high_water``
+    tracks the max simultaneously dispatched-not-collected buckets;
+    ``replica_dispatches`` per balancer placement; the per-pass pipeline
+    counters are unchanged.
+    """
+    shards = getattr(sig, "shards", 1)
+    replicas = getattr(sig, "replicas", 1)
+    t0 = time.perf_counter()
+    replica: Optional[int] = None
+    weight = 0.0
+    if topology is not None and (shards > 1 or replicas > 1):
+        assert get_sharded_set is not None, (
+            "2-D buckets resolve through the engine's ReplicatedDeviceSet "
+            "mirrors (get_sharded_set)"
+        )
+        resolve = get_sharded_set
+        rows = [[resolve(t) for t in plan.terms] for _, plan in items]
+        pending = dispatch_mesh2d_batch(
+            rows, topology,
+            capacity_per_shard=default_capacity_per_shard(
+                sig.ts, shards, capacity=sig.capacity_tier),
+            use_pallas=use_pallas,
+        )
+    elif shards > 1:
+        assert mesh is not None, "sharded bucket needs the engine's mesh"
+        resolve = get_sharded_set or get_set
+        rows = [[resolve(t) for t in plan.terms] for _, plan in items]
+        pending = dispatch_sharded_batch(
+            rows, mesh, axis=shard_axis,
+            capacity_per_shard=default_capacity_per_shard(
+                sig.ts, shards, capacity=sig.capacity_tier),
+            use_pallas=use_pallas,
+        )
+    elif (topology is not None and topology.replicas > 1
+          and get_replica_set is not None):
+        weight = float(len(items) * (1 << sig.ts[-1]))  # B * G rows
+        replica = topology.balancer.acquire(weight)
+        try:
+            rows = [[get_replica_set(replica, t) for t in plan.terms]
+                    for _, plan in items]
+            pending = dispatch_device_batch(
+                rows, capacity=sig.capacity_tier, use_pallas=use_pallas
+            )
+        except BaseException:
+            # dispatch itself failed — there is no collect to release at
+            topology.balancer.release(replica, weight)
+            raise
+        EXEC_COUNTERS["replica_dispatches"] += 1
+    else:
+        rows = [[get_set(t) for t in plan.terms] for _, plan in items]
+        pending = dispatch_device_batch(
+            rows, capacity=sig.capacity_tier, use_pallas=use_pallas
+        )
+    EXEC_COUNTERS["inflight_dispatches"] += 1
+    _inflight_enter()
+    return InFlightBucket(
+        sig, items, pending, t0, capacity_model=capacity_model,
+        topology=topology, replica=replica, weight=weight,
+    )
 
 
 def execute_bucket(
@@ -97,15 +313,15 @@ def execute_bucket(
     sharded executable too.
 
     With a 2-D ``topology`` attached, mesh-routed signatures
-    (``shards > 1`` or ``replicas > 1``) run through
-    ``intersect_mesh2d_batch`` on ``topology.mesh`` (same mirrors, same
-    per-shard capacity derivation), and single-device buckets are
-    dispatched to the least-loaded replica row: the balancer is asked with
-    the bucket's estimated cost (``B * G``, the phase-1 row count), terms
-    resolve via ``get_replica_set(replica, term)``, the in-flight load is
-    released when the bucket completes, and each result's stats carry the
-    executing ``replica``.  One ``EXEC_COUNTERS["replica_dispatches"]``
-    bump per balancer-dispatched bucket.
+    (``shards > 1`` or ``replicas > 1``) run through the 2-D pipeline on
+    ``topology.mesh`` (same mirrors, same per-shard capacity derivation),
+    and single-device buckets are dispatched to the least-loaded replica
+    row: the balancer is asked with the bucket's estimated cost (``B *
+    G``, the phase-1 row count), terms resolve via
+    ``get_replica_set(replica, term)``, the in-flight load is released
+    when the bucket completes, and each result's stats carry the executing
+    ``replica``.  One ``EXEC_COUNTERS["replica_dispatches"]`` bump per
+    balancer-dispatched bucket.
 
     Shapes: every plan in ``items`` must carry ``sig`` (the executor
     asserts signature uniformity); the bucket runs as one ``(B, …)`` jit
@@ -121,62 +337,17 @@ def execute_bucket(
     With a ``capacity_model`` attached, the bucket's per-query survivor
     stats are fed back to it after execution — the telemetry loop the model
     learns from.
+
+    The synchronous composition of :func:`dispatch_bucket` +
+    :meth:`InFlightBucket.collect` — callers that can overlap buckets use
+    the two halves directly.
     """
-    shards = getattr(sig, "shards", 1)
-    replicas = getattr(sig, "replicas", 1)
-    t0 = time.perf_counter()
-    if topology is not None and (shards > 1 or replicas > 1):
-        assert get_sharded_set is not None, (
-            "2-D buckets resolve through the engine's ReplicatedDeviceSet "
-            "mirrors (get_sharded_set)"
-        )
-        resolve = get_sharded_set
-        rows = [[resolve(t) for t in plan.terms] for _, plan in items]
-        results = intersect_mesh2d_batch(
-            rows, topology,
-            capacity_per_shard=default_capacity_per_shard(
-                sig.ts, shards, capacity=sig.capacity_tier),
-            use_pallas=use_pallas,
-        )
-    elif shards > 1:
-        assert mesh is not None, "sharded bucket needs the engine's mesh"
-        resolve = get_sharded_set or get_set
-        rows = [[resolve(t) for t in plan.terms] for _, plan in items]
-        results = intersect_sharded_batch(
-            rows, mesh, axis=shard_axis,
-            capacity_per_shard=default_capacity_per_shard(
-                sig.ts, shards, capacity=sig.capacity_tier),
-            use_pallas=use_pallas,
-        )
-    elif (topology is not None and topology.replicas > 1
-          and get_replica_set is not None):
-        weight = float(len(items) * (1 << sig.ts[-1]))  # B * G rows
-        replica = topology.balancer.acquire(weight)
-        try:
-            rows = [[get_replica_set(replica, t) for t in plan.terms]
-                    for _, plan in items]
-            results = intersect_device_batch(
-                rows, capacity=sig.capacity_tier, use_pallas=use_pallas
-            )
-        finally:
-            topology.balancer.release(replica, weight)
-        EXEC_COUNTERS["replica_dispatches"] += 1
-        for _, stats in results:
-            stats["replica"] = replica
-    else:
-        rows = [[get_set(t) for t in plan.terms] for _, plan in items]
-        results = intersect_device_batch(
-            rows, capacity=sig.capacity_tier, use_pallas=use_pallas
-        )
-    us = (time.perf_counter() - t0) * 1e6
-    out: Dict[int, Tuple[np.ndarray, Dict]] = {}
-    for (qi, _), (values, stats) in zip(items, results):
-        stats["batch_us"] = us / len(items)
-        out[qi] = (values, stats)
-    if capacity_model is not None:
-        capacity_model.observe_bucket(
-            sig, [stats for _, stats in out.values()])
-    return out
+    return dispatch_bucket(
+        get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
+        shard_axis=shard_axis, get_sharded_set=get_sharded_set,
+        capacity_model=capacity_model, topology=topology,
+        get_replica_set=get_replica_set,
+    ).collect()
 
 
 def execute_plan_buckets(
@@ -189,27 +360,38 @@ def execute_plan_buckets(
     capacity_model=None,
     topology=None,
     get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
+    max_inflight: int = 4,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute device plans bucket-by-bucket; returns {query_index: (values,
     stats)}.
 
     Synchronous whole-batch entry: groups ``indexed_plans`` by shape
-    signature and runs each bucket through :func:`execute_bucket` — one jit
-    execution per distinct signature (plus rare overflow re-runs), i.e.
-    O(#signatures) device dispatches for the whole batch.  ``get_set``
-    resolves a planned term to its DeviceSet; sharded-signature buckets
-    resolve via ``get_sharded_set`` and run on ``mesh`` (or on
-    ``topology.mesh`` when a 2-D topology is attached, which also spreads
-    single-device buckets over the replicas via ``get_replica_set``).
+    signature and pipelines the buckets through :func:`dispatch_bucket` /
+    :meth:`InFlightBucket.collect` with a bounded in-flight window — one
+    jit execution per distinct signature (plus rare overflow re-runs),
+    i.e. O(#signatures) device dispatches for the whole batch, with up to
+    ``max_inflight`` buckets overlapped on the device (distinct-signature
+    buckets are independent; on a multi-replica topology they also land on
+    different rows).  All results are collected before returning, so the
+    call is externally synchronous.  ``get_set`` resolves a planned term
+    to its DeviceSet; sharded-signature buckets resolve via
+    ``get_sharded_set`` and run on ``mesh`` (or on ``topology.mesh`` when
+    a 2-D topology is attached, which also spreads single-device buckets
+    over the replicas via ``get_replica_set``).
     """
     out: Dict[int, Tuple[np.ndarray, Dict]] = {}
+    window: List[InFlightBucket] = []
     for sig, items in bucket_plans(indexed_plans).items():
-        out.update(execute_bucket(
+        window.append(dispatch_bucket(
             get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
             shard_axis=shard_axis, get_sharded_set=get_sharded_set,
             capacity_model=capacity_model, topology=topology,
             get_replica_set=get_replica_set,
         ))
+        if len(window) >= max(1, max_inflight):
+            out.update(window.pop(0).collect())
+    for bucket in window:
+        out.update(bucket.collect())
     return out
 
 

@@ -51,13 +51,20 @@ __all__ = ["DATA_AXIS", "SHARD_AXIS", "ReplicaBalancer", "Topology",
 class ReplicaBalancer:
     """Least-loaded replica selection with per-replica load accounting.
 
-    Pure bookkeeping — no device state, thread-safe.  The executor brackets
-    each balancer-dispatched bucket with :meth:`acquire` / :meth:`release`;
-    ``weight`` is the bucket's estimated cost (the executor uses
-    ``B * G``, the phase-1 row count).  :meth:`acquire` picks the replica
-    with the least in-flight weight, breaking ties by least cumulative
-    dispatched weight (so an idle, synchronous serving loop degenerates to
-    weighted round-robin), then by replica id (deterministic).
+    Pure bookkeeping — no device state, thread-safe.  The executor
+    :meth:`acquire`\\ s at *dispatch* and :meth:`release`\\ s at *collect*
+    (``InFlightBucket._finish``), so a dispatched-but-uncollected bucket
+    keeps its weight visible for the whole time it occupies a device —
+    overlapping dispatches therefore spread across rows instead of piling
+    onto one (before the async split, acquire/release bracketed a
+    synchronous call and in-flight weight was never observable from
+    outside).  ``weight`` is the bucket's estimated cost (the executor
+    uses ``B * G``, the phase-1 row count).  :meth:`acquire` picks the
+    replica with the least in-flight weight, breaking ties by least
+    cumulative dispatched weight (so an idle, synchronous serving loop
+    degenerates to weighted round-robin), then by replica id
+    (deterministic).  A dispatch that *fails* releases immediately —
+    nothing will ever collect it.
 
     :meth:`loads` snapshots the accounting — ``in_flight`` weight,
     cumulative ``dispatched`` bucket count and ``weight`` per replica —

@@ -40,6 +40,18 @@ finds the bucket gone.  A submission that lands *after* a take has started
 goes into a fresh bucket and is picked up by the next take — never lost,
 never double-flushed.  (``Ticket`` resolution being single-shot is the
 backstop: a logic bug that double-flushed would raise, not clobber.)
+
+Audit note for the overlapped (dispatch/collect-split) flusher: ticket
+resolution now happens at *collect* time, outside the engine's exec lock
+and potentially on a different thread than the one that took the bucket.
+That is safe against this queue precisely because of the contract above —
+once a ``take_*`` pops a bucket, the queue holds no reference to its
+tickets, so resolution order/thread is invisible here; and because
+``next_deadline_in_us`` reports 0 for full tiers, the flusher's
+deadline-sleep wake covers the tier-flush case without polling.  The only
+queue-side requirement the overlap adds is that ``take_*`` stay atomic
+whole-bucket pops (a half-taken bucket could dispatch twice), which the
+single lock already guarantees.
 """
 from __future__ import annotations
 

@@ -44,7 +44,7 @@ from ..core.hashing import default_permutation, random_hash_family
 from ..core.intersect import hashbin, rangroupscan
 from ..core.partition import preprocess_prefix
 from ..exec.adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
-from ..exec.batch import execute_bucket, execute_plan_buckets
+from ..exec.batch import InFlightBucket, dispatch_bucket, execute_plan_buckets
 from ..exec.cache import ResultCache
 from ..exec.plan import QueryPlan, ShapeSig, plan_query
 from .admission import AdmissionQueue, Ticket
@@ -349,6 +349,25 @@ class SearchEngine:
                            generation=generation)
 
 
+@dataclasses.dataclass
+class _Flight:
+    """One dispatched-but-uncollected bucket in the serving window.
+
+    Carries everything collection needs once the exec lock is gone: the
+    executor's :class:`~repro.exec.batch.InFlightBucket`, the live
+    (ticket, plan) entries in bucket-row order, the flush timestamp
+    (``wait_us`` is measured submit -> flush start, the quantity the
+    deadline budget bounds), and the result-cache generation captured
+    before dispatch (so results computed against a mutated index are
+    rejected by the cache, exactly as on the synchronous path).
+    """
+
+    bucket: InFlightBucket
+    entries: List[Tuple[Ticket, QueryPlan]]
+    flush_at: float
+    generation: int
+
+
 class AsyncSearchEngine(SearchEngine):
     """Online front-end: single-query admission, deadline-bounded flushing.
 
@@ -375,6 +394,21 @@ class AsyncSearchEngine(SearchEngine):
       ``EXEC_COUNTERS["flusher_wakeups"]``.  The flusher sleeps in real
       time, so it assumes the engine ``clock`` is wall time.
 
+    Overlapped dispatch: flushing is split into a *dispatch* phase (the
+    bucket's jit call is issued without blocking —
+    ``exec.batch.dispatch_bucket``) and a *collect* phase (the blocking
+    transfer + overflow re-run + ticket resolution).  Dispatches happen
+    back-to-back under the exec lock, so up to ``max_inflight`` buckets
+    (default 8) are on the device simultaneously — on a multi-replica
+    topology the balancer spreads them across rows, which is what turns
+    replica rows into actually-concurrent servers; collection happens
+    *outside*
+    the lock, in dispatch order, resolving each bucket's tickets as its
+    flight completes.  ``EXEC_COUNTERS["overlap_high_water"]`` records the
+    achieved overlap.  With flights outstanding the flusher never sleeps
+    its idle timer — it blocks on the oldest flight's completion (a
+    collection event), re-checking the queue after every one.
+
     A serving loop looks like::
 
         eng = AsyncSearchEngine(postings, deadline_us=2000, warm_queries=log)
@@ -392,10 +426,14 @@ class AsyncSearchEngine(SearchEngine):
     flusher (or manual ``pump`` / ``drain`` callers).  ``submit`` holds no
     engine-wide lock — planning is pure, the result cache and the
     admission queue are internally locked — so submitters never block
-    behind a bucket execution.  All flushing serializes on one execution
-    lock, and the queue's atomic bucket pops guarantee each ticket is
-    flushed exactly once, which makes ``drain`` idempotent and safe to
-    call while the flusher runs.  The inherited synchronous paths
+    behind a bucket execution.  All bucket *dispatch* serializes on one
+    execution lock (it touches the engines' lazy mirror dicts); *collect*
+    runs outside it.  The queue's atomic bucket pops guarantee each
+    ticket is dispatched exactly once, and the flight list's atomic pops
+    guarantee each dispatched bucket is collected exactly once — which
+    makes ``drain`` idempotent and safe to call while the flusher runs
+    (it collects queued flights itself and waits out flights another
+    thread holds mid-collect).  The inherited synchronous paths
     (``query`` / ``query_batch`` / ``warm``) are still single-caller:
     don't interleave them with concurrent submits on the same engine
     (except ``_flush``'s own stale-plan fallback, which serializes under
@@ -417,15 +455,27 @@ class AsyncSearchEngine(SearchEngine):
                  warm_top_k: int = 8,
                  warm_b_tiers: Optional[Sequence[int]] = None,
                  adaptive_deadline=False,
+                 max_inflight: int = 8,
                  **kw):
         kw.setdefault("use_device", True)
         super().__init__(postings, result_cache=result_cache, **kw)
         self.clock = clock
         self.admission = AdmissionQueue(flush_tier=flush_tier,
                                         deadline_us=deadline_us, clock=clock)
-        # one lock serializes all bucket execution (_flush callers); submit
-        # deliberately does not take it — see the class docstring
+        # one lock serializes all bucket DISPATCH (_flush callers); submit
+        # deliberately does not take it, and collection happens outside it
+        # — see the class docstring
         self._exec_lock = threading.RLock()
+        # dispatched-but-uncollected buckets: the overlap window.  Guarded
+        # by _flight_cv (never nested inside _exec_lock acquisition order
+        # violations: _exec_lock may be held when taking _flight_cv, never
+        # the reverse).  _collecting counts flights popped by some thread
+        # whose collect has not finished — drain must wait those out too.
+        assert max_inflight >= 1
+        self.max_inflight = int(max_inflight)
+        self._flight_cv = threading.Condition()
+        self._flights: List[_Flight] = []
+        self._collecting = 0
         if isinstance(adaptive_deadline, AdaptiveDeadline):
             self.adaptive_deadline: Optional[AdaptiveDeadline] = adaptive_deadline
         else:
@@ -512,26 +562,47 @@ class AsyncSearchEngine(SearchEngine):
         return False
 
     def _flusher_loop(self) -> None:
-        """Flusher thread body: sleep exactly as long as the admission
-        queue allows (0 when a full tier is pending, the soonest deadline
-        otherwise, an idle re-check when empty), then pump.  ``submit``
-        sets the wake event to cut any sleep short."""
+        """Flusher thread body: overlapped dispatch/collect scheduling.
+
+        Each iteration (1) dispatches every due bucket back-to-back under
+        the exec lock (window-bounded — the balancer routes them to
+        different replica rows since in-flight load is now visible), (2)
+        collects already-completed flights without blocking, then (3)
+        picks its wait: with flights outstanding it blocks on the *oldest
+        flight's collection* — a real completion event, never the flat
+        idle sleep (a bucket in flight used to wait up to
+        ``_flusher_idle_s`` for its results); with an empty window it
+        sleeps exactly until the next admission deadline (or the idle
+        re-check when the queue is empty), cut short by ``submit``'s wake
+        event."""
         while True:
             next_us = self.admission.next_deadline_in_us()
-            timeout = (self._flusher_idle_s if next_us is None
-                       else max(0.0, next_us * 1e-6))
-            if timeout > 0:
-                self._wake.wait(timeout)
+            if self._inflight_count() == 0:
+                timeout = (self._flusher_idle_s if next_us is None
+                           else max(0.0, next_us * 1e-6))
+                if timeout > 0:
+                    self._wake.wait(timeout)
             if self._stop_flusher.is_set():
+                # collect whatever is still in flight before exiting so
+                # stop()'s drain only deals with the queue, not the window
+                while self._collect_one():
+                    pass
                 return
             self._wake.clear()
             EXEC_COUNTERS["flusher_wakeups"] += 1
             try:
-                self.pump()
+                self._flush(self.admission.take_due())
+                # reap everything already finished on the device...
+                while self._collect_one(ready_only=True):
+                    pass
+                # ...then wait on the oldest flight's completion (unless a
+                # fresh submit already wants another dispatch pass)
+                if not self._wake.is_set():
+                    self._collect_one()
             except Exception as exc:  # keep the runtime alive: bucket-level
                 # failures already resolve their tickets with the error
-                # inside _flush; anything escaping here is a bug we surface
-                # on the next stop() instead of dying silently mid-serve
+                # inside _flush/_collect; anything escaping here is a bug we
+                # surface on the next stop() instead of dying silently
                 self._flusher_error = exc
 
     # ------------------------------------------------------------------
@@ -575,29 +646,35 @@ class AsyncSearchEngine(SearchEngine):
             # the flusher stopped between the enqueue and the wake: fall
             # through to manual-mode behavior so a full tier still flushes
             # (stop() re-drains to catch the remaining partial-bucket case)
-        with self._exec_lock:
-            self._flush(self.admission.take_full())
+        self._flush(self.admission.take_full())
+        self._collect_all()
         return ticket
 
     def pump(self) -> int:
         """Flush buckets whose deadline budget has expired (and any that
         filled their tier since the last call).  Returns #buckets flushed.
-        The background flusher calls this on its own cadence; manual loops
-        call it on a timer — either way the deadline guarantee is only as
-        fine-grained as the pump cadence."""
-        with self._exec_lock:
-            return self._flush(self.admission.take_due())
+        Dispatches all due buckets back-to-back (window-bounded), then
+        collects every outstanding flight before returning — externally
+        synchronous, overlapped inside.  Manual loops call it on a timer —
+        the deadline guarantee is only as fine-grained as the pump
+        cadence."""
+        count = self._flush(self.admission.take_due())
+        self._collect_all()
+        return count
 
     def drain(self) -> int:
         """Flush every pending bucket now (shutdown / end-of-batch / test
         path).  Returns #buckets flushed; afterwards every ticket issued
         *before* the call is resolved.  Idempotent and safe to call while
         the background flusher runs: bucket pops are atomic, so a bucket
-        the flusher already took is simply not taken again, and the
-        execution lock makes this call wait out any in-flight flush (whose
-        tickets therefore also resolve before drain returns)."""
-        with self._exec_lock:
-            return self._flush(self.admission.take_all())
+        the flusher already took is simply not taken again; this call then
+        collects every outstanding flight itself and waits out any flight
+        another thread is mid-collecting (whose tickets therefore also
+        resolve before drain returns)."""
+        count = self._flush(self.admission.take_all())
+        self._collect_all()
+        self._wait_flights()
+        return count
 
     def pending(self) -> int:
         """Queued-but-unflushed submission count (device path only)."""
@@ -609,78 +686,168 @@ class AsyncSearchEngine(SearchEngine):
         return ticket
 
     def _flush(self, buckets) -> int:
-        """Execute flushed buckets and resolve their tickets.  Callers
-        must hold ``_exec_lock`` (pump / drain / inline tier flush do).
+        """Dispatch flushed buckets into the in-flight window; returns
+        #buckets processed.  Takes ``_exec_lock`` itself (re-entrant, so
+        exec-lock-holding callers compose).
 
-        One ``execute_bucket`` call per (partial) bucket — one jit
-        execution plus rare overflow re-runs; ``wait_us`` is measured from
-        submit to flush start, the quantity ``deadline_us`` bounds.
-        Between bucket executions the queue is re-polled for newly-due
-        buckets, so a deadline expiring while an earlier bucket runs waits
-        at most ONE bucket execution, not a whole flush burst.  A bucket
-        whose execution raises resolves its tickets with the error
-        (``ticket.value`` re-raises; nobody hangs on ``done``) and the
-        remaining buckets still flush.
+        The overlapped rewrite of the old execute-in-place flush: buckets
+        are *dispatched* back-to-back under the exec lock (one non-blocking
+        jit issue each — independent signatures land on different replica
+        rows because the balancer sees in-flight load) and *collected*
+        outside it, by whoever pops the flight (:meth:`_collect_one`).
+        When the window is full this thread collects the oldest flight
+        itself to free a slot — natural backpressure.  After the last
+        dispatch the queue is re-polled for newly-due buckets, so a
+        deadline expiring while earlier buckets dispatch is picked up
+        without waiting for the next pump.  Tickets of a bucket whose
+        dispatch raises resolve with the error (``ticket.value``
+        re-raises; nobody hangs on ``done``) and the remaining buckets
+        still flush.
         """
         count = 0
         pending = list(buckets)
         while pending:
-            sig, entries = pending.pop(0)
-            flush_at = self.clock()
-            # an index mutation between submit and flush can re-tier a
-            # queued term, so the entry's frozen sig no longer matches the
-            # arrays resolved NOW — executing it here would trip the
-            # bucket's signature-uniformity assert and fail every ticket.
-            # Re-validate each plan against the current index and route
-            # stale entries through the synchronous path (which re-plans).
-            live = []
-            for ticket, plan in entries:
-                if self.plan(plan.terms).sig == sig:
-                    live.append((ticket, plan))
-                    continue
-                wait_us = (flush_at - ticket.submitted_at) * 1e6
-                try:
-                    result = self.query(list(plan.terms))
-                except Exception as exc:
-                    ticket.resolve_error(exc, wait_us=wait_us)
-                else:
-                    ticket.resolve(result, wait_us=wait_us)
-            entries = live
-            if not entries:
-                count += 1
-                if not pending:
-                    pending.extend(self.admission.take_due())
-                continue
-            items = [(row, plan) for row, (_, plan) in enumerate(entries)]
-            gen = self.cache.generation  # capture before executing
-            try:
-                by_row = execute_bucket(
-                    lambda term: self.device.sets[str(term)], sig, items,
-                    use_pallas=self.device.use_pallas,
-                    mesh=self.device.mesh,
-                    shard_axis=self.device.shard_axis,
-                    get_sharded_set=lambda term: self.device.get_mesh_set(str(term)),
-                    capacity_model=self.capacity_model,
-                    topology=self.device.topology,
-                    get_replica_set=lambda r, term: self.device.get_replica_set(
-                        r, str(term)),
-                )
-            except Exception as exc:
-                for ticket, _ in entries:
-                    ticket.resolve_error(
-                        exc, wait_us=(flush_at - ticket.submitted_at) * 1e6)
-            else:
-                for row, (ticket, plan) in enumerate(entries):
-                    res, stats = by_row[row]
-                    result = QueryResult(res, stats.get("batch_us", 0.0),
-                                         _device_result_name(stats), stats)
-                    self._store(plan, result, generation=gen)
-                    wait_us = (flush_at - ticket.submitted_at) * 1e6
-                    ticket.resolve(result, wait_us=wait_us)
-            count += 1
-            if not pending:
-                pending.extend(self.admission.take_due())
+            with self._exec_lock:
+                while pending and self._inflight_count() < self.max_inflight:
+                    sig, entries = pending.pop(0)
+                    self._dispatch_one(sig, entries)
+                    count += 1
+                    if not pending:
+                        pending.extend(self.admission.take_due())
+            if pending and not self._collect_one():
+                # window full but no flight to pop: other threads are
+                # mid-collect — wait for one to finish and free a slot
+                with self._flight_cv:
+                    if not self._flights and self._collecting:
+                        self._flight_cv.wait(0.01)
         return count
+
+    def _dispatch_one(self, sig, entries) -> None:
+        """Dispatch one admission bucket (caller holds ``_exec_lock`` —
+        dispatch resolves lazy per-replica mirrors on the engine).
+
+        An index mutation between submit and flush can re-tier a queued
+        term, so the entry's frozen sig no longer matches the arrays
+        resolved NOW — executing it would trip the bucket's signature-
+        uniformity assert and fail every ticket.  Each plan is
+        re-validated against the current index; stale entries run through
+        the synchronous path (which re-plans) and resolve immediately.
+        ``wait_us`` is measured submit -> dispatch, the quantity
+        ``deadline_us`` bounds.
+        """
+        flush_at = self.clock()
+        live = []
+        for ticket, plan in entries:
+            if self.plan(plan.terms).sig == sig:
+                live.append((ticket, plan))
+                continue
+            wait_us = (flush_at - ticket.submitted_at) * 1e6
+            try:
+                result = self.query(list(plan.terms))
+            except Exception as exc:
+                ticket.resolve_error(exc, wait_us=wait_us)
+            else:
+                ticket.resolve(result, wait_us=wait_us)
+        if not live:
+            return
+        items = [(row, plan) for row, (_, plan) in enumerate(live)]
+        gen = self.cache.generation  # capture before executing
+        try:
+            bucket = dispatch_bucket(
+                lambda term: self.device.sets[str(term)], sig, items,
+                use_pallas=self.device.use_pallas,
+                mesh=self.device.mesh,
+                shard_axis=self.device.shard_axis,
+                get_sharded_set=lambda term: self.device.get_mesh_set(str(term)),
+                capacity_model=self.capacity_model,
+                topology=self.device.topology,
+                get_replica_set=lambda r, term: self.device.get_replica_set(
+                    r, str(term)),
+            )
+        except Exception as exc:
+            for ticket, _ in live:
+                ticket.resolve_error(
+                    exc, wait_us=(flush_at - ticket.submitted_at) * 1e6)
+            return
+        with self._flight_cv:
+            self._flights.append(_Flight(bucket, live, flush_at, gen))
+            self._flight_cv.notify_all()
+
+    # ------------------------------------------------------------------
+    # collection (outside the exec lock)
+    # ------------------------------------------------------------------
+
+    def _inflight_count(self) -> int:
+        """Dispatched-but-unresolved buckets: queued flights plus flights
+        some thread is currently collecting (both occupy window slots)."""
+        with self._flight_cv:
+            return len(self._flights) + self._collecting
+
+    def _collect_one(self, ready_only: bool = False) -> bool:
+        """Pop and collect the oldest flight; resolve its tickets.
+
+        Returns False when there is nothing to pop (or, with
+        ``ready_only``, when the oldest flight's device buffers have not
+        materialized yet — the non-blocking reap the flusher uses between
+        dispatch passes).  Runs WITHOUT the exec lock: this is the
+        collect-outside-the-lock half of the pipeline, so new dispatches
+        (and submits) proceed while we block on the transfer.  Pops are
+        atomic under the flight condition — a flight is collected exactly
+        once no matter how flusher / drain / manual pumps interleave.
+        """
+        with self._flight_cv:
+            if not self._flights:
+                return False
+            if ready_only and not self._flights[0].bucket.is_ready():
+                return False
+            flight = self._flights.pop(0)
+            self._collecting += 1
+        try:
+            self._resolve_flight(flight)
+        finally:
+            with self._flight_cv:
+                self._collecting -= 1
+                self._flight_cv.notify_all()
+        return True
+
+    def _collect_all(self) -> None:
+        """Collect every queued flight (blocking each in dispatch order)."""
+        while self._collect_one():
+            pass
+
+    def _wait_flights(self) -> None:
+        """Block until the window is empty — collecting queued flights
+        ourselves and waiting out flights other threads are mid-collecting
+        (drain's resolution guarantee)."""
+        while True:
+            if self._collect_one():
+                continue
+            with self._flight_cv:
+                if not self._flights and not self._collecting:
+                    return
+                # a racing thread holds a flight mid-collect (or just
+                # appended one): its finally-notify re-checks us
+                self._flight_cv.wait()
+
+    def _resolve_flight(self, flight: _Flight) -> None:
+        """Collect one flight's results and resolve its tickets (cache
+        store under the dispatch-time generation, error fan-out on a
+        failed collect)."""
+        try:
+            by_row = flight.bucket.collect()
+        except Exception as exc:
+            for ticket, _ in flight.entries:
+                ticket.resolve_error(
+                    exc,
+                    wait_us=(flight.flush_at - ticket.submitted_at) * 1e6)
+            return
+        for row, (ticket, plan) in enumerate(flight.entries):
+            res, stats = by_row[row]
+            result = QueryResult(res, stats.get("batch_us", 0.0),
+                                 _device_result_name(stats), stats)
+            self._store(plan, result, generation=flight.generation)
+            wait_us = (flight.flush_at - ticket.submitted_at) * 1e6
+            ticket.resolve(result, wait_us=wait_us)
 
 
 def zipf_query_log(index_terms: Sequence[int], n_queries: int = 1000,

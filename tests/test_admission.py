@@ -334,11 +334,11 @@ def test_bucket_failure_resolves_tickets_with_error(postings, monkeypatch):
     def boom(*a, **k):
         raise RuntimeError("device exploded")
 
-    monkeypatch.setattr(search_mod, "execute_bucket", boom)
+    monkeypatch.setattr(search_mod, "dispatch_bucket", boom)
     q = zipf_query_log(sorted(eng.index), 4, seed=2)[0]
     ticket = eng.submit(q)
     clk.advance_us(2001)
-    eng.pump()                                 # flush executes and fails
+    eng.pump()                                 # flush dispatches and fails
     assert ticket.done and ticket.error is not None
     with pytest.raises(RuntimeError, match="device exploded"):
         _ = ticket.value

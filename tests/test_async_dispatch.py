@@ -1,0 +1,328 @@
+"""Tests for the asynchronous dispatch pipeline (dispatch / collect split).
+
+Covers: the overlap telemetry (``inflight_dispatches`` / ``collect_us`` /
+``overlap_high_water``), bit-identity of overlapped execution vs the
+synchronous path, balancer in-flight visibility during overlapping
+dispatch (release moved to collect time), the flusher's event-driven
+wait (no flat idle-timer reliance — the busy-poll regression), and a
+race regression hammering ``submit`` while buckets are in flight.
+
+Balancer-visibility tests need >= 4 devices; everything else runs on one.
+The subprocess oracle test always runs: a fresh interpreter with 8
+forced host devices serves the overlapped ``AsyncSearchEngine`` flusher
+across the 1x4 / 2x2 / 4x1 layouts and must reproduce the synchronous
+``query_batch`` bit-identically with a nonzero overlap high-water mark.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.engine import EXEC_COUNTERS, PendingBatch
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.exec.batch import bucket_plans, dispatch_bucket, execute_plan_buckets
+from repro.exec.topology import make_topology
+from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
+
+N_DEVICES = 4
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < N_DEVICES,
+    reason=f"needs >= {N_DEVICES} devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+@pytest.fixture(scope="module")
+def postings():
+    docs = zipf_corpus(3000, vocab=400, mean_len=40, seed=3)
+    return inverted_index(docs)
+
+
+# ---------------------------------------------------------------------------
+# PendingBatch basics
+# ---------------------------------------------------------------------------
+
+def test_pending_batch_empty_and_memoized():
+    pb = PendingBatch(n_queries=0, _collect=lambda: [])
+    assert pb.is_ready()
+    first = pb.collect()
+    assert first == []
+    assert pb.collect() is first  # memoized — the closure ran exactly once
+
+
+# ---------------------------------------------------------------------------
+# Overlapped vs synchronous bit-identity + overlap counters (single device)
+# ---------------------------------------------------------------------------
+
+def _engine_lambdas(eng):
+    return dict(
+        use_pallas=eng.device.use_pallas,
+        mesh=eng.device.mesh,
+        shard_axis=eng.device.shard_axis,
+        get_sharded_set=lambda term: eng.device.get_mesh_set(str(term)),
+        capacity_model=eng.capacity_model,
+        topology=eng.device.topology,
+        get_replica_set=lambda r, term: eng.device.get_replica_set(
+            r, str(term)),
+    )
+
+
+def test_execute_plan_buckets_overlapped_matches_sequential(postings):
+    """The pipelined window (max_inflight > 1) must be bit-identical to
+    strictly sequential dispatch-then-collect execution."""
+    eng = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(eng.index), 24, seed=11)
+    plans = [(i, eng.plan(q)) for i, q in enumerate(log)]
+    device_plans = [(i, p) for i, p in plans if p.algorithm == "device"]
+    assert len(bucket_plans(device_plans)) >= 2, "need >= 2 signatures"
+    get_set = lambda term: eng.device.sets[str(term)]  # noqa: E731
+    seq = execute_plan_buckets(get_set, device_plans, max_inflight=1,
+                               **_engine_lambdas(eng))
+    EXEC_COUNTERS.reset()
+    ovl = execute_plan_buckets(get_set, device_plans, max_inflight=4,
+                               **_engine_lambdas(eng))
+    assert seq.keys() == ovl.keys()
+    for i in seq:
+        assert np.array_equal(seq[i][0], ovl[i][0]), log[i]
+    n_buckets = len(bucket_plans(device_plans))
+    assert EXEC_COUNTERS["inflight_dispatches"] == n_buckets
+    assert EXEC_COUNTERS["collect_us"] > 0
+    assert EXEC_COUNTERS["overlap_high_water"] >= min(2, n_buckets)
+
+
+def test_drain_overlaps_buckets_and_counts(postings):
+    """A manual-mode drain dispatches every queued bucket back-to-back
+    into the window before collecting: the high-water mark must show
+    real overlap and every ticket must match the synchronous oracle."""
+    base = SearchEngine(postings, seed=3, use_device=True)
+    eng = AsyncSearchEngine(postings, seed=3, flush_tier=64,
+                            result_cache=0, max_inflight=8)
+    log = zipf_query_log(sorted(base.index), 24, seed=11)
+    want = base.query_batch(log)  # oracle first: it bumps counters too
+    tickets = [eng.submit(q) for q in log]  # below tier: nothing flushes
+    EXEC_COUNTERS.reset()
+    n_buckets = eng.drain()
+    assert n_buckets >= 2
+    for q, t, b in zip(log, tickets, want):
+        assert t.done
+        assert np.array_equal(t.value.doc_ids, b.doc_ids), q
+    assert EXEC_COUNTERS["inflight_dispatches"] == n_buckets
+    assert EXEC_COUNTERS["overlap_high_water"] >= 2
+    assert EXEC_COUNTERS["collect_us"] > 0
+    assert eng._inflight_count() == 0  # window fully reaped
+
+
+def test_window_bound_respected(postings):
+    """max_inflight=1 degenerates to the synchronous flush: the high-water
+    mark never exceeds the window bound."""
+    eng = AsyncSearchEngine(postings, seed=3, flush_tier=64,
+                            result_cache=0, max_inflight=1)
+    log = zipf_query_log(sorted(eng.index), 24, seed=11)
+    tickets = [eng.submit(q) for q in log]
+    EXEC_COUNTERS.reset()
+    eng.drain()
+    assert all(t.done for t in tickets)
+    assert EXEC_COUNTERS["overlap_high_water"] <= 1
+
+
+# ---------------------------------------------------------------------------
+# Balancer: release moved to collect time (needs replica rows)
+# ---------------------------------------------------------------------------
+
+@multi_device
+def test_balancer_inflight_visible_during_overlapping_dispatch(postings):
+    """Satellite 1 acceptance: while two buckets are dispatched but not
+    yet collected, the balancer must account nonzero in-flight weight on
+    two different replica rows (release happens at collect, not at
+    dispatch) — and return to zero once both collect."""
+    topo = make_topology(2, 1)
+    eng = SearchEngine(postings, seed=3, topology=topo, shard_min_g=1 << 20)
+    base = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(eng.index), 32, seed=11)
+    plans = [(i, eng.plan(q)) for i, q in enumerate(log)]
+    buckets = bucket_plans([(i, p) for i, p in plans
+                            if p.algorithm == "device"])
+    sigs = list(buckets)
+    assert len(sigs) >= 2
+    get_set = lambda term: eng.device.sets[str(term)]  # noqa: E731
+    EXEC_COUNTERS.reset()
+    a = dispatch_bucket(get_set, sigs[0], buckets[sigs[0]],
+                        **_engine_lambdas(eng))
+    b = dispatch_bucket(get_set, sigs[1], buckets[sigs[1]],
+                        **_engine_lambdas(eng))
+    busy = [d["in_flight"] for d in topo.load_snapshot()]
+    assert sum(1 for x in busy if x > 0) == 2, busy
+    by_index = dict(a.collect())
+    by_index.update(b.collect())
+    after = [d["in_flight"] for d in topo.load_snapshot()]
+    assert all(x == 0 for x in after), after
+    assert EXEC_COUNTERS["overlap_high_water"] >= 2
+    assert EXEC_COUNTERS["inflight_dispatches"] == 2
+    want = base.query_batch(log)  # oracle last: it bumps counters too
+    for i, (res, _stats) in by_index.items():
+        assert np.array_equal(res, want[i].doc_ids), log[i]
+    # collect is idempotent and the release fired exactly once
+    a.collect()
+    assert all(d["in_flight"] == 0 for d in topo.load_snapshot())
+
+
+@multi_device
+def test_balancer_release_on_dispatch_failure(postings):
+    """A dispatch that raises must give its balancer slot back immediately
+    (nothing will ever collect it)."""
+    topo = make_topology(2, 1)
+    eng = SearchEngine(postings, seed=3, topology=topo, shard_min_g=1 << 20)
+    log = zipf_query_log(sorted(eng.index), 8, seed=11)
+    plans = [(i, eng.plan(q)) for i, q in enumerate(log)]
+    buckets = bucket_plans([(i, p) for i, p in plans
+                            if p.algorithm == "device"])
+    sig = next(iter(buckets))
+    kw = _engine_lambdas(eng)
+    kw["get_replica_set"] = lambda r, term: (_ for _ in ()).throw(
+        RuntimeError("mirror build failed"))
+    with pytest.raises(RuntimeError, match="mirror build failed"):
+        dispatch_bucket(lambda term: eng.device.sets[str(term)],
+                        sig, buckets[sig], **kw)
+    assert all(d["in_flight"] == 0 for d in topo.load_snapshot())
+
+
+# ---------------------------------------------------------------------------
+# Flusher: event-driven waits (busy-poll regression) + submit race
+# ---------------------------------------------------------------------------
+
+def test_flusher_resolves_before_idle_timer(postings):
+    """Satellite 2 regression: with a pathologically large idle re-check
+    cadence the flusher must still resolve a deadline-flushed ticket
+    promptly — it wakes on the submit event and sleeps exactly until the
+    admission deadline, never the flat idle timer."""
+    eng = AsyncSearchEngine(postings, seed=3, flush_tier=64,
+                            deadline_us=1000.0, result_cache=0)
+    eng._flusher_idle_s = 60.0  # a busy-poll loop would hang 60s here
+    with eng:
+        q = zipf_query_log(sorted(eng.index), 1, seed=11)[0]
+        t0 = time.perf_counter()
+        ticket = eng.submit(q)
+        assert ticket.wait(timeout=10.0)
+        assert time.perf_counter() - t0 < 10.0
+    assert eng._flusher_error is None
+
+
+def test_submit_race_two_buckets_in_flight(postings):
+    """Race regression: many threads hammer ``submit`` while the flusher
+    overlaps dispatch and collect (tiny flush tier forces constant
+    flushes, two signatures keep two buckets in flight).  Every ticket
+    must resolve to the synchronous oracle's exact result."""
+    base = SearchEngine(postings, seed=3, use_device=True)
+    log = zipf_query_log(sorted(base.index), 48, seed=11)
+    want = {tuple(q): r for q, r in zip(log, base.query_batch(log))}
+    eng = AsyncSearchEngine(postings, seed=3, flush_tier=4,
+                            deadline_us=500.0, result_cache=0,
+                            max_inflight=4)
+    tickets = []
+    tlock = threading.Lock()
+
+    def hammer(span):
+        for q in span:
+            t = eng.submit(q)
+            with tlock:
+                tickets.append((q, t))
+
+    with eng:
+        threads = [threading.Thread(target=hammer, args=(log[i::4],))
+                   for i in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        eng.drain()
+    assert eng._flusher_error is None
+    assert len(tickets) == len(log)
+    for q, t in tickets:
+        assert t.done
+        assert np.array_equal(t.value.doc_ids, want[tuple(q)].doc_ids), q
+
+
+# ---------------------------------------------------------------------------
+# Forced-8-device subprocess oracle (always runs)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# CPU explicitly: with libtpu on the image, a second jax process would
+# otherwise block minutes on the parent's /tmp/libtpu_lockfile
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np
+from repro.core.engine import EXEC_COUNTERS
+from repro.exec.topology import make_topology
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
+
+docs = zipf_corpus(2000, vocab=300, mean_len=30, seed=3)
+postings = inverted_index(docs)
+base = SearchEngine(postings, seed=3, use_device=True)
+log = zipf_query_log(sorted(base.index), 24, seed=11)
+want = base.query_batch(log)
+
+# overlapped flusher bit-identity vs synchronous query_batch, all layouts
+for layout in [(1, 4), (2, 2), (4, 1)]:
+    topo = make_topology(*layout)
+    eng = AsyncSearchEngine(postings, seed=3, topology=topo, shard_min_g=4,
+                            flush_tier=4, deadline_us=500.0, result_cache=0,
+                            max_inflight=8)
+    EXEC_COUNTERS.reset()
+    eng.start()
+    tickets = [eng.submit(q) for q in log]
+    eng.stop(drain=True)
+    assert eng._flusher_error is None, (layout, eng._flusher_error)
+    for q, t, b in zip(log, tickets, want):
+        assert t.done, (layout, q)
+        assert np.array_equal(t.value.doc_ids, b.doc_ids), (layout, q)
+    assert EXEC_COUNTERS["inflight_dispatches"] > 0, layout
+    assert EXEC_COUNTERS["collect_us"] > 0, layout
+    # balancer fully drained: release fired at collect for every bucket
+    assert all(d["in_flight"] == 0 for d in topo.load_snapshot()), layout
+
+# deterministic overlap: manual drain dispatches all queued buckets
+# back-to-back before collecting — high-water mark must show it, and the
+# replica balancer must end the run fully released
+topo = make_topology(4, 1)
+eng = AsyncSearchEngine(postings, seed=3, topology=topo,
+                        shard_min_g=1 << 20, flush_tier=64,
+                        result_cache=0, max_inflight=8)
+tickets = [eng.submit(q) for q in log]
+EXEC_COUNTERS.reset()
+n_buckets = eng.drain()
+assert n_buckets >= 2
+for t, b in zip(tickets, want):
+    assert t.done
+    assert np.array_equal(t.value.doc_ids, b.doc_ids)
+assert EXEC_COUNTERS["overlap_high_water"] >= 2
+assert EXEC_COUNTERS["inflight_dispatches"] == n_buckets
+assert all(d["in_flight"] == 0 for d in topo.load_snapshot())
+print("ASYNC_DISPATCH_SUBPROCESS_OK")
+"""
+
+
+def test_overlapped_serving_in_forced_multidevice_subprocess():
+    """The acceptance guarantee, independent of this process's device
+    count: a fresh interpreter with 8 forced host devices must serve the
+    overlapped ``AsyncSearchEngine`` flusher bit-identically to
+    synchronous ``query_batch`` on 1x4, 2x2, and 4x1 topologies, leave
+    the replica balancer fully released after collect, and record a
+    nonzero overlap high-water mark on a manual drain."""
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "ASYNC_DISPATCH_SUBPROCESS_OK" in proc.stdout
