@@ -111,6 +111,7 @@ __all__ = [
     "intersect_sharded_batch",
     "make_mesh2d",
     "make_shard_mesh",
+    "bucket_hlo_text",
     "pow2_tiers",
     "set_sort_key",
     "warm_executables",
@@ -160,6 +161,10 @@ class ExecCounters(dict):
     - ``inflight_dispatches`` — buckets dispatched asynchronously through
       ``exec/batch.py::dispatch_bucket`` (one per :class:`InFlightBucket`
       handle, whether or not anything overlapped).
+    - ``inflight_collects`` — in-flight buckets torn down (first collect
+      completion OR failure; one-shot per bucket).  After any drain,
+      ``inflight_dispatches == inflight_collects`` — the
+      no-lost-bucket invariant the loadgen soak test asserts.
     - ``collect_us`` — cumulative microseconds spent in the blocking
       *collect* phase (``jax.device_get`` wait + overflow re-runs + host
       post-processing); dispatch-to-collect overlap shows up as wall time
@@ -175,6 +180,13 @@ class ExecCounters(dict):
     - ``tier_flushes`` / ``deadline_flushes`` — admission-queue bucket
       flushes by cause: reached the full power-of-two tier vs. the oldest
       query's deadline budget expired (``serve/admission.py``).
+    - ``tickets_resolved`` / ``queue_wait_us`` / ``deadline_violations`` —
+      per-ticket wait telemetry stamped at resolution
+      (``serve/admission.py::Ticket``): tickets resolved (value or error),
+      cumulative queue wait in integer microseconds, and resolutions whose
+      wait exceeded the ticket's own deadline budget (>0.5 us past it —
+      the virtual-clock float-epsilon used by the admission benchmark).
+      These are what the SLO-burn load harness reads.
     - ``flusher_wakeups`` — background flusher thread wake-ups
       (``serve/search.py::AsyncSearchEngine.start``): each sleep that ended
       (deadline due, submit wake, or idle timeout) and led to a pump check.
@@ -196,10 +208,12 @@ class ExecCounters(dict):
         "sharded_calls", "sharded_traces", "sharded_rerun_calls",
         "mesh2d_calls", "mesh2d_traces", "mesh2d_rerun_calls",
         "mesh2d_row_dispatches", "replica_dispatches",
-        "inflight_dispatches", "collect_us", "overlap_high_water",
+        "inflight_dispatches", "inflight_collects",
+        "collect_us", "overlap_high_water",
         "warm_executions",
         "result_cache_hits", "result_cache_misses",
         "tier_flushes", "deadline_flushes",
+        "tickets_resolved", "queue_wait_us", "deadline_violations",
         "flusher_wakeups",
         "adaptive_promotions", "adaptive_demotions",
         "adaptive_overflow_saved",
@@ -642,6 +656,41 @@ def pow2_tiers(up_to: int) -> Tuple[int, ...]:
         tiers.append(b)
         b <<= 1
     return tuple(tiers)
+
+
+def bucket_hlo_text(
+    queries: Sequence[Sequence[DeviceSet]],
+    capacity: Optional[int] = None,
+    use_pallas="auto",
+) -> str:
+    """Optimized (post-XLA) HLO text for one bucket's jit executable.
+
+    Lowers and compiles ``_intersect_k_batch`` for the bucket exactly as
+    :func:`dispatch_device_batch` would execute it (same signature, same
+    pow2 B-tier padding, same capacity default) and returns the compiled
+    module text — the input ``launch/hlo_analysis.py::analyze_hlo`` wants,
+    so benchmarks can report analytical FLOP/byte summaries for the
+    executable they actually measured.  Shares the process jit cache with
+    live execution; tracing bumps ``EXEC_COUNTERS["batch_traces"]`` like
+    any other trace (lower before measuring, or reset counters after).
+    """
+    assert len(queries), "need at least one query row to lower"
+    ordered = [sorted(q, key=set_sort_key) for q in queries]
+    ts, gmaxes = _signature(ordered[0])
+    for q in ordered[1:]:
+        assert _signature(q) == (ts, gmaxes), "bucket mixes shape signatures"
+    cap = capacity or default_capacity(ts)
+    b_tier = 1 << (len(ordered) - 1).bit_length()
+    rows = list(range(len(ordered))) + [0] * (b_tier - len(ordered))
+    vals = tuple(
+        tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
+    )
+    images = tuple(
+        tuple(ordered[i][j].images for i in rows) for j in range(len(ts))
+    )
+    lowered = _intersect_k_batch.lower(vals, images, ts, gmaxes, cap,
+                                       use_pallas)
+    return lowered.compile().as_text()
 
 
 def warm_executables(

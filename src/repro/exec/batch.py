@@ -33,6 +33,8 @@ handle is held, so a caller that dispatches several buckets before
 collecting overlaps them — across replica rows, and host post-processing
 against device compute.  The module tracks the overlap in
 ``EXEC_COUNTERS``: ``inflight_dispatches`` per dispatched bucket,
+``inflight_collects`` per one-shot teardown (collect completion or
+failure — after a drain the two match, the no-lost-bucket invariant),
 ``overlap_high_water`` (max simultaneous in-flight buckets), and
 ``collect_us`` (cumulative blocking-collect time).
 """
@@ -155,6 +157,7 @@ class InFlightBucket:
         self._finished = True
         if self.replica is not None and self.topology is not None:
             self.topology.balancer.release(self.replica, self.weight)
+        EXEC_COUNTERS["inflight_collects"] += 1
         _inflight_exit()
 
     def collect(self) -> Dict[int, Tuple[np.ndarray, Dict]]:

@@ -115,11 +115,27 @@ class Ticket:
             raise self.error
         return self._value
 
+    def _record_wait(self, wait_us: float) -> None:
+        """Per-ticket wait telemetry, stamped exactly once at resolution.
+
+        ``queue_wait_us`` accumulates integer microseconds;
+        ``deadline_violations`` counts waits that exceeded this ticket's
+        own budget by more than the 0.5 us virtual-clock float epsilon
+        (tickets with no budget — e.g. resolved-at-submit paths with
+        ``deadline_us == 0`` — can't violate).  This is the raw material
+        for the load harness's SLO-burn accounting.
+        """
+        EXEC_COUNTERS["tickets_resolved"] += 1
+        EXEC_COUNTERS["queue_wait_us"] += int(wait_us)
+        if self.deadline_us > 0 and wait_us > self.deadline_us + 0.5:
+            EXEC_COUNTERS["deadline_violations"] += 1
+
     def resolve(self, value: Any, wait_us: float = 0.0) -> None:
         if self._done.is_set():
             raise RuntimeError("ticket already resolved — single-shot")
         self._value = value
         self.wait_us = wait_us
+        self._record_wait(wait_us)
         self._done.set()  # publish AFTER the payload writes
 
     def resolve_error(self, exc: BaseException, wait_us: float = 0.0) -> None:
@@ -127,6 +143,7 @@ class Ticket:
             raise RuntimeError("ticket already resolved — single-shot")
         self.error = exc
         self.wait_us = wait_us
+        self._record_wait(wait_us)
         self._done.set()  # publish AFTER the payload writes
 
     def deadline_at(self) -> float:
@@ -155,16 +172,23 @@ class AdmissionQueue:
         self._buckets: Dict[Hashable, List[Tuple[Ticket, Any]]] = {}
 
     def submit(self, key: Hashable, item: Any,
-               deadline_us: Optional[float] = None) -> Ticket:
+               deadline_us: Optional[float] = None,
+               submitted_at: Optional[float] = None) -> Ticket:
         """Queue ``item`` under ``key``; returns its unresolved Ticket.
 
         The per-submission ``deadline_us`` overrides the queue default.
+        ``submitted_at`` (engine-clock seconds) back-stamps the ticket's
+        arrival time — an open-loop load generator passes the *scheduled*
+        arrival so queue waits (and the deadline budget) are measured from
+        when the query should have arrived, not from when the submitter
+        thread got scheduled; the coordinated-omission correction.
         Submission never flushes by itself — call :meth:`take_full` /
         :meth:`take_due` afterwards so the engine (which owns execution)
         controls when device work happens.
         """
         ticket = Ticket(
-            submitted_at=self.clock(),
+            submitted_at=(self.clock() if submitted_at is None
+                          else float(submitted_at)),
             deadline_us=self.deadline_us if deadline_us is None else float(deadline_us),
         )
         with self._lock:

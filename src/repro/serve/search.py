@@ -456,10 +456,18 @@ class AsyncSearchEngine(SearchEngine):
                  warm_b_tiers: Optional[Sequence[int]] = None,
                  adaptive_deadline=False,
                  max_inflight: int = 8,
+                 inline_tier_flush: bool = True,
                  **kw):
         kw.setdefault("use_device", True)
         super().__init__(postings, result_cache=result_cache, **kw)
         self.clock = clock
+        # manual mode only: with the flusher stopped, submit flushes full
+        # tiers inline (the historical behavior).  A deterministic driver
+        # that emulates the flusher itself (serve/loadgen.py's virtual-time
+        # mode) sets this False so submit ONLY queues — flush timing then
+        # has a single owner and queue waits follow the server model, not
+        # the submitter's call stack.
+        self.inline_tier_flush = bool(inline_tier_flush)
         self.admission = AdmissionQueue(flush_tier=flush_tier,
                                         deadline_us=deadline_us, clock=clock)
         # one lock serializes all bucket DISPATCH (_flush callers); submit
@@ -610,7 +618,8 @@ class AsyncSearchEngine(SearchEngine):
     # ------------------------------------------------------------------
 
     def submit(self, terms: Sequence[int],
-               deadline_us: Optional[float] = None) -> Ticket:
+               deadline_us: Optional[float] = None,
+               arrival_at: Optional[float] = None) -> Ticket:
         """Admit one query; returns a Ticket resolving to a QueryResult.
 
         Resolution timing by path: ``empty`` / host-routed / result-cache
@@ -620,23 +629,32 @@ class AsyncSearchEngine(SearchEngine):
         queues and wakes the flusher — all device execution happens on the
         flusher thread.  ``wait_us`` on the ticket is the queue wait the
         deadline budget bounds.
+
+        ``arrival_at`` (engine-clock seconds) back-stamps the ticket with
+        the query's *scheduled* arrival time: an open-loop load generator
+        passes it so a submitter thread that got scheduled late still
+        charges the lateness to the measured wait (and to the deadline
+        budget) instead of silently forgiving it — the coordinated-
+        omission correction.  Applies to every path, including
+        resolved-at-submit ones.
         """
         plan = self.plan(terms)
         cached = self._cached_result(plan)
         if cached is not None:
-            return self._resolved_now(cached)
+            return self._resolved_now(cached, arrival_at=arrival_at)
         if plan.algorithm != "device":
             gen = self.cache.generation
             result = self._execute_host_plan(plan)
             self._store(plan, result, generation=gen)
-            return self._resolved_now(result)
+            return self._resolved_now(result, arrival_at=arrival_at)
         if self.adaptive_deadline is not None:
             key = adaptive_key(plan.sig)
             self.adaptive_deadline.observe(key, self.clock())
             if deadline_us is None:
                 deadline_us = self.adaptive_deadline.budget_for(
                     key, self.admission.deadline_us)
-        ticket = self.admission.submit(plan.sig, plan, deadline_us)
+        ticket = self.admission.submit(plan.sig, plan, deadline_us,
+                                       submitted_at=arrival_at)
         if self.running:
             # the queue reports 0 for full tiers, so waking the flusher
             # covers both the tier-flush and the recompute-sleep cases
@@ -646,8 +664,9 @@ class AsyncSearchEngine(SearchEngine):
             # the flusher stopped between the enqueue and the wake: fall
             # through to manual-mode behavior so a full tier still flushes
             # (stop() re-drains to catch the remaining partial-bucket case)
-        self._flush(self.admission.take_full())
-        self._collect_all()
+        if self.inline_tier_flush:
+            self._flush(self.admission.take_full())
+            self._collect_all()
         return ticket
 
     def pump(self) -> int:
@@ -680,9 +699,18 @@ class AsyncSearchEngine(SearchEngine):
         """Queued-but-unflushed submission count (device path only)."""
         return self.admission.pending()
 
-    def _resolved_now(self, result: QueryResult) -> Ticket:
-        ticket = Ticket(submitted_at=self.clock(), deadline_us=0.0)
-        ticket.resolve(result, wait_us=0.0)
+    def _resolved_now(self, result: QueryResult,
+                      arrival_at: Optional[float] = None) -> Ticket:
+        """Pre-resolved ticket for paths answered inside ``submit``.
+
+        With an ``arrival_at`` back-stamp the wait is the submitter's
+        lateness (scheduled arrival -> now), not zero — a cache hit the
+        runtime got to 3 ms late still waited 3 ms from the caller's side.
+        """
+        now = self.clock()
+        arrival = now if arrival_at is None else min(float(arrival_at), now)
+        ticket = Ticket(submitted_at=arrival, deadline_us=0.0)
+        ticket.resolve(result, wait_us=(now - arrival) * 1e6)
         return ticket
 
     def _flush(self, buckets) -> int:

@@ -159,6 +159,55 @@ def test_mesh2d_identity_and_speedup_floor_gate(tmp_path):
     assert any("speedup_2x2_vs_1x4" in f for f in failures)
 
 
+def _slo(cal_burn: float = 0.02, over_burn: float = 0.35, leak: int = 0,
+         identical: int = 1, balanced: int = 1, errors: int = 0,
+         over_qps: float = 2500.0, queries: int = 5000):
+    return {
+        "queries": queries, "n_docs": 12000, "vocab_kept": 900,
+        "distinct_pool": 96,
+        "identical_to_oracle": identical,
+        "dispatch_collect_balanced": balanced,
+        "thread_leak": leak, "errors_total": errors,
+        "calibrated_burn_rate": cal_burn,
+        "overload_burn_rate": over_burn,
+        "virtual_runs": [
+            {"rate_x": 0.04, "served_qps": 140.0},
+            {"rate_x": 0.75, "served_qps": over_qps},
+        ],
+    }
+
+
+def test_slo_burn_absolute_invariants_gate(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_slo_burn.json", _slo())
+    cur = _write(tmp_path, "cur", "BENCH_slo_burn.json", _slo())
+    assert check_bench.check_dirs(base, cur) == []
+    # each absolute invariant fails on its own, at any scale
+    for broken, needle in [
+        (_slo(identical=0, queries=64), "identical_to_oracle"),
+        (_slo(balanced=0, queries=64), "dispatch_collect_balanced"),
+        (_slo(leak=1, queries=64), "thread_leak"),
+        (_slo(errors=3, queries=64), "errors_total"),
+        (_slo(cal_burn=0.2, queries=64), "calibrated_burn_rate"),
+        (_slo(over_burn=0.05, queries=64), "overload_burn_rate"),
+    ]:
+        cur_d = _write(tmp_path, f"cur_{needle}", "BENCH_slo_burn.json",
+                       broken)
+        failures = check_bench.check_dirs(base, cur_d)
+        assert any(needle in f for f in failures), (needle, failures)
+
+
+def test_slo_burn_served_qps_relative_same_scale_only(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_slo_burn.json", _slo())
+    # 60% throughput drop at the same workload scale -> relative rule fires
+    cur = _write(tmp_path, "cur", "BENCH_slo_burn.json", _slo(over_qps=1000.0))
+    failures = check_bench.check_dirs(base, cur)
+    assert any("virtual_runs[rate_x=0.75].served_qps" in f for f in failures)
+    # same drop at smoke scale (different queries) -> skipped
+    cur2 = _write(tmp_path, "cur2", "BENCH_slo_burn.json",
+                  _slo(over_qps=1000.0, queries=64))
+    assert check_bench.check_dirs(base, cur2) == []
+
+
 def test_mesh2d_layout_qps_regression_fails_same_scale_only(tmp_path):
     base = _write(tmp_path, "base", "BENCH_mesh2d_qps.json", _mesh2d(3.7))
     # 2x2 QPS drops 60% at the same workload scale -> relative rule fires

@@ -1,0 +1,326 @@
+"""Tests for the open-loop load harness (``serve/loadgen.py``).
+
+Covers: deterministic traffic synthesis (Lewis–Shedler arrivals, bursts,
+pinned query pools), the burn accounting in ``_make_report`` (epsilon,
+per-ticket budgets, windowed curve, queued-subset percentiles), the
+virtual-time driver (exact deadline-flush waits, tier flushes at zero
+wait, overload burning, run-to-run determinism, bit-identity to the host
+oracle, engine-state restoration), the clock-attach guards, and the
+wall-clock soak: 4 submitter threads against the real background flusher
+with exactly-once resolution, no leaked threads, and balanced
+dispatch/collect counters.
+"""
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EXEC_COUNTERS
+from repro.data.pipeline import inverted_index, zipf_corpus
+from repro.serve.admission import Ticket
+from repro.serve.loadgen import (
+    BURN_EPS_US, CostModel, QueryMix, TrafficShape, ArrivalSchedule,
+    attach_virtual_clock, attach_wall_clock, build_schedule, run_virtual,
+    run_wallclock, _make_report,
+)
+from repro.serve.search import AsyncSearchEngine, SearchEngine
+
+
+@pytest.fixture(scope="module")
+def postings():
+    docs = zipf_corpus(3000, vocab=400, mean_len=40, seed=3)
+    return inverted_index(docs)
+
+
+@pytest.fixture(scope="module")
+def index_terms(postings):
+    return sorted(t for t, p in postings.items() if len(p))
+
+
+def _query_pool(index_terms, n=12, seed=5):
+    rng = np.random.default_rng(seed)
+    return QueryMix().sample(index_terms, n, rng)
+
+
+# ---------------------------------------------------------------------------
+# traffic synthesis
+# ---------------------------------------------------------------------------
+
+def test_schedule_deterministic_sorted_and_bounded(index_terms):
+    shape = TrafficShape(base_qps=800.0, duration_s=1.0)
+    a = build_schedule(shape, index_terms, seed=7)
+    b = build_schedule(shape, index_terms, seed=7)
+    assert np.array_equal(a.times, b.times)
+    assert a.queries == b.queries
+    assert np.all(np.diff(a.times) >= 0)
+    assert len(a) and a.times[0] >= 0.0 and a.times[-1] < shape.duration_s
+    c = build_schedule(shape, index_terms, seed=8)
+    assert not np.array_equal(a.times, c.times)
+
+
+def test_schedule_mean_rate_tracks_base_qps(index_terms):
+    shape = TrafficShape(base_qps=3000.0, duration_s=2.0,
+                         diurnal_amplitude=0.5, burst_rate_hz=0.0)
+    sched = build_schedule(shape, index_terms, seed=1)
+    # thinning recovers the mean of the sinusoid: base_qps (amplitude
+    # integrates to zero); 6000 expected arrivals, Poisson noise ~1.3%
+    assert sched.offered_qps == pytest.approx(3000.0, rel=0.10)
+
+
+def test_bursts_add_clumps(index_terms):
+    smooth = TrafficShape(base_qps=200.0, duration_s=2.0, burst_rate_hz=0.0)
+    bursty = TrafficShape(base_qps=200.0, duration_s=2.0, burst_rate_hz=5.0,
+                          burst_size=30.0)
+    n_smooth = len(build_schedule(smooth, index_terms, seed=2))
+    n_bursty = len(build_schedule(bursty, index_terms, seed=2))
+    # ~10 burst events x ~30 queries on top of ~400 smooth arrivals
+    assert n_bursty > n_smooth + 100
+
+
+def test_rate_at_sinusoid_and_scaled():
+    shape = TrafficShape(base_qps=100.0, diurnal_amplitude=0.5,
+                         diurnal_period_s=4.0)
+    assert shape.rate_at(0.0) == pytest.approx(100.0)
+    assert shape.rate_at(1.0) == pytest.approx(150.0)   # sin peak
+    assert shape.rate_at(3.0) == pytest.approx(50.0)    # sin trough
+    deep = TrafficShape(base_qps=100.0, diurnal_amplitude=2.0,
+                        diurnal_period_s=4.0)
+    assert deep.rate_at(3.0) == 0.0                     # clipped, not negative
+    doubled = shape.scaled(2.0)
+    assert doubled.base_qps == 200.0 and doubled.burst_rate_hz == 2.0
+    assert doubled.diurnal_amplitude == shape.diurnal_amplitude
+
+
+def test_query_mix_distinct_pool_and_k_mix(index_terms):
+    rng = np.random.default_rng(0)
+    mix = QueryMix(distinct_pool=8)
+    qs = mix.sample(index_terms, 200, rng)
+    assert len({tuple(q) for q in qs}) <= 8
+    ks = {len(q) for q in qs}
+    assert ks <= {1, 2, 3, 4}          # dedup can shrink below the drawn k
+    term_set = set(index_terms)
+    assert all(set(q) <= term_set for q in qs)
+
+
+def test_pinned_pool_draws_only_from_pool(index_terms):
+    pool = _query_pool(index_terms, n=6)
+    shape = TrafficShape(base_qps=500.0, duration_s=1.0)
+    sched = build_schedule(shape, index_terms, seed=3, pool=pool)
+    allowed = {tuple(q) for q in pool}
+    assert {q for q in sched.queries} <= allowed
+
+
+def test_cost_model_math():
+    cost = CostModel(per_bucket_us=200.0, per_query_us=50.0)
+    assert cost.flush_cost_us(1, 1) == 250.0
+    assert cost.flush_cost_us(2, 10) == 900.0
+    # tier-8 flush costs 600 us for 8 queries -> 8/600us sustained
+    assert cost.capacity_qps(8) == pytest.approx(8 / 600e-6)
+
+
+# ---------------------------------------------------------------------------
+# burn accounting (_make_report on synthetic tickets)
+# ---------------------------------------------------------------------------
+
+def _fake_ticket(wait_us, deadline_us=1000.0, cached=False, error=None):
+    t = Ticket(submitted_at=0.0, deadline_us=deadline_us)
+    if error is not None:
+        t.resolve_error(error, wait_us=wait_us)
+        return t
+    stats = {"cached": True} if cached else {"batch_size": 4}
+    t.resolve(SimpleNamespace(latency_us=5.0, stats=stats), wait_us=wait_us)
+    return t
+
+
+def test_report_burn_epsilon_and_budgets():
+    entries = [
+        (0.05, _fake_ticket(999.0)),                   # within budget
+        (0.15, _fake_ticket(1000.0 + BURN_EPS_US)),    # at the epsilon edge
+        (0.25, _fake_ticket(1001.0)),                  # burned
+        (0.35, _fake_ticket(400.0, deadline_us=0.0, cached=True)),  # default
+        (0.45, _fake_ticket(1500.0, deadline_us=0.0, cached=True)),  # burned
+    ]
+    rep = _make_report("virtual", entries, deadline_us=1000.0,
+                       duration_s=0.5, windows=5)
+    assert rep.arrivals == rep.completed == 5 and rep.errors == 0
+    # only the strict epsilon-exceeding waits burn; zero-deadline tickets
+    # (resolved-at-submit paths) are judged against the run default
+    assert rep.burned == 2 and rep.burn_rate == pytest.approx(0.4)
+    assert [w["burned"] for w in rep.burn_curve] == [0, 0, 1, 0, 1]
+    assert sum(w["completed"] for w in rep.burn_curve) == 5
+    # queued percentiles exclude the cached (resolved-at-submit) tickets
+    assert rep.queued_queries == 3
+
+
+def test_report_errors_and_tail_window():
+    boom = RuntimeError("bucket failed")
+    entries = [
+        (0.1, _fake_ticket(100.0)),
+        (0.2, _fake_ticket(100.0, error=boom)),
+        (0.99, _fake_ticket(2000.0)),   # lands in (and burns) the last window
+    ]
+    rep = _make_report("virtual", entries, deadline_us=1000.0,
+                       duration_s=0.5, windows=2)   # arrivals past duration
+    assert rep.completed == 2 and rep.errors == 1
+    assert rep.burn_curve[-1]["burned"] == 1        # clamped into tail window
+    assert rep.burned == 1
+
+
+# ---------------------------------------------------------------------------
+# virtual-time driver
+# ---------------------------------------------------------------------------
+
+def _fresh_engine(postings, pool, flush_tier=4, deadline_us=2000.0):
+    return AsyncSearchEngine(postings, seed=3, flush_tier=flush_tier,
+                             deadline_us=deadline_us, result_cache=0,
+                             warm_queries=pool)
+
+
+def _device_query(eng, pool):
+    """First pool query the engine routes to the device path (host-routed
+    queries resolve at submit and never exercise the flush policy)."""
+    return next(tuple(q) for q in pool
+                if eng.plan(list(q)).algorithm == "device")
+
+
+def test_virtual_single_arrival_waits_exactly_deadline(postings, index_terms):
+    pool = _query_pool(index_terms, n=4)
+    eng = _fresh_engine(postings, pool, deadline_us=2000.0)
+    sched = ArrivalSchedule(times=np.asarray([0.1]),
+                            queries=(_device_query(eng, pool),),
+                            duration_s=0.2)
+    rep, entries = run_virtual(eng, sched, CostModel(200.0, 50.0))
+    [(t_arr, ticket)] = entries
+    # an idle server deadline-flushes at exactly submitted_at + budget:
+    # the wait IS the budget, and the epsilon keeps it from burning
+    assert ticket.wait_us == pytest.approx(2000.0, abs=BURN_EPS_US)
+    assert rep.burned == 0 and rep.completed == 1
+    assert EXEC_COUNTERS["deadline_flushes"] == 1
+    assert EXEC_COUNTERS["deadline_violations"] == 0
+
+
+def test_virtual_full_tier_flushes_at_zero_wait(postings, index_terms):
+    pool = _query_pool(index_terms, n=4)
+    eng = _fresh_engine(postings, pool, flush_tier=4)
+    q = _device_query(eng, pool)
+    sched = ArrivalSchedule(times=np.zeros(4), queries=(q, q, q, q),
+                            duration_s=0.1)
+    rep, entries = run_virtual(eng, sched, CostModel(200.0, 50.0))
+    assert EXEC_COUNTERS["tier_flushes"] == 1
+    assert EXEC_COUNTERS["deadline_flushes"] == 0
+    assert all(t.wait_us == pytest.approx(0.0, abs=BURN_EPS_US)
+               for _, t in entries)
+    assert rep.burned == 0
+
+
+def test_virtual_deterministic_and_identical_to_oracle(postings, index_terms):
+    pool = _query_pool(index_terms, n=8)
+    shape = TrafficShape(base_qps=300.0, duration_s=0.5, burst_rate_hz=2.0,
+                         burst_size=6.0)
+    sched = build_schedule(shape, index_terms, seed=11, pool=pool)
+    assert len(sched) > 50
+    cost = CostModel(per_bucket_us=500.0, per_query_us=100.0)
+
+    runs = []
+    for _ in range(2):
+        eng = _fresh_engine(postings, pool)
+        rep, entries = run_virtual(eng, sched, cost)
+        runs.append((rep, entries))
+        # engine state restored: manual mode back on, nothing pending
+        assert eng.inline_tier_flush and eng.pending() == 0
+        assert rep.counters["inflight_dispatches"] == \
+            rep.counters["inflight_collects"]
+        assert rep.counters["tickets_resolved"] == rep.completed
+
+    (rep_a, ent_a), (rep_b, ent_b) = runs
+    # byte-equal waits run to run: the DES is deterministic
+    assert [t.wait_us for _, t in ent_a] == [t.wait_us for _, t in ent_b]
+    assert rep_a.burn_rate == rep_b.burn_rate
+    assert rep_a.counters == rep_b.counters
+
+    oracle = SearchEngine(postings, seed=3, use_device=True)
+    memo = {tuple(q): oracle.query(list(q)).doc_ids for q in pool}
+    for (t_arr, ticket), q in zip(ent_a, sched.queries):
+        assert ticket.error is None
+        assert np.array_equal(ticket.value.doc_ids, memo[q]), q
+
+
+def test_virtual_overload_burns_low_load_does_not(postings, index_terms):
+    pool = _query_pool(index_terms, n=8)
+    # synthetic slow server: ~360 qps singleton capacity
+    cost = CostModel(per_bucket_us=2000.0, per_query_us=750.0)
+    shape = TrafficShape(base_qps=30.0, duration_s=0.5, burst_rate_hz=0.0)
+    low = build_schedule(shape, index_terms, seed=4, pool=pool)
+    high = build_schedule(shape.scaled(25.0), index_terms, seed=4, pool=pool)
+    rep_low, _ = run_virtual(_fresh_engine(postings, pool), low, cost)
+    rep_high, _ = run_virtual(_fresh_engine(postings, pool), high, cost)
+    assert rep_low.burn_rate < 0.2
+    assert rep_high.burn_rate > max(0.3, 2 * rep_low.burn_rate)
+    # overload stretches the tail past the budget
+    assert rep_high.p99_wait_us > rep_high.deadline_us
+
+
+def test_attach_clock_guards(postings, index_terms):
+    pool = _query_pool(index_terms, n=4)
+    eng = _fresh_engine(postings, pool)
+    eng.start()
+    try:
+        with pytest.raises(AssertionError, match="stop the background"):
+            attach_virtual_clock(eng)
+    finally:
+        eng.stop()
+    clk = attach_virtual_clock(eng)
+    eng.inline_tier_flush = False
+    try:
+        eng.submit(list(_device_query(eng, pool)))
+        assert eng.pending() == 1
+        with pytest.raises(AssertionError, match="work in flight"):
+            attach_wall_clock(eng)
+        clk.t += 1.0
+        eng.pump()
+    finally:
+        eng.inline_tier_flush = True
+    attach_wall_clock(eng)
+    assert eng.clock is time.perf_counter
+
+
+# ---------------------------------------------------------------------------
+# wall-clock soak: 4 submitters + the real background flusher
+# ---------------------------------------------------------------------------
+
+def test_wallclock_soak_exactly_once_no_leaks(postings, index_terms):
+    """Satellite stress test: four submitter threads replay an open-loop
+    schedule against the running background flusher.  Every ticket must
+    resolve exactly once (single-shot resolution + counter identity), the
+    dispatch/collect pipeline must balance, every result must match the
+    host oracle bit-exactly, and every thread the run started must be
+    gone afterwards."""
+    pool = _query_pool(index_terms, n=8)
+    eng = _fresh_engine(postings, pool, flush_tier=4, deadline_us=500.0)
+    shape = TrafficShape(base_qps=150.0, duration_s=0.8, burst_rate_hz=2.0,
+                         burst_size=8.0)
+    sched = build_schedule(shape, index_terms, seed=6, pool=pool)
+    assert len(sched) > 60
+    before = set(threading.enumerate())
+    rep, entries = run_wallclock(eng, sched, submitters=4, windows=4)
+    assert eng._flusher_error is None
+    assert rep.thread_leak == 0
+    assert set(threading.enumerate()) <= before
+    assert rep.arrivals == len(sched)
+    assert rep.completed == len(sched) and rep.errors == 0
+    # exactly-once: every resolution bumped the counter exactly once, and
+    # every dispatched bucket was collected exactly once
+    assert rep.counters["tickets_resolved"] == rep.completed
+    assert rep.counters["inflight_dispatches"] == \
+        rep.counters["inflight_collects"]
+    assert rep.counters["tier_flushes"] + rep.counters["deadline_flushes"] \
+        == rep.counters["inflight_dispatches"]
+    oracle = SearchEngine(postings, seed=3, use_device=True)
+    memo = {tuple(q): oracle.query(list(q)).doc_ids for q in pool}
+    for (t_arr, ticket), q in zip(entries, sched.queries):
+        assert np.array_equal(ticket.value.doc_ids, memo[q]), q
+    # double-resolution must raise, not clobber (the exactly-once backstop)
+    with pytest.raises(RuntimeError, match="single-shot"):
+        entries[0][1].resolve(None)

@@ -1,0 +1,209 @@
+"""Structural invariants of ``core/partition.py`` and differential checks
+of every Section-4 baseline in ``core/baselines.py``.
+
+Partition invariants: a preprocessed structure must be a lossless
+reordering of its input (groups partition the set, offsets monotone and
+exhaustive, g-keys ascending and consistent with the z-prefix rule,
+sentinel padding exactly complements the mask) and its storage accounting
+must match the paper's formulas.  Baselines: on random sets of every
+supported arity, each competitor must produce the numpy-oracle
+intersection — and agree with the paper's ``rangroupscan`` over the same
+inputs, so timing charts compare algorithms, never correctness bugs.
+"""
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.baselines import BASELINES
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.intersect import rangroupscan
+from repro.core.partition import (
+    SENTINEL, choose_t, preprocess_fixed, preprocess_multiresolution,
+    preprocess_prefix,
+)
+
+SEED_MAX = (1 << 31) - 1
+
+
+def _random_sets(rng, k=2, n=400, overlap=60, universe=1 << 22):
+    common = rng.choice(universe, overlap, replace=False).astype(np.uint32)
+    out = []
+    for _ in range(k):
+        own = rng.choice(universe, n, replace=False).astype(np.uint32)
+        out.append(np.unique(np.concatenate([own, common])))
+    return out
+
+
+def _truth(sets):
+    out = sets[0]
+    for s in sets[1:]:
+        out = np.intersect1d(out, s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# partition invariants
+# ---------------------------------------------------------------------------
+
+def _check_prefix_invariants(values, w=256, m=2, seed=5):
+    idx = preprocess_prefix(values, w=w, m=m, seed=seed)
+    uniq = np.unique(np.asarray(values, dtype=np.uint32))
+    # lossless: the groups partition exactly the input set
+    assert np.array_equal(np.sort(idx.values), uniq)
+    assert len(idx.g_keys) == len(idx.values) == idx.n
+    # g-ordering: keys ascending, values are the perm-preimage of the keys
+    assert np.all(np.diff(idx.g_keys.astype(np.int64)) >= 0)
+    assert np.array_equal(np.asarray(idx.perm.forward(idx.values)),
+                          idx.g_keys)
+    # offsets: monotone, exhaustive, one slot per z-prefix group
+    assert idx.offsets[0] == 0 and idx.offsets[-1] == idx.n
+    assert np.all(np.diff(idx.offsets) >= 0)
+    assert len(idx.offsets) == idx.G + 1 == (1 << idx.t) + 1
+    # the prefix rule: group z holds exactly the keys whose top t bits == z
+    if idx.t > 0:
+        z = (idx.g_keys >> np.uint32(32 - idx.t)).astype(np.int64)
+        assert np.array_equal(np.bincount(z, minlength=idx.G),
+                              np.diff(idx.offsets))
+    # padding: mask marks real entries; everything else is the sentinel
+    counts = np.diff(idx.offsets)
+    assert idx.padded_keys.shape == (idx.G, idx.gmax)
+    assert np.array_equal(idx.mask.sum(axis=1), counts)
+    assert np.all(idx.padded_keys[~idx.mask] == SENTINEL)
+    assert np.array_equal(idx.padded_keys[idx.mask], idx.g_keys)
+    assert np.array_equal(idx.padded_vals[idx.mask], idx.values)
+    # filter images: one packed w-bit word row per (group, hash)
+    assert idx.images.shape == (idx.G, m, w // 32)
+    # storage accounting (Section 3.3.1): n + G*(m+1) words
+    assert idx.storage_words() == idx.n + idx.G * (m + 1)
+    return idx
+
+
+@pytest.mark.parametrize("n", [1, 2, 17, 300, 5000])
+def test_prefix_invariants_sized(n):
+    rng = np.random.default_rng(n)
+    vals = rng.choice(1 << 24, n, replace=False).astype(np.uint32)
+    _check_prefix_invariants(vals)
+
+
+def test_prefix_invariants_adversarial_values():
+    # duplicates collapse; extremes (0, 2^32-1) survive the sentinel pad
+    vals = np.array([0, 0, 1, SENTINEL, 7, 7, 1 << 31], dtype=np.uint32)
+    idx = _check_prefix_invariants(vals)
+    assert idx.n == 5
+
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(vals=st.lists(st.integers(min_value=0, max_value=(1 << 32) - 1),
+                     min_size=1, max_size=400),
+       w=st.sampled_from([64, 256]), m=st.integers(1, 3))
+def test_prefix_invariants_property(vals, w, m):
+    _check_prefix_invariants(np.asarray(vals, dtype=np.uint32), w=w, m=m)
+
+
+def test_choose_t_bounds():
+    assert choose_t(0, 256) == 0 and choose_t(1, 256) == 0
+    for n in [2, 10, 100, 1000, 10**6]:
+        for w in [64, 256, 512]:
+            t = choose_t(n, w)
+            assert t == math.ceil(math.log2(max(1.0, n / math.sqrt(w))))
+            assert (1 << t) >= n / math.sqrt(w)          # enough groups
+            if t > 0:
+                assert (1 << (t - 1)) < n / math.sqrt(w)  # but no excess tier
+    # monotone in n for fixed w
+    ts = [choose_t(n, 256) for n in range(1, 2000, 37)]
+    assert ts == sorted(ts)
+
+
+def test_fixed_width_invariants():
+    rng = np.random.default_rng(4)
+    vals = rng.choice(1 << 24, 500, replace=False).astype(np.uint32)
+    idx = preprocess_fixed(vals, w=64)
+    uniq = np.unique(vals)
+    assert np.array_equal(idx.values, uniq)          # rank partition: sorted
+    s = idx.group_size
+    assert idx.G == math.ceil(idx.n / s)
+    assert np.array_equal(idx.offsets,
+                          np.minimum(np.arange(idx.G + 1) * s, idx.n))
+    # lo/hi really bound each group
+    for z in range(idx.G):
+        grp = idx.values[idx.offsets[z]:idx.offsets[z + 1]]
+        assert idx.lo[z] == grp[0] and idx.hi[z] == grp[-1]
+    assert np.all(idx.padded_vals[~idx.mask] == SENTINEL)
+
+
+def test_multiresolution_consistency():
+    rng = np.random.default_rng(6)
+    vals = rng.choice(1 << 24, 1200, replace=False).astype(np.uint32)
+    multi = preprocess_multiresolution(vals)
+    fam, perm = multi.base.family, multi.base.perm
+    for t in range(multi.T + 1):
+        view = multi.at(t)
+        # each resolution is itself a valid prefix partition of the SAME
+        # g-ordered arrays, and matches a direct build at that resolution
+        direct = preprocess_prefix(vals, t=t, family=fam, perm=perm)
+        assert np.array_equal(view.offsets, direct.offsets)
+        assert np.array_equal(view.g_keys, direct.g_keys)
+        assert np.array_equal(view.images, direct.images)
+    # O(n) storage: n elements + sum_t 2^t * (m+1) bookkeeping words
+    m = multi.base.family.m
+    want = multi.base.n + sum((1 << t) * (m + 1) for t in range(multi.T + 1))
+    assert multi.storage_words() == want
+
+
+# ---------------------------------------------------------------------------
+# baselines vs oracle (and vs the paper's own algorithm)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(BASELINES))
+@pytest.mark.parametrize("k", [2, 3, 4])
+def test_baseline_matches_oracle(name, k):
+    rng = np.random.default_rng(17 * k)
+    sets = _random_sets(rng, k=k, n=400, overlap=60)
+    truth = _truth(sets)
+    res, stats = BASELINES[name](sets)
+    assert np.array_equal(np.asarray(res, dtype=np.uint32), truth), name
+    assert isinstance(stats, dict)
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_baselines_agree_with_rangroupscan(k):
+    rng = np.random.default_rng(23 * k)
+    sets = _random_sets(rng, k=k, n=600, overlap=120)
+    fam = random_hash_family(2, 256, seed=9)
+    perm = default_permutation(9)
+    idxs = [preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+            for s in sets]
+    paper, _ = rangroupscan(idxs)
+    for name, fn in BASELINES.items():
+        res, _ = fn(sets)
+        assert np.array_equal(np.asarray(res, dtype=np.uint32), paper), name
+
+
+def test_baselines_edge_cases():
+    empty_overlap = [np.array([1, 3, 5], np.uint32),
+                     np.array([2, 4, 6], np.uint32)]
+    identical = [np.arange(10, dtype=np.uint32)] * 2
+    single = [np.array([7], np.uint32), np.array([7], np.uint32)]
+    for name, fn in BASELINES.items():
+        res, _ = fn(empty_overlap)
+        assert len(res) == 0, name
+        res, _ = fn(identical)
+        assert np.array_equal(np.asarray(res, np.uint32),
+                              identical[0]), name
+        res, _ = fn(single)
+        assert np.array_equal(np.asarray(res, np.uint32), single[0]), name
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX),
+       k=st.integers(2, 4))
+def test_baselines_oracle_property(seed, k):
+    rng = np.random.default_rng(seed)
+    sets = _random_sets(rng, k=k, n=150, overlap=25)
+    truth = _truth(sets)
+    for name, fn in BASELINES.items():
+        res, _ = fn(sets)
+        assert np.array_equal(np.asarray(res, dtype=np.uint32), truth), \
+            (name, seed)

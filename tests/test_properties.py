@@ -1,0 +1,197 @@
+"""Property-based differential hardening of the serving stack.
+
+Random postings + random query batches through the full serving pipeline
+(plan -> bucket -> execute -> scatter) must be bit-identical to the numpy
+host oracle — on the plain device engine, the z-sharded mesh, and the 2-D
+replica x shard topology, and under forced capacity overflow (where the
+enlarged re-run must keep results exact, never truncate).
+
+Every property has two drivers: a seeded, always-running variant
+(parametrized seeds — deterministic, no extra deps) and a hypothesis
+``@given`` variant over the same check function (via the
+``_hypothesis_compat`` shim: skips cleanly where hypothesis is not
+installed, explores fresh seeds where it is).  Mesh variants carry the
+usual >= 4 devices skip; the CI multi-device job runs them.
+"""
+import numpy as np
+import pytest
+import jax
+from _hypothesis_compat import given, settings, st
+
+from repro.core.engine import (
+    EXEC_COUNTERS, DeviceSet, intersect_device_batch, intersect_sharded_batch,
+    make_shard_mesh, set_sort_key,
+)
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.partition import preprocess_prefix
+from repro.exec.topology import make_topology
+from repro.serve.search import AsyncSearchEngine, SearchEngine
+
+N_DEVICES = 4
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < N_DEVICES,
+    reason=f"needs >= {N_DEVICES} devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+SEED_MAX = (1 << 31) - 1
+
+
+def _random_postings(rng, n_terms=8, max_len=400, universe=1 << 18):
+    """Random inverted index with a shared overlap pool (so conjunctions
+    are routinely nonempty) and wildly varying list sizes (so plans route
+    across hashbin / host / device and several shape signatures)."""
+    common = rng.choice(universe, 40, replace=False).astype(np.uint32)
+    postings = {}
+    for t in range(n_terms):
+        n = int(rng.integers(5, max_len))
+        own = rng.choice(universe, n, replace=False).astype(np.uint32)
+        postings[t] = np.unique(np.concatenate([own, common]))
+    return postings
+
+
+def _random_queries(rng, n_terms, n=24):
+    return [sorted(set(rng.integers(0, n_terms, size=int(rng.integers(1, 5)))
+                       .tolist()))
+            for _ in range(n)]
+
+
+def _np_oracle(postings, q):
+    out = postings[sorted(set(q))[0]]
+    for t in sorted(set(q))[1:]:
+        out = np.intersect1d(out, postings[t])
+    return out.astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# full pipeline differential: plan -> bucket -> execute == numpy oracle
+# ---------------------------------------------------------------------------
+
+def _check_engine_differential(seed, **engine_kw):
+    rng = np.random.default_rng(seed)
+    postings = _random_postings(rng)
+    queries = _random_queries(rng, len(postings))
+    eng = SearchEngine(postings, seed=3, use_device=True, **engine_kw)
+    for q, r in zip(queries, eng.query_batch(queries)):
+        assert np.array_equal(r.doc_ids, _np_oracle(postings, q)), (seed, q)
+    # the async front-end over the same pipeline: submit / drain
+    aeng = AsyncSearchEngine(postings, seed=3, flush_tier=8,
+                             result_cache=0, **engine_kw)
+    tickets = [aeng.submit(list(q)) for q in queries]
+    aeng.drain()
+    for q, t in zip(queries, tickets):
+        assert t.done and t.error is None, (seed, q)
+        assert np.array_equal(t.value.doc_ids, _np_oracle(postings, q)), \
+            (seed, q)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_engine_differential_seeded(seed):
+    _check_engine_differential(seed)
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX))
+def test_engine_differential_property(seed):
+    _check_engine_differential(seed)
+
+
+@multi_device
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sharded_differential_seeded(seed):
+    _check_engine_differential(seed, mesh=make_shard_mesh(N_DEVICES),
+                               shard_min_g=4)
+
+
+@multi_device
+@settings(max_examples=2, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX))
+def test_sharded_differential_property(seed):
+    _check_engine_differential(seed, mesh=make_shard_mesh(N_DEVICES),
+                               shard_min_g=4)
+
+
+@multi_device
+@pytest.mark.parametrize("seed", [0, 1])
+def test_mesh2d_differential_seeded(seed):
+    _check_engine_differential(seed, topology=make_topology(2, 2),
+                               shard_min_g=4)
+
+
+@multi_device
+@settings(max_examples=2, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX))
+def test_mesh2d_differential_property(seed):
+    _check_engine_differential(seed, topology=make_topology(2, 2),
+                               shard_min_g=4)
+
+
+# ---------------------------------------------------------------------------
+# forced overflow: the enlarged re-run keeps results exact at any capacity
+# ---------------------------------------------------------------------------
+
+def _overlapping_device_row(rng, k=2, n=800, overlap=300):
+    """k preprocessed device sets with >> capacity survivors in common."""
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    common = rng.choice(1 << 22, overlap, replace=False).astype(np.uint32)
+    sets = []
+    for _ in range(k):
+        own = rng.choice(1 << 22, n, replace=False).astype(np.uint32)
+        sets.append(np.unique(np.concatenate([own, common])))
+    idxs = [preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+            for s in sets]
+    row = sorted((DeviceSet.from_host(i) for i in idxs), key=set_sort_key)
+    truth = sets[0]
+    for s in sets[1:]:
+        truth = np.intersect1d(truth, s)
+    return row, truth.astype(np.uint32)
+
+
+def _check_forced_overflow(seed, cap):
+    rng = np.random.default_rng(seed)
+    row, truth = _overlapping_device_row(rng)
+    assert len(truth) > cap  # the premise: survivors overflow the buffer
+    EXEC_COUNTERS.reset()
+    out = intersect_device_batch([row, row], capacity=cap, use_pallas=False)
+    for res, stats in out:
+        assert np.array_equal(res, truth), (seed, cap)
+        assert stats["r"] == len(truth)
+    assert EXEC_COUNTERS["rerun_calls"] >= 1
+
+
+@pytest.mark.parametrize("seed,cap", [(0, 1), (1, 2), (2, 7)])
+def test_forced_overflow_seeded(seed, cap):
+    _check_forced_overflow(seed, cap)
+
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX),
+       cap=st.sampled_from([1, 2, 7]))
+def test_forced_overflow_property(seed, cap):
+    _check_forced_overflow(seed, cap)
+
+
+@multi_device
+@pytest.mark.parametrize("seed", [0])
+def test_forced_overflow_sharded_seeded(seed):
+    rng = np.random.default_rng(seed)
+    mesh = make_shard_mesh(N_DEVICES)
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    common = rng.choice(1 << 22, 300, replace=False).astype(np.uint32)
+    sets = [np.unique(np.concatenate(
+        [rng.choice(1 << 22, 3000, replace=False).astype(np.uint32), common]))
+        for _ in range(2)]
+    idxs = [preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+            for s in sets]
+    row = sorted((DeviceSet.from_host(i).shard(mesh) for i in idxs),
+                 key=set_sort_key)
+    truth = np.intersect1d(sets[0], sets[1]).astype(np.uint32)
+    EXEC_COUNTERS.reset()
+    out = intersect_sharded_batch([row, row], mesh, capacity_per_shard=2,
+                                  use_pallas=False)
+    for res, stats in out:
+        assert np.array_equal(res, truth)
+        assert stats["r"] == len(truth)
+    assert EXEC_COUNTERS["sharded_rerun_calls"] >= 1

@@ -89,6 +89,27 @@ RULES = {
         Rule("modes.overlapped.p99_wait_us", "max_ratio", 2.0,
              floor=1000.0),
     ],
+    "BENCH_slo_burn.json": [
+        # open-loop load-harness invariants (absolute — any workload scale):
+        # every completed ticket stays bit-identical to the host oracle,
+        # the overlap pipeline loses no buckets (dispatches == collects),
+        # the wall-clock run leaks no threads and no query errors, burn at
+        # the calibrated low-utilization operating point stays small, and
+        # the overload point actually burns (the harness can tell the two
+        # apart — a burn metric that never moves gates nothing).  Committed
+        # full-size runs show ~0.01 calibrated / ~0.35 overload; the CI
+        # bands (0.10 ceiling / 0.15 floor) leave smoke-size noise room.
+        Rule("identical_to_oracle", "equals", 1),
+        Rule("dispatch_collect_balanced", "equals", 1),
+        Rule("thread_leak", "max_abs", 0),
+        Rule("errors_total", "max_abs", 0),
+        Rule("calibrated_burn_rate", "max_abs", 0.10),
+        Rule("overload_burn_rate", "min_abs", 0.15),
+        # throughput at the overload point is capacity-bound — relative
+        # rule so a same-scale rerun can't silently lose half its serving
+        # rate to a scheduling regression
+        Rule("virtual_runs[rate_x].served_qps", "min_ratio", 0.70),
+    ],
     "BENCH_mesh2d_qps.json": [
         # 2-D topology invariants (absolute — hold at any workload scale):
         # every layout stays bit-identical to the single-device baseline,
