@@ -1,0 +1,257 @@
+"""Boolean-expression serving benchmark: expression-DAG QPS and the
+subexpression cache's contribution on a shared-subtree workload.
+
+The workload is a pool of distinct boolean queries that *share composite
+subtrees in conjunctive context*: a small set of union "bases"
+``o_j = (a_j | b_j)`` combined with varying extra terms as
+``o_j & t`` and ``(o_j & t) - u``.  Sharing must happen under ∩/∪ — the
+canonicalizer pushes differences down (``(a|b) - e`` rewrites to
+``(a-e)|(b-e)``), so a subtree used only as a minuend of ∖ would not
+survive normalization and could never be shared.
+
+Served open-loop (fixed inter-arrival gap, real wall clock) through the
+``AsyncSearchEngine`` background flusher.  The first query touching a
+base pays the device DAG evaluation and stores every canonicalized
+composite subexpression (plus the root itself) in the result cache;
+later *distinct* roots over the same base resolve at submit time by a
+host-side set-algebra merge over cached subtrees — no device work, no
+queue wait.  Reported: served QPS, subexpression-cache hit/store/merge
+counters, queue-wait percentiles, and device-pass counts.  Every ticket
+is checked bit-identical to the ``eval_host`` numpy oracle.
+
+When >= 4 forced host devices are available, a second section replays
+the same expression log through a 2x2 (data x shard) mesh engine with
+the result cache disabled — pure ``expr/mesh2d`` device evaluation —
+and folds its oracle equality into ``identical_to_oracle``.
+
+Run:  PYTHONPATH=src python benchmarks/fig_boolean_qps.py [--queries N]
+      [--docs N] [--out BENCH_boolean_qps.json]
+"""
+from __future__ import annotations
+
+import os
+
+# before the first jax import: forced host devices so the mesh2d section
+# can lay out, and the CPU backend explicitly (with libtpu on the image a
+# concurrently running jax process would otherwise serialize on the TPU
+# lockfile)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engine import EXEC_COUNTERS, pow2_tiers
+from repro.exec.expr import And, Diff, Or, Term, eval_host
+from repro.exec.topology import make_topology
+from repro.serve.search import AsyncSearchEngine, SearchEngine
+
+
+def _pace_until(t_target: float) -> None:
+    """Open-loop pacing that yields the GIL (see fig_adaptive_qps)."""
+    while True:
+        dt = t_target - time.perf_counter()
+        if dt <= 0:
+            return
+        time.sleep(dt)
+
+
+def _percentiles(xs):
+    arr = np.asarray(xs, dtype=np.float64)
+    if not len(arr):
+        return 0.0, 0.0
+    return (float(np.percentile(arr, 50)), float(np.percentile(arr, 99)))
+
+
+def random_postings(n_terms: int, n_docs: int, set_size: int, seed: int):
+    """Uniform random posting lists over a shared doc-id universe.
+
+    With ``set_size**2 / n_docs`` well above zero every pairwise
+    intersection is nonempty in expectation, so unions, intersections
+    and differences over these terms all produce nontrivial results.
+    """
+    rng = np.random.default_rng(seed)
+    return {
+        t: np.unique(rng.choice(n_docs, size=set_size,
+                                replace=False).astype(np.uint32))
+        for t in range(n_terms)
+    }
+
+
+def shared_subtree_log(n_terms: int, n_queries: int, n_bases: int,
+                       seed: int):
+    """Expression log over ``n_bases`` shared union bases.
+
+    Base ``j`` is ``Or(Term(2j), Term(2j+1))``; each query draws a base
+    and an extra term from the remaining vocabulary and emits either
+    ``base & extra`` or ``(base & extra) - cut``.  Distinct (base,
+    extra) pairs give distinct roots that share the base subtree — the
+    shape the subexpression cache is built for.
+    """
+    assert 2 * n_bases < n_terms, "need extra terms beyond the bases"
+    rng = np.random.default_rng(seed)
+    bases = [Or((Term(2 * j), Term(2 * j + 1))) for j in range(n_bases)]
+    extras = list(range(2 * n_bases, n_terms))
+    log = []
+    for i in range(n_queries):
+        base = bases[int(rng.integers(n_bases))]
+        extra = Term(extras[int(rng.integers(len(extras)))])
+        e = And((base, extra))
+        if i % 3 == 2:
+            cut = Term(extras[int(rng.integers(len(extras)))])
+            e = Diff(e, cut)
+        log.append(e)
+    return log
+
+
+def serve_open_loop(eng: AsyncSearchEngine, log, gap_us: float):
+    """One real-time open-loop flusher run; returns (tickets, metrics)."""
+    eng.cache.clear()
+    EXEC_COUNTERS.reset()
+    tickets = []
+    eng.start()
+    t0 = time.perf_counter()
+    for i, q in enumerate(log):
+        _pace_until(t0 + i * gap_us * 1e-6)
+        tickets.append(eng.submit(q))
+    submit_wall_s = time.perf_counter() - t0
+    for t in tickets:
+        t.wait(timeout=60.0)
+    eng.stop()                                      # drains any stragglers
+    wall_s = time.perf_counter() - t0
+    assert all(t.done for t in tickets)
+    queued = [t.wait_us for t in tickets
+              if t.value.stats.get("batch_size") and
+              not t.value.stats.get("cached")]
+    p50, p99 = _percentiles(queued)
+    hits = EXEC_COUNTERS["subexpr_cache_hits"]
+    misses = EXEC_COUNTERS["subexpr_cache_misses"]
+    merges = EXEC_COUNTERS["subexpr_host_merges"]
+    return tickets, {
+        "queries": len(log),
+        "offered_qps": 1e6 / gap_us,
+        "served_qps": len(log) / wall_s,
+        "submit_wall_s": submit_wall_s,
+        "total_wall_s": wall_s,
+        "device_queries": len(queued),
+        "host_merged_queries": merges,
+        "p50_wait_us": p50,
+        "p99_wait_us": p99,
+        "subexpr_cache_hits": hits,
+        "subexpr_cache_misses": misses,
+        "subexpr_cache_stores": EXEC_COUNTERS["subexpr_cache_stores"],
+        "subexpr_host_merges": merges,
+        "subexpr_hit_rate": hits / max(1, hits + misses),
+        "expr_calls": EXEC_COUNTERS["expr_calls"],
+        "expr_rerun_calls": EXEC_COUNTERS["expr_rerun_calls"],
+        "flusher_wakeups": EXEC_COUNTERS["flusher_wakeups"],
+    }
+
+
+def mesh2d_section(postings, log, oracle, seed: int, shard_min_g: int = 4):
+    """Replay the log through a 2x2 mesh with caching off: pure device
+    DAG evaluation, equality-checked against the same oracle."""
+    topo = make_topology(2, 2)
+    eng = SearchEngine(postings, w=256, m=6, seed=seed, topology=topo,
+                       shard_min_g=shard_min_g, result_cache=0)
+    eng.query_batch(log)                            # compile warm-up pass
+    EXEC_COUNTERS.reset()
+    t0 = time.perf_counter()
+    results = eng.query_batch(log)
+    wall_s = time.perf_counter() - t0
+    identical = all(np.array_equal(r.doc_ids, o)
+                    for r, o in zip(results, oracle))
+    if not identical:
+        print("MISMATCH vs oracle on the mesh2d section")
+    mesh_served = sum(r.algorithm == "expr/mesh2d" for r in results)
+    return {
+        "layout": topo.describe(),
+        "queries": len(log),
+        "qps": len(log) / wall_s,
+        "wall_s": wall_s,
+        "identical": int(identical),
+        "expr_mesh2d_queries": int(mesh_served),
+        "expr_calls": EXEC_COUNTERS["expr_calls"],
+        "expr_rerun_calls": EXEC_COUNTERS["expr_rerun_calls"],
+    }
+
+
+def run(n_queries: int = 256, n_docs: int = 20000, n_terms: int = 24,
+        set_size: int = 3000, n_bases: int = 6, flush_tier: int = 8,
+        deadline_us: float = 2000.0, gap_us: float = 400.0,
+        seed: int = 23):
+    postings = random_postings(n_terms, n_docs, set_size, seed)
+    log = shared_subtree_log(n_terms, n_queries, n_bases, seed + 1)
+    oracle = [eval_host(e, lambda t: postings[t]) for e in log]
+
+    eng = AsyncSearchEngine(postings, w=256, m=6, seed=seed,
+                            deadline_us=deadline_us, flush_tier=flush_tier,
+                            result_cache=1024)
+    # index-build-time warming: every expression signature in the log at
+    # every pow2 batch tier a partial flush can produce — measured waits
+    # must reflect the policy, not trace+compile transients
+    eng.warm(log, top_k=len(log), b_tiers=pow2_tiers(flush_tier))
+    # priming pass absorbs remaining one-time lazy-init transients
+    serve_open_loop(eng, log, gap_us)
+
+    tickets, metrics = serve_open_loop(eng, log, gap_us)
+    identical = all(np.array_equal(t.value.doc_ids, o)
+                    for t, o in zip(tickets, oracle))
+    if not identical:
+        print("MISMATCH vs eval_host oracle on the flusher run")
+
+    avail = len(jax.devices())
+    mesh = None
+    if avail >= 4:
+        mesh = mesh2d_section(postings, log, oracle, seed)
+        identical = identical and bool(mesh["identical"])
+
+    distinct_roots = len({repr(e) for e in log})
+    out = {
+        "devices": avail,
+        "queries": n_queries,
+        "n_docs": n_docs,
+        "n_terms": n_terms,
+        "set_size": set_size,
+        "shared_bases": n_bases,
+        "distinct_roots": distinct_roots,
+        "flush_tier": flush_tier,
+        "deadline_us": deadline_us,
+        "arrival_gap_us": gap_us,
+        "identical_to_oracle": int(identical),
+        "mesh2d": mesh,
+    }
+    out.update(metrics)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--terms", type=int, default=24)
+    ap.add_argument("--set-size", type=int, default=3000)
+    ap.add_argument("--bases", type=int, default=6,
+                    help="shared union bases; fewer bases -> more subtree "
+                         "reuse -> higher subexpression-cache hit rate")
+    ap.add_argument("--gap-us", type=float, default=400.0)
+    ap.add_argument("--out", type=str,
+                    default=str(pathlib.Path(__file__).resolve().parent.parent
+                                / "BENCH_boolean_qps.json"))
+    args = ap.parse_args()
+    res = run(args.queries, args.docs, args.terms, args.set_size,
+              n_bases=args.bases, gap_us=args.gap_us)
+    print(json.dumps(res, indent=2))
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,14 @@ the replicas via the topology's load balancer.  On CPU, export
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first to get
 forced host devices to lay out.
 
+``--expr`` upgrades part of the log to boolean ∪/∩/∖ expressions in the
+``parse`` surface syntax (``"(a|b)&c-d"``) — engines accept term lists,
+``Expr`` DAGs, and strings interchangeably.  Expression queries ride the
+same plan → bucket → execute → scatter pipeline (shape-bucketed by
+expression structure) and share composite subtrees through the
+subexpression cache; with ``--async-front`` the demo reports the
+cache's hit/merge counters.
+
 Run:  PYTHONPATH=src python examples/serve_search.py [--docs 20000] [--queries 200]
 """
 import argparse
@@ -27,6 +35,24 @@ import numpy as np
 
 from repro.data.pipeline import inverted_index, zipf_corpus
 from repro.serve.search import AsyncSearchEngine, SearchEngine, zipf_query_log
+
+
+def to_expr_log(queries):
+    """Upgrade every third multi-term query to a boolean expression.
+
+    ``[a, b, c]`` becomes ``"(a|b)&c"`` (and, with a 4th term, ``"-d"``) —
+    distinct roots share union bases, the shape the subexpression cache
+    serves without device work."""
+    out = []
+    for i, q in enumerate(queries):
+        if i % 3 == 0 and len(q) >= 3:
+            e = f"({q[0]}|{q[1]})&{q[2]}"
+            if len(q) >= 4:
+                e += f"-{q[3]}"
+            out.append(e)
+        else:
+            out.append(q)
+    return out
 
 
 def serve_async(postings, queries, flusher: bool = False, topology=None,
@@ -65,6 +91,10 @@ def serve_async(postings, queries, flusher: bool = False, topology=None,
           f"flusher wakeups {EXEC_COUNTERS['flusher_wakeups']})")
     print(f"queue wait p50={np.percentile(waits, 50):.0f}us "
           f"p99={np.percentile(waits, 99):.0f}us")
+    if EXEC_COUNTERS["expr_calls"] or EXEC_COUNTERS["subexpr_cache_hits"]:
+        print(f"expression passes {EXEC_COUNTERS['expr_calls']}, "
+              f"subexpr cache hits {EXEC_COUNTERS['subexpr_cache_hits']}, "
+              f"host merges {EXEC_COUNTERS['subexpr_host_merges']}")
     if topology is not None:
         print(f"mesh2d passes {EXEC_COUNTERS['mesh2d_calls']} "
               f"(row dispatches {EXEC_COUNTERS['mesh2d_row_dispatches']}), "
@@ -91,6 +121,9 @@ def main():
     ap.add_argument("--max-inflight", type=int, default=8,
                     help="with --async-front: bound on concurrently "
                          "dispatched buckets (1 = synchronous collect)")
+    ap.add_argument("--expr", action="store_true",
+                    help="upgrade part of the log to boolean ∪/∩/∖ "
+                         "expressions (parse syntax, e.g. '(a|b)&c-d')")
     args = ap.parse_args()
 
     topology = None
@@ -115,6 +148,8 @@ def main():
         queries = repeated_query_log(sorted(kept), args.queries,
                                      n_distinct=max(8, args.queries // 4),
                                      seed=2)
+        if args.expr:
+            queries = to_expr_log(queries)
         serve_async(kept, queries, flusher=args.flusher, topology=topology,
                     max_inflight=args.max_inflight)
         return
@@ -123,6 +158,8 @@ def main():
     print(f"index built: {len(engine.index)} terms in {engine.build_s:.2f}s")
 
     queries = zipf_query_log(sorted(engine.index), args.queries, seed=2)
+    if args.expr:
+        queries = to_expr_log(queries)
     t0 = time.perf_counter()
     results = engine.query_batch(queries)
     wall = time.perf_counter() - t0

@@ -89,7 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..kernels import ops
+from ..kernels import ops, setops
 from .partition import PrefixIndex
 
 __all__ = [
@@ -109,6 +109,15 @@ __all__ = [
     "intersect_mesh2d_batch",
     "intersect_sharded",
     "intersect_sharded_batch",
+    "dispatch_expr_batch",
+    "dispatch_expr_sharded_batch",
+    "dispatch_expr_mesh2d_batch",
+    "intersect_expr_batch",
+    "intersect_expr_sharded_batch",
+    "intersect_expr_mesh2d_batch",
+    "expr_total_width",
+    "default_expr_capacity",
+    "default_expr_capacity_per_shard",
     "make_mesh2d",
     "make_shard_mesh",
     "bucket_hlo_text",
@@ -196,6 +205,18 @@ class ExecCounters(dict):
       workload drifted down).  ``adaptive_overflow_saved`` — executions
       where the learned tier absorbed survivors that would have overflowed
       the static G/4 rule (i.e. re-runs the model eliminated).
+    - ``expr_calls`` / ``expr_traces`` / ``expr_rerun_calls`` — the same
+      call/compile/overflow-re-run triple for the boolean **expression**
+      pipeline (``_eval_expr_batch`` and its sharded / 2-D twins — all
+      three report under one family, like the flat pipeline's per-path
+      split but coarser, since expression traffic is one workload).
+    - ``subexpr_cache_hits`` / ``subexpr_cache_misses`` — lookups of
+      canonicalized *sub*expression entries in the result cache
+      (``exec/cache.py::ResultCache.get_sub``); ``subexpr_cache_stores``
+      — sub-buffers stored after expression bucket execution;
+      ``subexpr_host_merges`` — expression queries answered entirely
+      host-side by merging cached subexpression values (zero device
+      work).
 
     Counters are process-global and unlocked: concurrent submitter threads
     can in principle lose an increment.  Exact-count assertions belong in
@@ -217,6 +238,9 @@ class ExecCounters(dict):
         "flusher_wakeups",
         "adaptive_promotions", "adaptive_demotions",
         "adaptive_overflow_saved",
+        "expr_calls", "expr_traces", "expr_rerun_calls",
+        "subexpr_cache_hits", "subexpr_cache_misses",
+        "subexpr_cache_stores", "subexpr_host_merges",
     )
 
     def __init__(self):
@@ -797,6 +821,38 @@ def warm_from_plans(plans, get_set, top_k: int = 8,
         capacity = getattr(sig, "capacity_tier", None)
         terms = rep_terms[sig]
         mesh_routed = shards > 1 or (topology is not None and replicas > 1)
+        eshape = getattr(sig, "eshape", None)
+        if eshape is not None:
+            # expression signature: warm the expression evaluator(s).  The
+            # row is the plan's leaf terms in TRAVERSAL order (never
+            # sorted); mesh-routed shapes warm the sharded / 2-D twins.
+            for b in b_tiers:
+                if shards > 1 or (topology is not None and replicas > 1):
+                    cap = (None if capacity is None else
+                           default_expr_capacity_per_shard(
+                               sig.ts, sig.gmaxes, shards, capacity=capacity))
+                    resolve = get_sharded_set or get_set
+                    row = [resolve(t) for t in terms]
+                    if topology is not None:
+                        intersect_expr_mesh2d_batch(
+                            [list(row)] * b, eshape, topology,
+                            capacity_per_shard=cap)
+                    else:
+                        intersect_expr_sharded_batch(
+                            [list(row)] * b, eshape, mesh, axis=axis,
+                            capacity_per_shard=cap)
+                elif (topology is not None and topology.replicas > 1
+                      and get_replica_set is not None):
+                    for r in range(topology.replicas):
+                        row = [get_replica_set(r, t) for t in terms]
+                        intersect_expr_batch([list(row)] * b, eshape,
+                                             capacity=capacity)
+                else:
+                    row = [get_set(t) for t in terms]
+                    intersect_expr_batch([list(row)] * b, eshape,
+                                         capacity=capacity)
+                EXEC_COUNTERS["warm_executions"] += 1
+            continue
         if mesh_routed:
             if capacity is not None:
                 capacity = default_capacity_per_shard(
@@ -834,7 +890,8 @@ def clear_exec_jit_cache() -> None:
     their ``trace_counter``), so they are covered.  No-op if the jax
     version lacks ``clear_cache``.
     """
-    for fn in (_intersect_k_batch, _intersect_k_sharded_batch):
+    for fn in (_intersect_k_batch, _intersect_k_sharded_batch,
+               _eval_expr_batch, _eval_expr_sharded_batch):
         clear = getattr(fn, "clear_cache", None)
         if clear is not None:
             clear()
@@ -1296,6 +1353,492 @@ def intersect_mesh2d_batch(
         queries, topology, capacity_per_shard=capacity_per_shard,
         use_pallas=use_pallas,
     ).collect()
+
+
+# --------------------------------------------------------------------------
+# boolean expression evaluation: ∪ / ∩ / ∖ DAGs over dense value buffers
+# --------------------------------------------------------------------------
+#
+# Non-flat expressions (anything but a pure conjunction of terms — those
+# keep the bitmap-filter + group-match pipeline above, byte-identical)
+# evaluate on **dense value buffers**: each leaf's (2^t, gmax) z-prefix
+# group layout flattens to one sorted uint32 row per query
+# (kernels.setops.densify — the int32 -1 padding bitcasts to the
+# 0xFFFFFFFF sentinel, which sorts last), and every DAG node is a
+# sort-merge pass over its children's buffers, bottom-up, entirely
+# on-device inside ONE jit per bucket.  There is no bitmap/group phase
+# for mixed nodes because intermediates (a∪b, …) have no precomputed
+# filter images — the dense representation is the paper's structures'
+# "value view", and Bille–Pagh–Pagh-style evaluation over it keeps every
+# node a linear merge.
+#
+# The overflow contract is the flat pipeline's, verbatim: every
+# *composite* node writes into a static buffer of width
+# ``min(capacity, natural)`` (natural = what its children could supply);
+# a per-query flag records any node whose true count exceeded its
+# buffer, and flagged queries are re-run ONCE at ``capacity = total leaf
+# width``, where no node can overflow — results are bit-identical to the
+# numpy oracle in every case.  Sharding: all leaves share the
+# permutation g, so ∪/∩/∖ distribute over z-ranges — each shard
+# evaluates the whole DAG on its local slices with NO communication
+# (the expression twin of Theorem 3.7's alignment), overflow stays per
+# (query, shard), and per-shard result segments concatenate.
+#
+# Subexpression sharing: the evaluator also emits the value buffer of
+# every composite proper subexpression (postorder), which the serving
+# layer stores in the result cache keyed on the canonical subexpression
+# — a later query containing the same subtree resolves host-side.
+
+
+def _expr_signature(row: Sequence[DeviceSet]
+                    ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """Leaf signature in TRAVERSAL order — expression rows are ordered by
+    the expression's leaf walk (``exec.expr.leaf_terms``), never re-sorted
+    (position encodes which leaf of the DAG a set feeds)."""
+    return tuple(s.t for s in row), tuple(s.gmax for s in row)
+
+
+def expr_total_width(ts: Tuple[int, ...], gmaxes: Tuple[int, ...]) -> int:
+    """Total dense width of an expression's leaves — the capacity at which
+    no node can overflow (every result value originates from some leaf)."""
+    return sum((1 << t) * g for t, g in zip(ts, gmaxes))
+
+
+def default_expr_capacity(ts: Tuple[int, ...],
+                          gmaxes: Tuple[int, ...]) -> int:
+    """Survivor-buffer tier for expression nodes: total/4 with a floor,
+    rounded to the power-of-two lattice — the expression analogue of
+    :func:`default_capacity` (union nodes routinely carry more values
+    than an intersection's survivors, so the prior is deliberately
+    generous; the adaptive ``CapacityModel`` refines it per shape from
+    observed node counts)."""
+    total = expr_total_width(ts, gmaxes)
+    tier = 1 << max(0, (total - 1).bit_length())
+    return max(64, tier // 4)
+
+
+def default_expr_capacity_per_shard(ts: Tuple[int, ...],
+                                    gmaxes: Tuple[int, ...],
+                                    n_shards: int,
+                                    capacity: Optional[int] = None) -> int:
+    """Per-shard node-buffer tier for the sharded expression pipeline —
+    the expression analogue of :func:`default_capacity_per_shard`."""
+    local_total = expr_total_width(ts, gmaxes) // n_shards
+    whole = (default_expr_capacity(ts, gmaxes) if capacity is None
+             else int(capacity))
+    return min(local_total, max(16, whole // n_shards))
+
+
+def _count_expr_subs(eshape) -> int:
+    """Number of composite proper subexpressions (postorder emission count
+    of `_eval_expr_block`) — static in the shape, so shard_map out_specs
+    can size the sub-buffer pytree."""
+    if eshape == "T":
+        return 0
+    n = 0
+    for child in eshape[1:]:
+        n += _count_expr_subs(child)
+        if child != "T":
+            n += 1
+    return n
+
+
+def _eval_expr_block(vals, eshape, capacity: int):
+    """Evaluate one expression DAG over stacked leaf arrays, bottom-up.
+
+    ``vals[i]``: (B, 2^t_i[, /S], gmax_i) int32 leaf arrays in traversal
+    order.  Returns ``(root, r, max_count, overflow, subs)``: the root's
+    sorted sentinel-padded (B, W_root) uint32 buffer, its true count, the
+    max true count over all composite nodes (the adaptive model's
+    survivor statistic), the per-query any-node-truncated flag, and the
+    postorder tuple of composite proper-subexpression buffers.
+    """
+    dense = [setops.densify(v) for v in vals]
+    next_leaf = [0]
+    subs: List[jnp.ndarray] = []
+    zero = jnp.zeros(dense[0].shape[0], dtype=jnp.int32)
+    state = {"overflow": zero > 0, "max_count": zero}
+
+    def node(shape, root: bool):
+        if shape == "T":
+            buf = dense[next_leaf[0]]
+            next_leaf[0] += 1
+            return buf
+        op = shape[0]
+        if op == "-":
+            left = node(shape[1], False)
+            right = node(shape[2], False)
+            width = min(capacity, left.shape[1])
+            out, count = setops.diff_pass(left, right, width)
+        elif op == "|":
+            bufs = [node(s, False) for s in shape[1:]]
+            width = min(capacity, sum(b.shape[1] for b in bufs))
+            out, count = setops.union_pass(bufs, width)
+        else:
+            bufs = [node(s, False) for s in shape[1:]]
+            width = min(capacity, bufs[0].shape[1])
+            out, count = setops.intersect_pass(bufs, width)
+        state["overflow"] = state["overflow"] | (count > out.shape[1])
+        state["max_count"] = jnp.maximum(state["max_count"], count)
+        if not root:
+            subs.append(out)
+        else:
+            state["r"] = count
+        return out
+
+    root = node(eshape, True)
+    return (root, state["r"], state["max_count"], state["overflow"],
+            tuple(subs))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eshape", "ts", "gmaxes", "capacity", "trace_counter"),
+)
+def _eval_expr_batch(
+    vals: Tuple[Tuple[jnp.ndarray, ...], ...],
+    eshape,
+    ts: Tuple[int, ...],
+    gmaxes: Tuple[int, ...],
+    capacity: int,
+    trace_counter: str = "expr_traces",
+):
+    """One jit execution for a whole same-shape bucket of B expression
+    queries — the expression twin of :func:`_intersect_k_batch` (same
+    in-jit stacking, same static-shape discipline; ``eshape`` + ``ts`` +
+    ``gmaxes`` + ``capacity`` fully determine every buffer width)."""
+    EXEC_COUNTERS[trace_counter] += 1  # python side effect: trace-time only
+    vals = tuple(jnp.stack(v) for v in vals)
+    return _eval_expr_block(vals, eshape, capacity)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "eshape", "ts", "gmaxes",
+                     "capacity_per_shard", "trace_counter"),
+)
+def _eval_expr_sharded_batch(
+    vals: Tuple[Tuple[jnp.ndarray, ...], ...],
+    mesh: Mesh,
+    axis: str,
+    eshape,
+    ts: Tuple[int, ...],
+    gmaxes: Tuple[int, ...],
+    capacity_per_shard: int,
+    trace_counter: str = "expr_traces",
+):
+    """The z-sharded expression evaluator: every shard runs the whole DAG
+    on its local z-slices (``g`` aligns all leaves, so ∪/∩/∖ distribute
+    over z-ranges with no communication), per-shard node buffers
+    concatenate along the width axis, and the per-(query, shard) flags
+    drive the host-side enlarged re-run exactly as in
+    :func:`_intersect_k_sharded_batch`."""
+    EXEC_COUNTERS[trace_counter] += 1  # python side effect: trace-time only
+    vals = tuple(jnp.stack(v) for v in vals)
+    n_subs = _count_expr_subs(eshape)
+
+    def local_fn(*lvals):
+        root, r, max_count, overflow, subs = _eval_expr_block(
+            lvals, eshape, capacity_per_shard)
+        return root, r[None], max_count[None], overflow[None], subs
+
+    from jax.experimental.shard_map import shard_map
+
+    in_specs = tuple([P(None, axis)] * len(ts))
+    out_specs = (P(None, axis), P(axis), P(axis), P(axis),
+                 tuple([P(None, axis)] * n_subs))
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    return fn(*vals)
+
+
+_EXPR_SENTINEL = np.uint32(0xFFFFFFFF)
+
+
+def _compact_u32(row: np.ndarray) -> np.ndarray:
+    """Sentinel-padded uint32 buffer (any per-shard segment order) ->
+    sorted value array, the serving result/value format."""
+    flat = row.ravel()
+    return np.sort(flat[flat != _EXPR_SENTINEL])
+
+
+def dispatch_expr_batch(
+    queries: Sequence[Sequence[DeviceSet]],
+    eshape,
+    capacity: Optional[int] = None,
+    sub_keys: Optional[Sequence[Sequence]] = None,
+) -> PendingBatch:
+    """Issue the first pass of a same-shape expression bucket.
+
+    ``queries[i]`` is query i's leaf DeviceSets in the expression's
+    traversal order (NOT (t, n)-sorted — position encodes DAG wiring);
+    all queries must share ``eshape`` and the leaf signature.
+    ``sub_keys[i]`` (optional) are query i's canonical subexpression
+    cache keys, postorder — when given, collected stats carry
+    ``"subexprs": [(key, sorted values), …]`` for the serving layer to
+    store.  Counters: ``expr_calls`` per pass, ``expr_rerun_calls`` per
+    overflow pass, ``expr_traces`` per compile.
+    """
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    ordered = [list(q) for q in queries]
+    ts, gmaxes = _expr_signature(ordered[0])
+    for q in ordered[1:]:
+        assert _expr_signature(q) == (ts, gmaxes), (
+            "bucket mixes expression leaf signatures")
+    total = expr_total_width(ts, gmaxes)
+
+    def issue(active: List[int], cap: int):
+        b_tier = 1 << (len(active) - 1).bit_length()
+        rows = active + [active[0]] * (b_tier - len(active))
+        vals = tuple(
+            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
+        )
+        EXEC_COUNTERS["expr_calls"] += 1
+        return _eval_expr_batch(vals, eshape, ts, gmaxes, cap)
+
+    first_active = list(range(len(ordered)))
+    first_cap = min(capacity or default_expr_capacity(ts, gmaxes), total)
+    first_handles = issue(first_active, first_cap)
+
+    def collect() -> List[Tuple[np.ndarray, Dict]]:
+        results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+        active, cap, handles = first_active, first_cap, first_handles
+        while True:
+            root_h, r_h, maxc_h, over_h, subs_h = jax.device_get(handles)
+            rerun = []
+            for row, qi in enumerate(active):
+                if over_h[row]:
+                    rerun.append(qi)
+                    continue
+                stats = {
+                    "expr_width": total,
+                    "tuples_survived": int(maxc_h[row]),
+                    "capacity": cap,
+                    "r": int(r_h[row]),
+                    "batch_size": len(active),
+                }
+                if sub_keys is not None:
+                    stats["subexprs"] = [
+                        (key, _compact_u32(sub[row]))
+                        for key, sub in zip(sub_keys[qi], subs_h)
+                    ]
+                results[qi] = (_compact_u32(root_h[row]), stats)
+            if not rerun:
+                return results  # type: ignore[return-value]
+            active = rerun
+            cap = total  # rare path: ONE re-run where no node can overflow
+            EXEC_COUNTERS["expr_rerun_calls"] += 1
+            handles = issue(active, cap)
+
+    return PendingBatch(n_queries=len(ordered), handles=first_handles,
+                        _collect=collect)
+
+
+def dispatch_expr_sharded_batch(
+    queries: Sequence[Sequence[DeviceSet]],
+    eshape,
+    mesh: Mesh,
+    axis: str = SHARD_AXIS,
+    capacity_per_shard: Optional[int] = None,
+    sub_keys: Optional[Sequence[Sequence]] = None,
+) -> PendingBatch:
+    """Issue the first z-sharded pass of an expression bucket — the
+    expression twin of :func:`dispatch_sharded_batch` (same per-(query,
+    shard) overflow + single enlarged re-run at the local total width).
+    Pass z-sharded leaf mirrors; every leaf must split over the mesh."""
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    n_shards = mesh.shape[axis]
+    ordered = [list(q) for q in queries]
+    ts, gmaxes = _expr_signature(ordered[0])
+    for q in ordered[1:]:
+        assert _expr_signature(q) == (ts, gmaxes), (
+            "bucket mixes expression leaf signatures")
+    assert all((1 << t) % n_shards == 0 for t in ts), (
+        f"every leaf must split over {n_shards} shards")
+    total = expr_total_width(ts, gmaxes)
+    local_total = total // n_shards
+
+    def issue(active: List[int], cap: int):
+        b_tier = 1 << (len(active) - 1).bit_length()
+        rows = active + [active[0]] * (b_tier - len(active))
+        vals = tuple(
+            tuple(ordered[i][j].vals for i in rows) for j in range(len(ts))
+        )
+        EXEC_COUNTERS["expr_calls"] += 1
+        return _eval_expr_sharded_batch(vals, mesh, axis, eshape, ts,
+                                        gmaxes, cap)
+
+    first_active = list(range(len(ordered)))
+    first_cap = min(
+        capacity_per_shard
+        or default_expr_capacity_per_shard(ts, gmaxes, n_shards),
+        local_total,
+    )
+    first_handles = issue(first_active, first_cap)
+
+    def collect() -> List[Tuple[np.ndarray, Dict]]:
+        results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+        active, cap, handles = first_active, first_cap, first_handles
+        while True:
+            root_h, r_h, maxc_h, over_h, subs_h = jax.device_get(handles)
+            rerun = []
+            for row, qi in enumerate(active):
+                if over_h[:, row].any():
+                    rerun.append(qi)
+                    continue
+                stats = {
+                    "expr_width": total,
+                    "tuples_survived": int(maxc_h[:, row].sum()),
+                    "max_shard_survivors": int(maxc_h[:, row].max()),
+                    "capacity_per_shard": cap,
+                    "n_shards": n_shards,
+                    "r": int(r_h[:, row].sum()),
+                    "batch_size": len(active),
+                }
+                if sub_keys is not None:
+                    stats["subexprs"] = [
+                        (key, _compact_u32(sub[row]))
+                        for key, sub in zip(sub_keys[qi], subs_h)
+                    ]
+                results[qi] = (_compact_u32(root_h[row]), stats)
+            if not rerun:
+                return results  # type: ignore[return-value]
+            active = rerun
+            cap = local_total  # one re-run at local total: no overflow
+            EXEC_COUNTERS["expr_rerun_calls"] += 1
+            handles = issue(active, cap)
+
+    return PendingBatch(n_queries=len(ordered), handles=first_handles,
+                        _collect=collect)
+
+
+def dispatch_expr_mesh2d_batch(
+    queries: Sequence[Sequence[ReplicatedDeviceSet]],
+    eshape,
+    topology,
+    capacity_per_shard: Optional[int] = None,
+    sub_keys: Optional[Sequence[Sequence]] = None,
+) -> PendingBatch:
+    """Issue the first 2-D (data x shard) pass of an expression bucket —
+    the expression twin of :func:`dispatch_mesh2d_batch`: the batch axis
+    splits over host-driven replica rows, each row runs the 1-D sharded
+    (or plain) expression evaluator on its slice, one collection point."""
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    n_replicas = topology.replicas
+    n_shards = topology.shards
+    assert n_replicas & (n_replicas - 1) == 0, (
+        "data axis must be a power of two (batch tiers are pow2)")
+    ordered = [list(q) for q in queries]
+    ts, gmaxes = _expr_signature(ordered[0])
+    for q in ordered[1:]:
+        assert _expr_signature(q) == (ts, gmaxes), (
+            "bucket mixes expression leaf signatures")
+    assert all((1 << t) % n_shards == 0 for t in ts), (
+        f"every leaf must split over {n_shards} shards")
+    total = expr_total_width(ts, gmaxes)
+    local_total = total // n_shards
+
+    def issue(active: List[int], cap: int):
+        b_tier = max(n_replicas, 1 << (len(active) - 1).bit_length())
+        rows = active + [active[0]] * (b_tier - len(active))
+        slice_len = b_tier // n_replicas
+        EXEC_COUNTERS["expr_calls"] += 1
+        handles = {}
+        for rr in range(n_replicas):
+            if rr * slice_len >= len(active):
+                continue  # slice is pure padding: nothing real to compute
+            chunk = rows[rr * slice_len:(rr + 1) * slice_len]
+            vals = tuple(
+                tuple(ordered[i][j].row(rr).vals for i in chunk)
+                for j in range(len(ts))
+            )
+            if n_shards > 1:
+                out = _eval_expr_sharded_batch(
+                    vals, topology.row_mesh(rr), topology.shard_axis,
+                    eshape, ts, gmaxes, cap)
+            else:
+                root, r, maxc, over, subs = _eval_expr_batch(
+                    vals, eshape, ts, gmaxes, cap)
+                out = (root, r[None], maxc[None], over[None], subs)
+            handles[rr] = out
+        return handles, slice_len
+
+    first_active = list(range(len(ordered)))
+    first_cap = min(
+        capacity_per_shard
+        or default_expr_capacity_per_shard(ts, gmaxes, n_shards),
+        local_total,
+    )
+    first_handles, first_slice_len = issue(first_active, first_cap)
+
+    def collect() -> List[Tuple[np.ndarray, Dict]]:
+        results: List[Optional[Tuple[np.ndarray, Dict]]] = [None] * len(ordered)
+        active, cap = first_active, first_cap
+        handles, slice_len = first_handles, first_slice_len
+        while True:
+            fetched = jax.device_get(handles)
+            rerun = []
+            for rr, (root_h, r_h, maxc_h, over_h, subs_h) in fetched.items():
+                chunk_start = rr * slice_len
+                for local_row in range(slice_len):
+                    pos = chunk_start + local_row
+                    if pos >= len(active):
+                        continue  # padding rows repeat query active[0]
+                    qi = active[pos]
+                    if over_h[:, local_row].any():
+                        rerun.append(qi)
+                        continue
+                    stats = {
+                        "expr_width": total,
+                        "tuples_survived": int(maxc_h[:, local_row].sum()),
+                        "max_shard_survivors": int(maxc_h[:, local_row].max()),
+                        "capacity_per_shard": cap,
+                        "n_shards": n_shards,
+                        "n_replicas": n_replicas,
+                        "replica": rr,
+                        "r": int(r_h[:, local_row].sum()),
+                        "batch_size": len(active),
+                    }
+                    if sub_keys is not None:
+                        stats["subexprs"] = [
+                            (key, _compact_u32(sub[local_row]))
+                            for key, sub in zip(sub_keys[qi], subs_h)
+                        ]
+                    results[qi] = (_compact_u32(root_h[local_row]), stats)
+            if not rerun:
+                return results  # type: ignore[return-value]
+            active = rerun
+            cap = local_total  # one re-run at local total: no overflow
+            EXEC_COUNTERS["expr_rerun_calls"] += 1
+            handles, slice_len = issue(active, cap)
+
+    return PendingBatch(n_queries=len(ordered), handles=first_handles,
+                        _collect=collect)
+
+
+def intersect_expr_batch(queries, eshape, capacity=None, sub_keys=None):
+    """Synchronous expression bucket execution (dispatch + collect)."""
+    return dispatch_expr_batch(
+        queries, eshape, capacity=capacity, sub_keys=sub_keys).collect()
+
+
+def intersect_expr_sharded_batch(queries, eshape, mesh, axis=SHARD_AXIS,
+                                 capacity_per_shard=None, sub_keys=None):
+    """Synchronous z-sharded expression bucket execution."""
+    return dispatch_expr_sharded_batch(
+        queries, eshape, mesh, axis=axis,
+        capacity_per_shard=capacity_per_shard, sub_keys=sub_keys).collect()
+
+
+def intersect_expr_mesh2d_batch(queries, eshape, topology,
+                                capacity_per_shard=None, sub_keys=None):
+    """Synchronous 2-D expression bucket execution."""
+    return dispatch_expr_mesh2d_batch(
+        queries, eshape, topology, capacity_per_shard=capacity_per_shard,
+        sub_keys=sub_keys).collect()
 
 
 class BatchedEngine:

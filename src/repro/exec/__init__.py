@@ -16,7 +16,19 @@ flush budgets from observed arrival rates; :mod:`topology` owns the 2-D
 ``(data, shard)`` device mesh — replica placement, the per-replica load
 balancer, and the layout the planner's ``(shards, replicas)`` routing
 targets.
+
+:mod:`expr` generalizes queries from flat conjunctions to canonicalized
+boolean expression DAGs over ∩/∪/∖ — node types, the normalizer, the
+``parse`` surface syntax, and the numpy oracle the device DAG evaluator
+must match bit-for-bit.  Expression plans ride the same
+plan → bucket → execute → scatter pipeline (``ShapeSig.eshape`` keys
+their executables) and the result cache additionally remembers
+canonicalized *sub*expressions so shared subtrees skip the device.
 """
+from .expr import (
+    EMPTY, And, Diff, Expr, Or, Term, canonicalize, eval_host, expr_key,
+    expr_shape, flat_terms, leaf_terms, parse, subexpr_keys,
+)
 from .plan import QueryPlan, ShapeSig, plan_query
 from .adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
 from .batch import (
@@ -31,6 +43,20 @@ from .cache import ResultCache
 from .topology import ReplicaBalancer, Topology, make_topology
 
 __all__ = [
+    "EMPTY",
+    "And",
+    "Diff",
+    "Expr",
+    "Or",
+    "Term",
+    "canonicalize",
+    "eval_host",
+    "expr_key",
+    "expr_shape",
+    "flat_terms",
+    "leaf_terms",
+    "parse",
+    "subexpr_keys",
     "QueryPlan",
     "ShapeSig",
     "plan_query",

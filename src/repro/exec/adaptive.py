@@ -51,22 +51,29 @@ import time
 from collections import deque
 from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
-from ..core.engine import EXEC_COUNTERS, default_capacity
+from ..core.engine import (
+    EXEC_COUNTERS, default_capacity, default_expr_capacity, expr_total_width,
+)
 
 __all__ = ["adaptive_key", "CapacityModel", "AdaptiveDeadline"]
 
 
 def adaptive_key_parts(k: int, ts: Tuple[int, ...],
                        gmaxes: Tuple[int, ...], shards: int,
-                       replicas: int = 1) -> Tuple:
+                       replicas: int = 1, eshape: Optional[Tuple] = None
+                       ) -> Tuple:
     """THE adaptive learning key, from raw signature parts.  Single source
     of truth: the planner builds the key from parts before a ``ShapeSig``
     exists, the model builds it from the executed sig — both MUST agree or
     learned tiers are consulted under a key nothing ever writes.
     ``replicas`` (the 2-D topology's data-parallel width) is part of the
     key: mesh-routed and single-device executions of the same shapes are
-    different executables, so their survivor histories must not mix."""
-    return (k, ts, gmaxes, shards, replicas)
+    different executables, so their survivor histories must not mix.
+    ``eshape`` (the leaf-erased expression shape; ``None`` for flat
+    conjunctions) is part of the key for the same reason — ``(a∪b)∩c``
+    and ``(a∩b)∩c`` over the same leaves have very different survivor
+    distributions, and each expression shape is its own executable."""
+    return (k, ts, gmaxes, shards, replicas, eshape)
 
 
 def adaptive_key(sig) -> Tuple:
@@ -75,7 +82,8 @@ def adaptive_key(sig) -> Tuple:
     with ``k`` / ``ts`` / ``gmaxes`` / ``shards`` (i.e. ``ShapeSig``)."""
     return adaptive_key_parts(sig.k, sig.ts, sig.gmaxes,
                               getattr(sig, "shards", 1),
-                              replicas=getattr(sig, "replicas", 1))
+                              replicas=getattr(sig, "replicas", 1),
+                              eshape=getattr(sig, "eshape", None))
 
 
 def _pow2_ceil(x: int) -> int:
@@ -199,8 +207,14 @@ class CapacityModel:
         released.
         """
         key = adaptive_key(sig)
-        static_cap = default_capacity(sig.ts)
-        g = 1 << sig.ts[-1]
+        if getattr(sig, "eshape", None) is not None:
+            # expression buckets: the static prior and the hard ceiling are
+            # the DAG's dense widths, not the largest leaf's group count
+            static_cap = default_expr_capacity(sig.ts, sig.gmaxes)
+            g = expr_total_width(sig.ts, sig.gmaxes)
+        else:
+            static_cap = default_capacity(sig.ts)
+            g = 1 << sig.ts[-1]
         now = self.clock()
         changes: List[Tuple[Hashable, int, int]] = []
         with self._lock:

@@ -51,9 +51,12 @@ import numpy as np
 
 from ..core.engine import (
     EXEC_COUNTERS, SHARD_AXIS, DeviceSet, PendingBatch,
-    default_capacity_per_shard, dispatch_device_batch, dispatch_mesh2d_batch,
-    dispatch_sharded_batch,
+    default_capacity_per_shard, default_expr_capacity_per_shard,
+    dispatch_device_batch, dispatch_expr_batch, dispatch_expr_mesh2d_batch,
+    dispatch_expr_sharded_batch, dispatch_mesh2d_batch,
+    dispatch_sharded_batch, expr_total_width,
 )
+from .expr import subexpr_keys
 from .plan import QueryPlan, ShapeSig, plan_query
 
 __all__ = [
@@ -233,6 +236,66 @@ def dispatch_bucket(
     t0 = time.perf_counter()
     replica: Optional[int] = None
     weight = 0.0
+    eshape = getattr(sig, "eshape", None)
+    if eshape is not None:
+        # expression DAG bucket: same routing tree, expression executables.
+        # Rows resolve in the plan's canonical traversal order (plan.terms
+        # IS that order — never re-sorted), and each query ships its
+        # canonical subexpression keys so collect can hand intermediate
+        # node results to the subexpression cache.
+        sub_keys = {qi: subexpr_keys(plan.expr) for qi, plan in items}
+        queries = [[t for t in plan.terms] for _, plan in items]
+        if topology is not None and (shards > 1 or replicas > 1):
+            assert get_sharded_set is not None, (
+                "2-D expression buckets resolve through the engine's "
+                "ReplicatedDeviceSet mirrors (get_sharded_set)"
+            )
+            rows = [[get_sharded_set(t) for t in q] for q in queries]
+            pending = dispatch_expr_mesh2d_batch(
+                rows, eshape, topology,
+                capacity_per_shard=default_expr_capacity_per_shard(
+                    sig.ts, sig.gmaxes, shards, capacity=sig.capacity_tier),
+                sub_keys=[sub_keys[qi] for qi, _ in items],
+            )
+        elif shards > 1:
+            assert mesh is not None, "sharded bucket needs the engine's mesh"
+            resolve = get_sharded_set or get_set
+            rows = [[resolve(t) for t in q] for q in queries]
+            pending = dispatch_expr_sharded_batch(
+                rows, eshape, mesh, axis=shard_axis,
+                capacity_per_shard=default_expr_capacity_per_shard(
+                    sig.ts, sig.gmaxes, shards, capacity=sig.capacity_tier),
+                sub_keys=[sub_keys[qi] for qi, _ in items],
+            )
+        elif (topology is not None and topology.replicas > 1
+              and get_replica_set is not None):
+            # balancer cost: the DAG's dense row width per query (the
+            # analogue of the flat bucket's B * G phase-1 rows)
+            weight = float(len(items) * expr_total_width(sig.ts, sig.gmaxes))
+            replica = topology.balancer.acquire(weight)
+            try:
+                rows = [[get_replica_set(replica, t) for t in q]
+                        for q in queries]
+                pending = dispatch_expr_batch(
+                    rows, eshape, capacity=sig.capacity_tier,
+                    sub_keys=[sub_keys[qi] for qi, _ in items],
+                )
+            except BaseException:
+                topology.balancer.release(replica, weight)
+                raise
+            EXEC_COUNTERS["replica_dispatches"] += 1
+        else:
+            rows = [[get_set(t) for t in q] for q in queries]
+            pending = dispatch_expr_batch(
+                rows, eshape, capacity=sig.capacity_tier,
+                sub_keys=[sub_keys[qi] for qi, _ in items],
+            )
+        EXEC_COUNTERS["inflight_dispatches"] += 1
+        _inflight_enter()
+        return InFlightBucket(
+            sig, items, pending, t0, capacity_model=capacity_model,
+            topology=topology, replica=replica, weight=weight,
+        )
     if topology is not None and (shards > 1 or replicas > 1):
         assert get_sharded_set is not None, (
             "2-D buckets resolve through the engine's ReplicatedDeviceSet "

@@ -27,12 +27,23 @@ mutable index therefore bump the cache's **generation** on every mutation
 generation are treated as misses and evicted lazily on lookup, so a
 repeated conjunction can never serve postings from before the mutation.
 ``invalidate()`` is the explicit everything-now hook.
+
+Subexpression entries: with the expression DAG engine, the cache also
+stores **canonicalized subexpression** results (``get_sub`` / ``put_sub``,
+keyed on raw ``exec.expr.expr_key`` tuples under a ``"subexpr"``
+namespace) so a subtree shared across queries — ``a∪b`` inside both
+``(a∪b)∩c`` and ``(a∪b)∖d`` — resolves on the host without device work.
+Sub entries share the LRU budget and the generation mechanics with plan
+entries but count into separate telemetry
+(``subexpr_cache_hits`` / ``subexpr_cache_misses`` /
+``subexpr_cache_stores``), so the root hit-rate numbers stay comparable
+with pre-expression serving runs.
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 from ..core.engine import EXEC_COUNTERS
 from .plan import QueryPlan
@@ -111,6 +122,53 @@ class ResultCache:
                 return  # computed against a mutated-away index: never cache
             self._entries[key] = (stamp, value)
             self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    # -- subexpression entries ---------------------------------------------
+    # same LRU + generation machinery, namespaced keys, separate counters
+
+    @staticmethod
+    def _sub_key(key) -> Tuple[str, Any]:
+        # namespace the raw expr_key so a subexpression entry can never
+        # collide with a plan entry (whose key is (algorithm, terms/key))
+        return ("subexpr", key)
+
+    def get_sub(self, key) -> Optional[Any]:
+        """Return the cached value for canonical subexpression ``key`` (a
+        raw ``expr_key`` tuple), or None.  Counts
+        ``subexpr_cache_hits`` / ``subexpr_cache_misses``; stale-generation
+        entries evict as misses, exactly like plan entries."""
+        if self.capacity <= 0:
+            return None
+        skey = self._sub_key(key)
+        with self._lock:
+            if skey in self._entries:
+                gen, value = self._entries[skey]
+                if gen != self.generation:
+                    del self._entries[skey]
+                else:
+                    self._entries.move_to_end(skey)
+                    EXEC_COUNTERS["subexpr_cache_hits"] += 1
+                    return value
+            EXEC_COUNTERS["subexpr_cache_misses"] += 1
+            return None
+
+    def put_sub(self, key, value: Any,
+                generation: Optional[int] = None) -> None:
+        """Insert/refresh a canonical subexpression value; same generation
+        contract as :meth:`put` (a value computed against a mutated-away
+        index is rejected).  Counts ``subexpr_cache_stores``."""
+        if self.capacity <= 0:
+            return
+        skey = self._sub_key(key)
+        with self._lock:
+            stamp = self.generation if generation is None else generation
+            if stamp != self.generation:
+                return
+            self._entries[skey] = (stamp, value)
+            self._entries.move_to_end(skey)
+            EXEC_COUNTERS["subexpr_cache_stores"] += 1
             while len(self._entries) > self.capacity:
                 self._entries.popitem(last=False)
 

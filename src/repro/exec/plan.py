@@ -41,7 +41,12 @@ import dataclasses
 from typing import Mapping, Optional, Sequence, Tuple
 
 from ..core.engine import (
-    SHARD_MIN_G, default_capacity, gmax_tier, set_sort_key,
+    SHARD_MIN_G, default_capacity, default_expr_capacity, gmax_tier,
+    set_sort_key,
+)
+from .expr import (
+    EMPTY, Expr, canonicalize, expr_key, expr_shape, flat_terms, leaf_terms,
+    parse,
 )
 
 __all__ = ["SHARD_MIN_G", "ShapeSig", "QueryPlan", "plan_query"]
@@ -57,6 +62,14 @@ class ShapeSig:
     data-parallel rows.  Both are part of the signature because each
     combination compiles a different executable (and must not mix in one
     stacked bucket).
+
+    ``eshape`` is ``None`` for flat conjunctions (keeping their signatures
+    byte-identical to the pre-expression planner) and the leaf-erased
+    expression shape (``exec.expr.expr_shape``) for boolean-expression
+    plans: two expressions with the same operator tree stack into one
+    ``(B, …)`` bucket and share a compiled DAG executable, with ``ts`` /
+    ``gmaxes`` carried per leaf in the expression's canonical traversal
+    order rather than sorted.
     """
 
     k: int
@@ -65,21 +78,29 @@ class ShapeSig:
     capacity_tier: int
     shards: int = 1
     replicas: int = 1
+    eshape: Optional[Tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
     """A normalized, routed query.
 
-    ``terms`` are deduped and (t, n, term)-sorted; ``algorithm`` is one of
+    ``terms`` are deduped and (t, n, term)-sorted for flat conjunctions,
+    and the canonical expression's leaf terms (traversal order, with
+    multiplicity) when ``expr`` is set; ``algorithm`` is one of
     ``"device"`` (bucketed batch path), ``"hashbin"`` / ``"host"`` (host
-    execution), or ``"empty"`` (a term has no postings — result is ∅).
-    ``sig`` is set iff ``algorithm == "device"``.
+    execution), or ``"empty"`` (a term has no postings — or the expression
+    canonicalizes to ∅).  ``sig`` is set iff ``algorithm == "device"``;
+    ``expr`` is the canonical :class:`~repro.exec.expr.Expr` for boolean
+    expression plans and ``None`` for flat conjunctions (including
+    expressions that *normalize* to a flat conjunction — those delegate to
+    the legacy planner and produce byte-identical plans).
     """
 
     terms: Tuple
     algorithm: str
     sig: Optional[ShapeSig] = None
+    expr: Optional[Expr] = None
 
     def cache_key(self) -> Tuple[str, Tuple]:
         """Canonical result-cache key for this plan.
@@ -87,12 +108,31 @@ class QueryPlan:
         Because planning dedups terms and sorts them deterministically (by
         ``(t, n, term)``), every surface form of the same conjunction —
         ``[a, b]``, ``[b, a]``, ``[a, a, b]`` — normalizes to the same
-        ``terms`` tuple, so one cache entry serves them all.  The routing
-        algorithm is part of the key: host and device paths return
-        identical values, but keying on it keeps an entry from outliving a
-        routing change (e.g. a device attaching between requests).
+        ``terms`` tuple, so one cache entry serves them all.  Expression
+        plans key on ``expr_key(expr)`` of the *canonical* expression
+        instead, so algebraically equal expressions (``(b|a)&c`` vs
+        ``c&(a|b)``) share an entry; expressions that canonicalize to a
+        flat conjunction carry ``expr=None`` and fall into the flat
+        keyspace, sharing entries with term-list queries of the same
+        conjunction.
+
+        The routing algorithm is part of the key: host and device paths
+        return identical values, but keying on it keeps an entry from
+        outliving a routing change.  This matters more with canonical
+        expression keys: the same query text re-planned after a device
+        attach/detach yields the same canonical expression but a different
+        algorithm, so the stale-routing entry can never be served — the
+        (algorithm, key) pair misses and the fresh route repopulates it.
         """
+        if self.expr is not None:
+            return (self.algorithm, expr_key(self.expr))
         return (self.algorithm, self.terms)
+
+    def query_spec(self):
+        """What to re-plan to reproduce this plan: the canonical expression
+        when one is set, else the flat term list.  The async flusher uses
+        this for its dispatch-time staleness check and host fallback."""
+        return self.expr if self.expr is not None else list(self.terms)
 
 
 def plan_query(
@@ -106,6 +146,18 @@ def plan_query(
     mesh_replicas: int = 1,
 ) -> QueryPlan:
     """Plan one query against ``index`` (term -> set with .t/.gmax/.n).
+
+    ``terms`` may be a term sequence (flat conjunction — the legacy
+    surface, planned exactly as before), an :class:`~repro.exec.expr.
+    Expr` over ∩/∪/∖, or a :func:`~repro.exec.expr.parse` surface string
+    (``"(1|2)&3-4"``).  Expressions are canonicalized first; an expression
+    that normalizes to a bare conjunction (``a & b``, ``(a&b)&a`` …)
+    delegates to the flat path and yields a byte-identical plan — same
+    terms, algorithm, signature, and cache key as the equivalent term
+    list.  Irreducible expressions become device plans with
+    ``sig.eshape`` set (ts/gmaxes per leaf in canonical traversal order)
+    and ``plan.expr`` carrying the canonical DAG; the §3.4 hashbin policy
+    never applies to them (it is a 2-term conjunction special case).
 
     Pure metadata work — touches no arrays, runs no device code, and
     increments no ``EXEC_COUNTERS``.  For device-routed plans the returned
@@ -125,6 +177,14 @@ def plan_query(
     Consulting the model stays pure metadata work (a dict lookup under the
     model's lock).
     """
+    if isinstance(terms, str):
+        terms = parse(terms)
+    if isinstance(terms, Expr):
+        return _plan_expr(
+            index, terms, device=device, mesh_shards=mesh_shards,
+            shard_min_g=shard_min_g, capacity_model=capacity_model,
+            mesh_replicas=mesh_replicas, hashbin_ratio=hashbin_ratio,
+        )
     uniq = []
     seen = set()
     for term in terms:
@@ -161,3 +221,59 @@ def plan_query(
         capacity_tier=capacity, shards=shards, replicas=replicas,
     )
     return QueryPlan(terms=tuple(uniq), algorithm="device", sig=sig)
+
+
+def _plan_expr(
+    index: Mapping,
+    raw: Expr,
+    hashbin_ratio: float,
+    device: bool,
+    mesh_shards: int,
+    shard_min_g: int,
+    capacity_model,
+    mesh_replicas: int,
+) -> QueryPlan:
+    """Expression arm of :func:`plan_query`.
+
+    Canonicalization happens against the index (unknown terms become ∅
+    and propagate algebraically), so by the time a plan exists every leaf
+    resolves.  Mesh routing mirrors the flat rule but must hold for
+    *every* leaf: each leaf's group axis is shard_mapped independently, so
+    all ``2^t`` must split evenly over the z axis, and the largest leaf
+    gates the ``shard_min_g`` threshold.
+    """
+    can = canonicalize(raw, index)
+    if can is EMPTY:
+        return QueryPlan(terms=(), algorithm="empty")
+    flat = flat_terms(can)
+    if flat is not None:
+        # pure conjunction after normalization -> the legacy flat planner,
+        # byte-identical plans (and shared cache entries) with term lists
+        return plan_query(
+            index, list(flat), hashbin_ratio=hashbin_ratio, device=device,
+            mesh_shards=mesh_shards, shard_min_g=shard_min_g,
+            capacity_model=capacity_model, mesh_replicas=mesh_replicas,
+        )
+    leaves = leaf_terms(can)
+    if not device:
+        return QueryPlan(terms=leaves, algorithm="host", expr=can)
+    ts = tuple(index[t].t for t in leaves)
+    gmaxes = tuple(gmax_tier(index[t].gmax) for t in leaves)
+    eshape = expr_shape(can)
+    shards, replicas = 1, 1
+    if ((mesh_shards > 1 or mesh_replicas > 1)
+            and (1 << max(ts)) >= shard_min_g
+            and all((1 << t) % mesh_shards == 0 for t in ts)):
+        shards, replicas = mesh_shards, mesh_replicas
+    capacity = default_expr_capacity(ts, gmaxes)
+    if capacity_model is not None:
+        from .adaptive import adaptive_key_parts
+
+        capacity = capacity_model.capacity_for(
+            adaptive_key_parts(len(leaves), ts, gmaxes, shards,
+                               replicas=replicas, eshape=eshape), capacity)
+    sig = ShapeSig(
+        k=len(leaves), ts=ts, gmaxes=gmaxes, capacity_tier=capacity,
+        shards=shards, replicas=replicas, eshape=eshape,
+    )
+    return QueryPlan(terms=leaves, algorithm="device", sig=sig, expr=can)

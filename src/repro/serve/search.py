@@ -46,6 +46,9 @@ from ..core.partition import preprocess_prefix
 from ..exec.adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
 from ..exec.batch import InFlightBucket, dispatch_bucket, execute_plan_buckets
 from ..exec.cache import ResultCache
+from ..exec.expr import (
+    And, Diff, Expr, Or, Term, canonicalize, eval_host, expr_key,
+)
 from ..exec.plan import QueryPlan, ShapeSig, plan_query
 from .admission import AdmissionQueue, Ticket
 
@@ -75,12 +78,14 @@ class QueryResult:
 def _device_result_name(stats: Dict) -> str:
     """Executed-path label from a device bucket's stats: the 2-D pipeline
     stamps ``n_replicas`` (even when 1 — the 1-D path never does), the 1-D
-    sharded pipeline stamps ``n_shards > 1``."""
+    sharded pipeline stamps ``n_shards > 1``; expression-DAG buckets stamp
+    ``expr_width`` on every path."""
+    base = "expr" if "expr_width" in stats else "rangroupscan"
     if "n_replicas" in stats:
-        return "rangroupscan/mesh2d"
+        return base + "/mesh2d"
     if stats.get("n_shards", 1) > 1:
-        return "rangroupscan/sharded"
-    return "rangroupscan/device"
+        return base + "/sharded"
+    return base + "/device"
 
 
 class SearchEngine:
@@ -145,15 +150,18 @@ class SearchEngine:
         if self.capacity_model is not None:
             self.capacity_model.on_promotion(self._on_tier_promotion)
         self.warmed_sigs: List[ShapeSig] = []
-        # adaptive-key -> (representative terms, warmed b_tiers): what a
-        # promotion must re-warm so the new tier's executable is traced
-        # deliberately instead of at first live flush
-        self._warm_reps: Dict[Tuple, Tuple[Tuple, Tuple[int, ...]]] = {}
+        # adaptive-key -> (representative query spec — a term list or an
+        # Expr — and warmed b_tiers): what a promotion must re-warm so the
+        # new tier's executable is traced deliberately instead of at first
+        # live flush
+        self._warm_reps: Dict[Tuple, Tuple] = {}
 
-    def plan(self, terms: Sequence[int]) -> QueryPlan:
+    def plan(self, terms) -> QueryPlan:
         """Normalize + route one query (dedup, §3.4 policy, shape sig,
         mesh routing when a mesh or 2-D topology is attached, learned
-        capacity tier when an adaptive model is attached)."""
+        capacity tier when an adaptive model is attached).  ``terms`` is a
+        term sequence (flat conjunction) or an ``exec.expr.Expr`` boolean
+        expression over ∩/∪/∖."""
         return plan_query(self.index, terms,
                           hashbin_ratio=self.hashbin_ratio,
                           device=self.device is not None,
@@ -187,8 +195,8 @@ class SearchEngine:
         rep = self._warm_reps.get(key)
         if rep is None or self.device is None:
             return
-        terms, b_tiers = rep
-        plan = self.plan(list(terms))  # re-plans with the promoted tier
+        spec, b_tiers = rep
+        plan = self.plan(spec)  # re-plans with the promoted tier
         if plan.algorithm != "device":
             return
         warm_from_plans(
@@ -259,20 +267,96 @@ class SearchEngine:
                 continue
             key = adaptive_key(p.sig)
             if key in warmed_keys and key not in self._warm_reps:
-                self._warm_reps[key] = (p.terms, tuple(b_tiers))
+                self._warm_reps[key] = (p.query_spec(), tuple(b_tiers))
         return self.warmed_sigs
 
     def _cached_result(self, plan: QueryPlan) -> Optional[QueryResult]:
         """Result-cache lookup; ``"empty"`` plans bypass the cache (no work
-        to save, and their misses would skew hit-rate telemetry)."""
+        to save, and their misses would skew hit-rate telemetry).
+
+        Expression plans get a second chance on a root miss: if any
+        composite subtree of the canonical DAG is cached (``get_sub``),
+        the remainder is merged on the host from cached subtree values and
+        raw leaf postings — no device work, one
+        ``subexpr_host_merges`` counter bump — and the root is stored so
+        the next identical query is a plain root hit."""
         if plan.algorithm == "empty":
             return None
         hit = self.cache.get(plan)
-        if hit is None:
+        if hit is not None:
+            doc_ids, algorithm = hit
+            return QueryResult(doc_ids, 0.0, algorithm,
+                               {"cached": True, "r": len(doc_ids)})
+        if plan.expr is not None:
+            doc_ids = self._resolve_expr_from_subcache(plan.expr)
+            if doc_ids is not None:
+                EXEC_COUNTERS["subexpr_host_merges"] += 1
+                result = QueryResult(
+                    doc_ids, 0.0, "expr/subcache",
+                    {"cached": True, "r": len(doc_ids),
+                     "subexpr_merge": True})
+                self._store(plan, result)
+                return result
+        return None
+
+    def _resolve_expr_from_subcache(self, e: Expr) -> Optional[np.ndarray]:
+        """Try to answer a canonical expression from cached subexpression
+        values + raw leaf postings, without touching the device.
+
+        Probes every composite node once (memoized; probes count
+        ``subexpr_cache_hits`` / ``_misses``).  If NO composite subtree is
+        cached the query goes to the device untouched — recomputing the
+        whole DAG in numpy here would just bypass the engine.  With at
+        least one cached subtree, uncached nodes merge on the host
+        (intersect1d/union1d/setdiff1d — the exact oracle semantics, so
+        the merged result is bit-identical to a device execution)."""
+        probes: Dict[Tuple, Optional[np.ndarray]] = {}
+
+        def probe(node: Expr) -> Optional[np.ndarray]:
+            key = expr_key(node)
+            if key not in probes:
+                probes[key] = self.cache.get_sub(key)
+            return probes[key]
+
+        def any_cached(node: Expr) -> bool:
+            if isinstance(node, Term):
+                return False
+            if probe(node) is not None:
+                return True
+            if isinstance(node, Diff):
+                return any_cached(node.left) or any_cached(node.right)
+            return any(any_cached(c) for c in node.children)
+
+        if not any_cached(e):
             return None
-        doc_ids, algorithm = hit
-        return QueryResult(doc_ids, 0.0, algorithm,
-                           {"cached": True, "r": len(doc_ids)})
+        memo: Dict[Tuple, np.ndarray] = {}
+
+        def merge(node: Expr) -> np.ndarray:
+            key = expr_key(node)
+            if key in memo:
+                return memo[key]
+            if isinstance(node, Term):
+                out = np.unique(
+                    np.asarray(self.index[node.term].values, np.uint32))
+            else:
+                cached = probe(node)
+                if cached is not None:
+                    out = cached
+                elif isinstance(node, And):
+                    out = merge(node.children[0])
+                    for c in node.children[1:]:
+                        out = np.intersect1d(out, merge(c))
+                elif isinstance(node, Or):
+                    out = merge(node.children[0])
+                    for c in node.children[1:]:
+                        out = np.union1d(out, merge(c))
+                else:
+                    out = np.setdiff1d(merge(node.left), merge(node.right))
+            out = out.astype(np.uint32)
+            memo[key] = out
+            return out
+
+        return merge(e)
 
     def _execute_host_plan(self, plan: QueryPlan) -> QueryResult:
         """Run one non-device plan (``empty`` / ``hashbin`` / ``host``) to a
@@ -280,6 +364,11 @@ class SearchEngine:
         EXEC_COUNTERS are touched (those count device work)."""
         if plan.algorithm == "empty":
             return QueryResult(np.empty(0, np.uint32), 0.0, "empty", {})
+        if plan.expr is not None:
+            t0 = time.perf_counter()
+            res = eval_host(plan.expr, lambda t: self.index[t].values)
+            dt = (time.perf_counter() - t0) * 1e6
+            return QueryResult(res, dt, "expr/host", {"r": len(res)})
         idxs = [self.index[t] for t in plan.terms]
         t0 = time.perf_counter()
         if plan.algorithm == "hashbin":
@@ -343,10 +432,29 @@ class SearchEngine:
                generation: Optional[int] = None) -> None:
         """Cache a computed result.  ``generation`` is the cache generation
         captured before execution started — the cache rejects the entry if
-        a mutation landed in between (see ``ResultCache.put``)."""
-        if plan.algorithm != "empty":
-            self.cache.put(plan, (result.doc_ids, result.algorithm),
-                           generation=generation)
+        a mutation landed in between (see ``ResultCache.put``).
+
+        Besides the root entry, every result also feeds the
+        *subexpression* cache: device expression buckets ship their
+        intermediate DAG-node values in ``stats["subexprs"]``; the root
+        value itself is stored under its canonical expression key (for a
+        flat conjunction, the key of the equivalent canonical ``And``), so
+        a finished query — flat or expression — can later resolve as a
+        shared subtree of a bigger expression without device work."""
+        if plan.algorithm == "empty":
+            return
+        self.cache.put(plan, (result.doc_ids, result.algorithm),
+                       generation=generation)
+        if self.cache.capacity <= 0 or result.stats.get("cached"):
+            return
+        for key, value in result.stats.get("subexprs", ()):
+            self.cache.put_sub(key, value, generation=generation)
+        if plan.expr is not None:
+            root_key = expr_key(plan.expr)
+        else:
+            root_key = expr_key(canonicalize(
+                And(tuple(Term(t) for t in plan.terms)), self.index))
+        self.cache.put_sub(root_key, result.doc_ids, generation=generation)
 
 
 @dataclasses.dataclass
@@ -766,12 +874,15 @@ class AsyncSearchEngine(SearchEngine):
         flush_at = self.clock()
         live = []
         for ticket, plan in entries:
-            if self.plan(plan.terms).sig == sig:
+            # re-plan via the original spec (flat term list OR canonical
+            # expression) — an expression plan's terms tuple alone would
+            # re-plan as a flat conjunction and always look stale
+            if self.plan(plan.query_spec()).sig == sig:
                 live.append((ticket, plan))
                 continue
             wait_us = (flush_at - ticket.submitted_at) * 1e6
             try:
-                result = self.query(list(plan.terms))
+                result = self.query(plan.query_spec())
             except Exception as exc:
                 ticket.resolve_error(exc, wait_us=wait_us)
             else:

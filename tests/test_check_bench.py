@@ -208,6 +208,45 @@ def test_slo_burn_served_qps_relative_same_scale_only(tmp_path):
     assert check_bench.check_dirs(base, cur2) == []
 
 
+def _boolean(qps: float = 900.0, identical: int = 1, hits: int = 40,
+             merges: int = 10, queries: int = 256):
+    return {
+        "queries": queries, "n_docs": 20000, "n_terms": 12,
+        "identical_to_oracle": identical,
+        "subexpr_cache_hits": hits,
+        "subexpr_host_merges": merges,
+        "served_qps": qps,
+    }
+
+
+def test_boolean_qps_invariants_gate(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_boolean_qps.json", _boolean())
+    cur = _write(tmp_path, "cur", "BENCH_boolean_qps.json", _boolean(870.0))
+    assert check_bench.check_dirs(base, cur) == []
+    # absolute invariants fail on their own, at any workload scale
+    for broken, needle in [
+        (_boolean(identical=0, queries=64), "identical_to_oracle"),
+        (_boolean(hits=0, queries=64), "subexpr_cache_hits"),
+        (_boolean(merges=0, queries=64), "subexpr_host_merges"),
+    ]:
+        cur_d = _write(tmp_path, f"cur_{needle}", "BENCH_boolean_qps.json",
+                       broken)
+        failures = check_bench.check_dirs(base, cur_d)
+        assert any(needle in f for f in failures), (needle, failures)
+
+
+def test_boolean_qps_relative_same_scale_only(tmp_path):
+    base = _write(tmp_path, "base", "BENCH_boolean_qps.json", _boolean())
+    # 50% throughput drop at the same workload scale -> relative rule fires
+    cur = _write(tmp_path, "cur", "BENCH_boolean_qps.json", _boolean(450.0))
+    failures = check_bench.check_dirs(base, cur)
+    assert any("served_qps" in f for f in failures)
+    # same drop at smoke scale -> skipped (absolute invariants still hold)
+    cur2 = _write(tmp_path, "cur2", "BENCH_boolean_qps.json",
+                  _boolean(450.0, queries=64))
+    assert check_bench.check_dirs(base, cur2) == []
+
+
 def test_mesh2d_layout_qps_regression_fails_same_scale_only(tmp_path):
     base = _write(tmp_path, "base", "BENCH_mesh2d_qps.json", _mesh2d(3.7))
     # 2x2 QPS drops 60% at the same workload scale -> relative rule fires

@@ -1,0 +1,450 @@
+"""Boolean expression engine: normalizer units + end-to-end differentials.
+
+Three layers of coverage for the ∪/∩/∖ expression DAG:
+
+- **Normalizer algebra** (pure, no device): flattening, dedup,
+  absorption, difference push-down/cascade, ∅ propagation, parser
+  precedence, canonical-form idempotence — asserted via ``expr_key``
+  equality of differently-written equivalent expressions.
+- **Flat regression**: an expression that normalizes to a bare
+  conjunction must produce a plan *equal* to the term-list plan — same
+  terms, signature (``eshape is None``), and cache key — so the existing
+  flat workload is byte-identical under the refactor.
+- **Differential properties**: random expressions through the full
+  serving pipeline (plan → bucket → execute → scatter, sync and async
+  flusher) must be bit-identical to the ``eval_host`` numpy oracle on the
+  plain device engine, the 4-shard mesh, and the 2x2 topology; forced
+  tiny capacities at union/difference nodes must re-run enlarged and stay
+  exact; shared subtrees must resolve from the subexpression cache with
+  the advertised counters.
+
+Seeded variants always run; hypothesis ``@given`` twins explore fresh
+seeds where hypothesis is installed (``_hypothesis_compat`` shim).
+"""
+import numpy as np
+import pytest
+import jax
+from _hypothesis_compat import given, settings, st
+
+from repro.core.engine import (
+    EXEC_COUNTERS, DeviceSet, intersect_expr_batch,
+    intersect_expr_sharded_batch, make_shard_mesh,
+)
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.partition import preprocess_prefix
+from repro.exec.adaptive import adaptive_key
+from repro.exec.cache import ResultCache
+from repro.exec.expr import (
+    EMPTY, And, Diff, Or, Term, canonicalize, eval_host, expr_key,
+    expr_shape, flat_terms, leaf_terms, parse, subexpr_keys,
+)
+from repro.exec.plan import plan_query
+from repro.exec.topology import make_topology
+from repro.serve.search import AsyncSearchEngine, SearchEngine
+
+N_DEVICES = 4
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < N_DEVICES,
+    reason=f"needs >= {N_DEVICES} devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+SEED_MAX = (1 << 31) - 1
+
+
+# ---------------------------------------------------------------------------
+# normalizer algebra (metadata-only index: .t/.n/.gmax is all it reads)
+# ---------------------------------------------------------------------------
+
+class _Meta:
+    def __init__(self, t, n, gmax=4):
+        self.t, self.n, self.gmax = t, n, gmax
+
+
+IDX = {name: _Meta(t=i % 3 + 1, n=10 + 7 * i)
+       for i, name in enumerate("abcdef")}
+
+
+def _key(s):
+    return expr_key(canonicalize(parse(s), IDX))
+
+
+def test_flatten_sort_dedup():
+    assert _key("a&(b&c)") == _key("(c&a)&b") == _key("b&c&a&b")
+    assert _key("a|(b|c)") == _key("(c|a)|b") == _key("b|c|a|b")
+
+
+def test_absorb_and_singletons():
+    assert _key("a&a") == _key("a") == ("t", "a")
+    assert _key("a|a") == ("t", "a")
+    assert canonicalize(parse("a-a"), IDX) is EMPTY
+
+
+def test_difference_pushdown_and_cascade():
+    # (a∪b)∖c = (a∖c)∪(b∖c); (a∖b)∖c = a∖(b∪c)
+    assert _key("(a|b)-c") == _key("(a-c)|(b-c)")
+    assert _key("(a-b)-c") == _key("a-(b|c)")
+    # subtrahends of an And's Diff children hoist: (a∖d)&b = (a&b)∖d
+    assert _key("(a-d)&b") == _key("(a&b)-d")
+    # a∖(anything ∪ a) is empty
+    assert canonicalize(parse("a-(b|a)"), IDX) is EMPTY
+
+
+def test_empty_propagation_unknown_terms():
+    # unknown term -> ∅: annihilates ∩, drops from ∪, empties ∖ left
+    assert canonicalize(parse("a&zz"), IDX) is EMPTY
+    assert _key("a|zz") == ("t", "a")
+    assert canonicalize(parse("zz-a"), IDX) is EMPTY
+    assert _key("a-zz") == ("t", "a")
+
+
+def test_parser_precedence_and_ints():
+    # '&' binds tighter than '|' binds tighter than '-'
+    e = parse("a&b|c-d")
+    assert isinstance(e, Diff)
+    assert isinstance(e.left, Or)
+    assert isinstance(e.left.children[0], And)
+    assert parse("1&2") == And((Term(1), Term(2)))
+    assert parse("a ∩ b ∪ c ∖ d") == parse("a&b|c-d")
+    with pytest.raises(ValueError):
+        parse("a &")
+    with pytest.raises(ValueError):
+        parse("(a|b")
+
+
+def _random_expr(rng, terms, depth=0, max_depth=2):
+    if depth >= max_depth or rng.random() < 0.35:
+        return Term(terms[int(rng.integers(0, len(terms)))])
+    op = int(rng.integers(0, 3))
+    if op == 2:
+        return Diff(_random_expr(rng, terms, depth + 1, max_depth),
+                    _random_expr(rng, terms, depth + 1, max_depth))
+    kids = tuple(_random_expr(rng, terms, depth + 1, max_depth)
+                 for _ in range(int(rng.integers(2, 4))))
+    return And(kids) if op == 0 else Or(kids)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_canonicalize_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        can = canonicalize(_random_expr(rng, list("abcdef"), max_depth=3),
+                           IDX)
+        if can is EMPTY:
+            continue
+        again = canonicalize(can, IDX)
+        assert expr_key(again) == expr_key(can)
+        # leaf bookkeeping is consistent with the erased shape: one "T"
+        # per leaf, in the same traversal order
+        shape = expr_shape(can)
+        n_shape_leaves = 1 if shape == "T" else repr(shape).count("'T'")
+        assert len(leaf_terms(can)) == n_shape_leaves
+
+
+def test_flat_terms_detection():
+    assert flat_terms(canonicalize(parse("a&b&a"), IDX)) is not None
+    assert flat_terms(canonicalize(parse("a"), IDX)) == ("a",)
+    assert flat_terms(canonicalize(parse("a|b"), IDX)) is None
+    assert flat_terms(canonicalize(parse("(a&b)-c"), IDX)) is None
+
+
+def test_eval_host_oracle():
+    vals = {"a": np.array([1, 2, 3, 4], np.uint32),
+            "b": np.array([3, 4, 5], np.uint32),
+            "c": np.array([4, 6], np.uint32)}
+    resolve = lambda t: vals[t]
+    assert eval_host(parse("a&b"), resolve).tolist() == [3, 4]
+    assert eval_host(parse("a|c"), resolve).tolist() == [1, 2, 3, 4, 6]
+    assert eval_host(parse("a-b"), resolve).tolist() == [1, 2]
+    assert eval_host(parse("(a|c)&b-c"), resolve).tolist() == [3]
+
+
+# ---------------------------------------------------------------------------
+# flat-conjunction regression: expressions that normalize flat plan
+# byte-identically to term lists
+# ---------------------------------------------------------------------------
+
+def _small_index(seed=0, n_terms=6):
+    rng = np.random.default_rng(seed)
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    common = rng.choice(1 << 20, 60, replace=False).astype(np.uint32)
+    idx = {}
+    for t in range(n_terms):
+        own = rng.choice(1 << 20, int(rng.integers(40, 600)),
+                         replace=False).astype(np.uint32)
+        idx[t] = preprocess_prefix(np.unique(np.concatenate([own, common])),
+                                   w=256, m=2, family=fam, perm=perm)
+    return idx
+
+
+def test_flat_plan_identity():
+    idx = _small_index()
+    for q, s in [([1, 2], "1&2"), ([0, 1, 2], "2&(0&1)"),
+                 ([3], "3|3"), ([4, 5], "4&5&4")]:
+        p_list = plan_query(idx, q)
+        p_expr = plan_query(idx, parse(s))
+        assert p_expr == p_list
+        assert p_expr.expr is None
+        assert p_expr.sig is None or p_expr.sig.eshape is None
+        assert p_expr.cache_key() == p_list.cache_key()
+        # host routing too
+        assert (plan_query(idx, parse(s), device=False)
+                == plan_query(idx, q, device=False))
+
+
+def test_expr_plan_shapes():
+    idx = _small_index()
+    p = plan_query(idx, parse("(0|1)&(2|3)-4"))
+    assert p.algorithm == "device" and p.expr is not None
+    assert p.sig.eshape == expr_shape(p.expr)
+    assert p.sig.k == len(p.terms) == 5
+    # ts/gmaxes are per-leaf in traversal order, not sorted
+    assert p.terms == leaf_terms(p.expr)
+    assert p.sig.ts == tuple(idx[t].t for t in p.terms)
+    # algebraically equal expressions share plan and cache key
+    q = plan_query(idx, parse("((3|2)&(1|0))-4"))
+    assert q == p and q.cache_key() == p.cache_key()
+
+
+def test_adaptive_key_includes_eshape():
+    idx = _small_index()
+    p_flat = plan_query(idx, [0, 1])
+    p_expr = plan_query(idx, parse("0|1"))
+    assert adaptive_key(p_flat.sig)[-1] is None
+    assert adaptive_key(p_expr.sig)[-1] == p_expr.sig.eshape
+    assert adaptive_key(p_flat.sig) != adaptive_key(p_expr.sig)
+
+
+def test_routing_change_cannot_serve_stale_entry():
+    """Satellite: device attach/detach between identical queries re-keys
+    the cache entry (algorithm is part of the key), so expression-
+    canonical keys can never alias a host result onto a device plan."""
+    idx = _small_index()
+    cache = ResultCache(8)
+    e = parse("(0|1)&2")
+    p_dev = plan_query(idx, e, device=True)
+    p_host = plan_query(idx, e, device=False)
+    assert p_dev.cache_key() != p_host.cache_key()
+    cache.put(p_host, (np.arange(3, dtype=np.uint32), "expr/host"))
+    assert cache.get(p_dev) is None          # miss, never a stale hit
+    assert cache.get(p_host) is not None     # same routing still hits
+    # flat plans carry the same guarantee
+    f_dev = plan_query(idx, [0, 1], device=True)
+    f_host = plan_query(idx, [0, 1], device=False)
+    cache.put(f_dev, (np.arange(2, dtype=np.uint32), "rangroupscan/device"))
+    assert cache.get(f_host) is None
+
+
+# ---------------------------------------------------------------------------
+# full-pipeline differential vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+def _random_postings(rng, n_terms=8, max_len=400, universe=1 << 18):
+    common = rng.choice(universe, 40, replace=False).astype(np.uint32)
+    postings = {}
+    for t in range(n_terms):
+        n = int(rng.integers(5, max_len))
+        own = rng.choice(universe, n, replace=False).astype(np.uint32)
+        postings[t] = np.unique(np.concatenate([own, common]))
+    return postings
+
+
+def _check_expr_differential(seed, n_exprs=8, **engine_kw):
+    rng = np.random.default_rng(seed)
+    postings = _random_postings(rng)
+    terms = list(postings)
+    exprs = [_random_expr(rng, terms) for _ in range(n_exprs)]
+    exprs.append(parse("(0|1)&(2|3)-4"))  # the acceptance-class shape
+    truths = [eval_host(e, lambda t: postings[t]) for e in exprs]
+    eng = SearchEngine(postings, seed=3, use_device=True, **engine_kw)
+    # mixed batch: expressions and flat conjunctions share one pipeline
+    flat = [[0, 1], [2, 3, 4]]
+    results = eng.query_batch(list(exprs) + flat)
+    for e, truth, r in zip(exprs, truths, results):
+        assert np.array_equal(r.doc_ids, truth), (seed, e)
+    for q, r in zip(flat, results[len(exprs):]):
+        out = postings[q[0]]
+        for t in q[1:]:
+            out = np.intersect1d(out, postings[t])
+        assert np.array_equal(r.doc_ids, out.astype(np.uint32)), (seed, q)
+    # async front-end: submit -> background-flusher-less drain
+    aeng = AsyncSearchEngine(postings, seed=3, flush_tier=8,
+                             result_cache=0, **engine_kw)
+    tickets = [aeng.submit(e) for e in exprs]
+    aeng.drain()
+    for e, truth, t in zip(exprs, truths, tickets):
+        assert t.done and t.error is None, (seed, e)
+        assert np.array_equal(t.value.doc_ids, truth), (seed, e)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_expr_differential_seeded(seed):
+    _check_expr_differential(seed)
+
+
+@settings(max_examples=2, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX))
+def test_expr_differential_property(seed):
+    _check_expr_differential(seed, n_exprs=4)
+
+
+@multi_device
+@pytest.mark.parametrize("seed", [0])
+def test_expr_sharded_differential_seeded(seed):
+    _check_expr_differential(seed, mesh=make_shard_mesh(N_DEVICES),
+                             shard_min_g=4)
+
+
+@multi_device
+@settings(max_examples=1, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX))
+def test_expr_sharded_differential_property(seed):
+    _check_expr_differential(seed, n_exprs=4,
+                             mesh=make_shard_mesh(N_DEVICES), shard_min_g=4)
+
+
+@multi_device
+@pytest.mark.parametrize("seed", [0])
+def test_expr_mesh2d_differential_seeded(seed):
+    _check_expr_differential(seed, topology=make_topology(2, 2),
+                             shard_min_g=4)
+
+
+@multi_device
+@settings(max_examples=1, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX))
+def test_expr_mesh2d_differential_property(seed):
+    _check_expr_differential(seed, n_exprs=4, topology=make_topology(2, 2),
+                             shard_min_g=4)
+
+
+# ---------------------------------------------------------------------------
+# forced overflow at union/difference nodes: enlarged re-run stays exact
+# ---------------------------------------------------------------------------
+
+def _overlapping_leaf_rows(rng, n_leaves=3, n=400, overlap=250):
+    fam = random_hash_family(2, 256, seed=7)
+    perm = default_permutation(7)
+    common = rng.choice(1 << 22, overlap, replace=False).astype(np.uint32)
+    sets = []
+    for _ in range(n_leaves):
+        own = rng.choice(1 << 22, n, replace=False).astype(np.uint32)
+        sets.append(np.unique(np.concatenate([own, common])))
+    idxs = [preprocess_prefix(s, w=256, m=2, family=fam, perm=perm)
+            for s in sets]
+    return sets, [DeviceSet.from_host(i) for i in idxs]
+
+
+def _check_expr_forced_overflow(seed, cap):
+    rng = np.random.default_rng(seed)
+    sets, row = _overlapping_leaf_rows(rng)
+    # (a ∪ b) ∖ c — the union node alone carries >> cap values
+    eshape = ("-", ("|", "T", "T"), "T")
+    truth = np.setdiff1d(np.union1d(sets[0], sets[1]),
+                         sets[2]).astype(np.uint32)
+    assert len(np.union1d(sets[0], sets[1])) > cap
+    EXEC_COUNTERS.reset()
+    out = intersect_expr_batch([row, row], eshape, capacity=cap)
+    for res, stats in out:
+        assert np.array_equal(res, truth), (seed, cap)
+        assert stats["r"] == len(truth)
+    assert EXEC_COUNTERS["expr_rerun_calls"] >= 1
+
+
+@pytest.mark.parametrize("seed,cap", [(0, 2), (1, 16)])
+def test_expr_forced_overflow_seeded(seed, cap):
+    _check_expr_forced_overflow(seed, cap)
+
+
+@settings(max_examples=2, deadline=None, derandomize=True)
+@given(seed=st.integers(min_value=0, max_value=SEED_MAX),
+       cap=st.sampled_from([2, 16]))
+def test_expr_forced_overflow_property(seed, cap):
+    _check_expr_forced_overflow(seed, cap)
+
+
+@multi_device
+@pytest.mark.parametrize("seed", [0])
+def test_expr_forced_overflow_sharded(seed):
+    rng = np.random.default_rng(seed)
+    mesh = make_shard_mesh(N_DEVICES)
+    sets, row = _overlapping_leaf_rows(rng, n=1500, overlap=300)
+    row = [ds.shard(mesh) for ds in row]
+    eshape = ("-", ("|", "T", "T"), "T")
+    truth = np.setdiff1d(np.union1d(sets[0], sets[1]),
+                         sets[2]).astype(np.uint32)
+    EXEC_COUNTERS.reset()
+    out = intersect_expr_sharded_batch([row, row], eshape, mesh,
+                                       capacity_per_shard=2)
+    for res, stats in out:
+        assert np.array_equal(res, truth)
+        assert stats["r"] == len(truth)
+    assert EXEC_COUNTERS["expr_rerun_calls"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# subexpression cache: shared subtrees resolve without device work
+# ---------------------------------------------------------------------------
+
+def test_subexpr_cache_host_merge_and_counters():
+    rng = np.random.default_rng(2)
+    postings = _random_postings(rng)
+    oracle = lambda s: eval_host(parse(s), lambda t: postings[t])
+    eng = SearchEngine(postings, seed=3, use_device=True, result_cache=64)
+    r0 = eng.query(parse("(0|1)&(2|3)-4"))
+    assert np.array_equal(r0.doc_ids, oracle("(0|1)&(2|3)-4"))
+    # intermediate DAG nodes were stored under their canonical keys
+    assert EXEC_COUNTERS["subexpr_cache_stores"] >= len(
+        subexpr_keys(eng.plan(parse("(0|1)&(2|3)-4")).expr))
+    h0 = EXEC_COUNTERS["subexpr_cache_hits"]
+    m0 = EXEC_COUNTERS["subexpr_host_merges"]
+    r = eng.query(parse("(0|1)&5"))  # shares the 0|1 subtree
+    assert np.array_equal(r.doc_ids, oracle("(0|1)&5"))
+    assert r.algorithm == "expr/subcache"
+    assert EXEC_COUNTERS["subexpr_cache_hits"] - h0 >= 1
+    assert EXEC_COUNTERS["subexpr_host_merges"] - m0 == 1
+    # merged roots are stored: the algebraic twin is now a root cache hit
+    r2 = eng.query(parse("5&(1|0)"))
+    assert r2.stats.get("cached") and np.array_equal(r2.doc_ids, r.doc_ids)
+    # a finished FLAT conjunction seeds the sub-cache too
+    eng.query([4, 5])
+    m1 = EXEC_COUNTERS["subexpr_host_merges"]
+    rx = eng.query(parse("(4&5)|6"))
+    assert np.array_equal(rx.doc_ids, oracle("(4&5)|6"))
+    assert EXEC_COUNTERS["subexpr_host_merges"] - m1 == 1
+
+
+def test_subexpr_cache_through_async_flusher():
+    rng = np.random.default_rng(3)
+    postings = _random_postings(rng)
+    oracle = lambda s: eval_host(parse(s), lambda t: postings[t])
+    with AsyncSearchEngine(postings, seed=3, flush_tier=8,
+                           result_cache=64) as aeng:
+        t = aeng.submit(parse("(0|1)&(2|3)"))
+        t.wait()
+        assert np.array_equal(t.value.doc_ids, oracle("(0|1)&(2|3)"))
+        h0 = EXEC_COUNTERS["subexpr_cache_hits"]
+        t2 = aeng.submit(parse("(2|3)&7"))  # shares 2|3 -> submit-time merge
+        assert t2.done
+        assert np.array_equal(t2.value.doc_ids, oracle("(2|3)&7"))
+        assert EXEC_COUNTERS["subexpr_cache_hits"] - h0 >= 1
+    assert EXEC_COUNTERS["subexpr_host_merges"] >= 1
+
+
+def test_subexpr_cache_respects_generation():
+    rng = np.random.default_rng(4)
+    postings = _random_postings(rng)
+    eng = SearchEngine(postings, seed=3, use_device=True, result_cache=64)
+    eng.query(parse("(0|1)&(2|3)"))
+    # index mutation stales every sub entry: the shared-subtree probe must
+    # MISS (and the merged answer reflect the new postings)
+    eng.add_postings(1, np.arange(10, dtype=np.uint32))
+    h0 = EXEC_COUNTERS["subexpr_cache_hits"]
+    r = eng.query(parse("(0|1)&5"))
+    assert EXEC_COUNTERS["subexpr_cache_hits"] == h0
+    assert np.array_equal(
+        r.doc_ids,
+        eval_host(parse("(0|1)&5"),
+                  lambda t: (np.arange(10, dtype=np.uint32) if t == 1
+                             else postings[t])))

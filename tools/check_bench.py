@@ -110,6 +110,18 @@ RULES = {
         # rate to a scheduling regression
         Rule("virtual_runs[rate_x].served_qps", "min_ratio", 0.70),
     ],
+    "BENCH_boolean_qps.json": [
+        # expression-DAG serving invariants (absolute — any workload
+        # scale): every expression result through the async flusher stays
+        # bit-identical to the numpy set-algebra oracle, the shared-
+        # subtree workload actually exercises the subexpression cache
+        # (nonzero hits AND at least one device-free host merge), and
+        # throughput gates relatively on a same-scale baseline.
+        Rule("identical_to_oracle", "equals", 1),
+        Rule("subexpr_cache_hits", "min_abs", 1),
+        Rule("subexpr_host_merges", "min_abs", 1),
+        Rule("served_qps", "min_ratio", 0.70),
+    ],
     "BENCH_mesh2d_qps.json": [
         # 2-D topology invariants (absolute — hold at any workload scale):
         # every layout stays bit-identical to the single-device baseline,
