@@ -1,0 +1,225 @@
+"""Suggestion-service benchmark: top-K set-similarity QPS through the
+count-only execution path.
+
+Builds a corpus of random sets, replays it through the streaming binary
+ingestion pipeline (``repro.data.ingest``) into a
+:class:`~repro.serve.search.SuggestEngine`, pre-traces the hot count
+signatures (:meth:`SuggestEngine.warm`), and serves a Zipf-skewed probe
+workload in micro-batches — the skew makes repeated probes common, so the
+generation-stamped result cache absorbs part of the load exactly as live
+suggestion traffic would.  Every served top-K list is checked
+bit-identical (deterministic ``(-count, id)`` tie-break included) against
+an exact numpy oracle, and the warmed serving loop is asserted
+trace-free: ``EXEC_COUNTERS["count_traces"]`` must stay flat once warm.
+
+Reported: served suggest QPS (cache on), device-pass QPS (cache off),
+pre-filter selectivity (candidates kept / examined), count-path call and
+trace counters, ingestion throughput, and — when >= 4 forced host devices
+are available — a 2x2 (data x shard) mesh replay whose oracle equality
+folds into ``identical_to_oracle``.
+
+Run:  PYTHONPATH=src python benchmarks/fig_suggest_qps.py [--queries N]
+      [--sets N] [--out BENCH_suggest_qps.json]
+"""
+from __future__ import annotations
+
+import os
+
+# before the first jax import: forced host devices so the mesh section can
+# lay out, and the CPU backend explicitly (with libtpu on the image a
+# concurrently running jax process would otherwise serialize on the TPU
+# lockfile)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engine import EXEC_COUNTERS, pow2_tiers
+from repro.data.ingest import ingest_file, write_records
+from repro.exec.topology import make_topology
+from repro.serve.search import SuggestEngine
+
+
+def random_corpus(n_sets: int, set_size: int, distinct_pool: int,
+                  seed: int):
+    """Random sets over a shared element pool.
+
+    ``set_size**2 / distinct_pool`` pairs of sets overlap in expectation,
+    so top-K lists are nontrivial; two duplicated sets force exact count
+    ties, exercising the deterministic tie-break end-to-end.
+    """
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(1 << 24, size=distinct_pool, replace=False)
+    corpus = {
+        sid: np.unique(rng.choice(pool, size=set_size,
+                                  replace=False).astype(np.uint32))
+        for sid in range(n_sets)
+    }
+    corpus[n_sets] = corpus[0].copy()        # forced ties vs set 0
+    corpus[n_sets + 1] = corpus[0].copy()
+    return corpus
+
+
+def zipf_probe_log(set_ids, n_queries: int, seed: int, a: float = 1.3):
+    """Zipf-skewed probe ids: head probes repeat -> result-cache traffic."""
+    rng = np.random.default_rng(seed)
+    ids = sorted(set_ids)
+    ranks = np.minimum(rng.zipf(a, size=n_queries) - 1, len(ids) - 1)
+    return [ids[r] for r in ranks]
+
+
+def oracle_topk(corpus, sid: int, k: int):
+    pairs = []
+    for c in sorted(corpus):
+        if c == sid:
+            continue
+        n = len(np.intersect1d(corpus[sid], corpus[c]))
+        if n >= 1:
+            pairs.append((c, n))
+    pairs.sort(key=lambda p: (-p[1], p[0]))
+    return pairs[:k]
+
+
+def serve_log(eng: SuggestEngine, log, k: int, batch: int):
+    """Serve the probe log in micro-batches; returns (results, metrics)."""
+    EXEC_COUNTERS.reset()
+    t0 = time.perf_counter()
+    results = []
+    for i in range(0, len(log), batch):
+        requests = [(sid, k) for sid in log[i:i + batch]]
+        results.extend(eng.suggest_batch(requests))
+    wall_s = time.perf_counter() - t0
+    pre_in = EXEC_COUNTERS["suggest_prefilter_in"]
+    return results, {
+        "queries": len(log),
+        "served_qps": len(log) / wall_s,
+        "wall_s": wall_s,
+        "count_calls": EXEC_COUNTERS["count_calls"],
+        "count_traces": EXEC_COUNTERS["count_traces"],
+        "result_cache_hits": EXEC_COUNTERS["result_cache_hits"],
+        "prefilter_in": pre_in,
+        "prefilter_kept": EXEC_COUNTERS["suggest_prefilter_kept"],
+        "prefilter_selectivity": (
+            EXEC_COUNTERS["suggest_prefilter_kept"] / max(1, pre_in)),
+    }
+
+
+def mesh_section(corpus, log, k: int, batch: int, oracle):
+    """Replay the log on a 2x2 (data x shard) topology; identity-check."""
+    topo = make_topology(2, 2)
+    eng = SuggestEngine(corpus, topology=topo, shard_min_g=1)
+    eng.warm(sorted(set(log)), k, b_tiers=pow2_tiers(batch))
+    results, metrics = serve_log(eng, log, k, batch)
+    identical = all(r.suggestions == oracle[sid]
+                    for sid, r in zip(log, results))
+    if not identical:
+        print("MISMATCH vs oracle on the mesh section")
+    metrics.update({
+        "layout": topo.describe(),
+        "identical": int(identical),
+        "mesh2d_row_dispatches": EXEC_COUNTERS["mesh2d_row_dispatches"],
+    })
+    return metrics
+
+
+def run(n_queries: int = 192, n_sets: int = 64, set_size: int = 200,
+        distinct_pool: int = 4096, top_k: int = 8, batch: int = 16,
+        seed: int = 29):
+    corpus = random_corpus(n_sets, set_size, distinct_pool, seed)
+
+    # corpus arrives through the streaming binary format, one set at a time
+    eng = SuggestEngine({}, use_device=True)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = pathlib.Path(tmp) / "corpus.rsi"
+        write_records(path, sorted(corpus.items()))
+        t0 = time.perf_counter()
+        n_ingested = ingest_file(path, eng)
+        ingest_s = time.perf_counter() - t0
+    assert n_ingested == len(corpus)
+
+    log = zipf_probe_log(corpus, n_queries, seed + 1)
+    oracle = {sid: oracle_topk(corpus, sid, top_k) for sid in set(log)}
+
+    # pre-trace the count executables for every probe the log can draw, at
+    # every pow2 bucket tier a micro-batch of ``batch`` can produce (a
+    # request contributes at most one row per class signature, so bucket
+    # sizes never exceed the micro-batch)
+    eng.warm(sorted(set(log)), top_k, b_tiers=pow2_tiers(batch))
+    serve_log(eng, log[:batch], top_k, batch)    # absorb lazy-init tails
+
+    # cached serving: the Zipf head repeats -> result-cache hits
+    results, metrics = serve_log(eng, log, top_k, batch)
+    identical = all(r.suggestions == oracle[sid]
+                    for sid, r in zip(log, results))
+    if not identical:
+        print("MISMATCH vs numpy oracle on the cached run")
+
+    # pure device serving: cache cleared before every micro-batch
+    def uncached():
+        EXEC_COUNTERS.reset()
+        t0 = time.perf_counter()
+        out = []
+        for i in range(0, len(log), batch):
+            eng.cache.clear()
+            out.extend(eng.suggest_batch(
+                [(sid, top_k) for sid in log[i:i + batch]]))
+        return out, time.perf_counter() - t0
+
+    dev_results, dev_wall = uncached()
+    identical = identical and all(
+        r.suggestions == oracle[sid] for sid, r in zip(log, dev_results))
+    device_traces = EXEC_COUNTERS["count_traces"]
+
+    mesh = None
+    if len(jax.devices()) >= 4:
+        mesh = mesh_section(corpus, log, top_k, batch, oracle)
+        identical = identical and bool(mesh["identical"])
+
+    out = {
+        "devices": len(jax.devices()),
+        "queries": n_queries,
+        "n_sets": len(corpus),
+        "set_size": set_size,
+        "distinct_pool": distinct_pool,
+        "top_k": top_k,
+        "micro_batch": batch,
+        "identical_to_oracle": int(identical),
+        "ingest_records_per_s": n_ingested / max(ingest_s, 1e-9),
+        "device_qps": len(log) / dev_wall,
+        "count_traces_serving": device_traces,
+        "mesh2d": mesh,
+    }
+    out.update(metrics)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=192)
+    ap.add_argument("--sets", type=int, default=64)
+    ap.add_argument("--set-size", type=int, default=200)
+    ap.add_argument("--pool", type=int, default=4096)
+    ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--out", type=str,
+                    default=str(pathlib.Path(__file__).resolve().parent.parent
+                                / "BENCH_suggest_qps.json"))
+    args = ap.parse_args()
+    res = run(args.queries, args.sets, args.set_size, args.pool,
+              top_k=args.top_k, batch=args.batch)
+    print(json.dumps(res, indent=2))
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -109,6 +109,13 @@ __all__ = [
     "intersect_mesh2d_batch",
     "intersect_sharded",
     "intersect_sharded_batch",
+    "default_k_tier",
+    "dispatch_count_batch",
+    "dispatch_count_sharded_batch",
+    "dispatch_count_mesh2d_batch",
+    "intersect_count_batch",
+    "intersect_count_sharded_batch",
+    "intersect_count_mesh2d_batch",
     "dispatch_expr_batch",
     "dispatch_expr_sharded_batch",
     "dispatch_expr_mesh2d_batch",
@@ -217,6 +224,14 @@ class ExecCounters(dict):
       ``subexpr_host_merges`` — expression queries answered entirely
       host-side by merging cached subexpression values (zero device
       work).
+    - ``count_calls`` / ``count_traces`` — jit executions / retraces of
+      the count-only suggestion pipeline (``_intersect_count_batch`` and
+      its z-sharded / 2-D twins; one family — there is no overflow re-run
+      to count, the count path has no survivor buffer at all).
+    - ``suggest_prefilter_in`` / ``suggest_prefilter_kept`` — corpus
+      candidates considered / kept by the hashbin candidate pre-filter
+      (``exec/candidates.py::CandidateIndex``); the ratio is the
+      pre-filter's device-work saving on the suggest workload.
 
     Counters are process-global and unlocked: concurrent submitter threads
     can in principle lose an increment.  Exact-count assertions belong in
@@ -241,6 +256,8 @@ class ExecCounters(dict):
         "expr_calls", "expr_traces", "expr_rerun_calls",
         "subexpr_cache_hits", "subexpr_cache_misses",
         "subexpr_cache_stores", "subexpr_host_merges",
+        "count_calls", "count_traces",
+        "suggest_prefilter_in", "suggest_prefilter_kept",
     )
 
     def __init__(self):
@@ -853,6 +870,36 @@ def warm_from_plans(plans, get_set, top_k: int = 8,
                                          capacity=capacity)
                 EXEC_COUNTERS["warm_executions"] += 1
             continue
+        cands = getattr(sig, "cands", 0)
+        if cands > 0:
+            # count (suggest) signature: terms[0] is the probe, terms[1:]
+            # the candidate representatives, and ``capacity_tier`` holds
+            # the top-K selection tier (the count path has no survivor
+            # buffer).  Route exactly as live dispatch will.
+            k = capacity or 8
+            for b in b_tiers:
+                if mesh_routed and topology is not None:
+                    resolve = get_sharded_set or get_set
+                    row = (resolve(terms[0]), [resolve(t) for t in terms[1:]])
+                    intersect_count_mesh2d_batch(
+                        [row] * b, k, topology, use_pallas=use_pallas)
+                elif shards > 1:
+                    resolve = get_sharded_set or get_set
+                    row = (resolve(terms[0]), [resolve(t) for t in terms[1:]])
+                    intersect_count_sharded_batch(
+                        [row] * b, k, mesh, axis=axis, use_pallas=use_pallas)
+                elif (topology is not None and topology.replicas > 1
+                      and get_replica_set is not None):
+                    for r in range(topology.replicas):
+                        row = (get_replica_set(r, terms[0]),
+                               [get_replica_set(r, t) for t in terms[1:]])
+                        intersect_count_batch(
+                            [row] * b, k, use_pallas=use_pallas)
+                else:
+                    row = (get_set(terms[0]), [get_set(t) for t in terms[1:]])
+                    intersect_count_batch([row] * b, k, use_pallas=use_pallas)
+                EXEC_COUNTERS["warm_executions"] += 1
+            continue
         if mesh_routed:
             if capacity is not None:
                 capacity = default_capacity_per_shard(
@@ -891,7 +938,8 @@ def clear_exec_jit_cache() -> None:
     version lacks ``clear_cache``.
     """
     for fn in (_intersect_k_batch, _intersect_k_sharded_batch,
-               _eval_expr_batch, _eval_expr_sharded_batch):
+               _eval_expr_batch, _eval_expr_sharded_batch,
+               _intersect_count_batch, _intersect_count_sharded_batch):
         clear = getattr(fn, "clear_cache", None)
         if clear is not None:
             clear()
@@ -1353,6 +1401,420 @@ def intersect_mesh2d_batch(
         queries, topology, capacity_per_shard=capacity_per_shard,
         use_pallas=use_pallas,
     ).collect()
+
+
+# --------------------------------------------------------------------------
+# count-only execution: the set-similarity suggestion workload
+# --------------------------------------------------------------------------
+#
+# ``suggest(set_id, k)`` scores one probe set's intersection *cardinality*
+# against C candidate sets and keeps the top K — the inner loop of
+# set-similarity join.  Cardinality needs none of the point-query
+# machinery: no phase-1 filter (every group tuple is counted, there is
+# nothing to recover), no survivor compaction, no capacity buffer, and
+# therefore NO overflow re-run — each (probe, candidate) pair reduces to
+# one int32 and a bucket is one packed (B, C) count matrix.
+#
+# Exactness without a filter: with all sets partitioned by the same
+# permutation g, iterate the G = 2^t_max group tuples of the DEEPER set
+# and count its group-g elements present in the other set's aligned group
+# ``g >> (t_max - t_min)`` (kernels.count.pair_count).  A common element x
+# appears in exactly ONE tuple of the deeper set — the one indexed by its
+# full-depth prefix — so summing the per-tuple counts over all G tuples
+# counts x exactly once: the per-pair sum IS |probe ∩ candidate|.
+#
+# Top-K selection runs on device inside the same jit: padded candidate
+# slots (the C axis pads to the signature's pow2 ``cands`` tier) are
+# masked to -1 via the traced per-query candidate count, and
+# ``jax.lax.top_k`` — which breaks ties by LOWEST index — runs over
+# candidates the callers order by ascending id, so equal counts
+# deterministically prefer the smallest candidate id.  The host merges
+# per-bucket top lists by ``(-count, id)``.
+#
+# Sharding: counts are additive over disjoint z-ranges (Theorem 3.7 —
+# each common element lives in exactly one z-range), so the z-sharded
+# twin computes per-shard (B, C) partial counts with zero communication
+# and sums them outside the shard_map (the only cross-device traffic is
+# the B*C count matrix — the analogue of the point path's compact result
+# buffers).  Top-K then runs on the summed totals in the same jit.  The
+# 2-D path drives replica rows host-side exactly like
+# :func:`dispatch_mesh2d_batch`.
+
+
+def default_k_tier(k: int) -> int:
+    """Static top-K selection tier: next power of two, floored at 8.
+
+    Plays the role ``default_capacity`` plays for the point path — the
+    requested ``k`` quantizes UP to a tier so nearby k values share one
+    compiled executable; the host slices the device's top ``k_tier`` list
+    down to the requested k.  Stored in ``ShapeSig.capacity_tier`` for
+    suggest plans (the count path has no survivor buffer, so the field is
+    free to key the selection width instead)."""
+    return 1 << max(3, (int(k) - 1).bit_length())
+
+
+def _count_block(pv: jnp.ndarray, cv: jnp.ndarray, ts: Tuple[int, int],
+                 use_pallas) -> jnp.ndarray:
+    """(B, Gp, gp) probe x (B, C, Gc, gc) candidates -> (B, C) counts.
+
+    Shared by the plain jit and the per-shard local block (shapes are then
+    the local z-slices; the t-difference shift is shard-invariant because
+    equal z-ranges of both sets land on the same shard).  The deeper set
+    supplies the iterated groups (counted once each); the shallower set's
+    groups are gathered through the prefix-alignment shift — a broadcast
+    in disguise, as in :func:`_aligned_images`.
+    """
+    tp, tc = ts
+    B = pv.shape[0]
+    C = cv.shape[1]
+    if tp >= tc:
+        G = pv.shape[1]
+        a = jnp.broadcast_to(pv[:, None], (B, C) + pv.shape[1:])
+        if tp == tc:
+            b = cv
+        else:
+            idx = jnp.arange(G, dtype=jnp.int32) >> (tp - tc)
+            b = cv[:, :, idx]
+    else:
+        G = cv.shape[2]
+        idx = jnp.arange(G, dtype=jnp.int32) >> (tc - tp)
+        a = cv
+        b = jnp.broadcast_to(pv[:, idx][:, None],
+                             (B, C, G, pv.shape[-1]))
+    per_tuple = ops.pair_count(a, b, use_pallas)        # (B, C, G)
+    return per_tuple.sum(axis=-1, dtype=jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ts", "gmaxes", "k_sel", "use_pallas", "trace_counter"),
+)
+def _intersect_count_batch(
+    probe_vals: Tuple[jnp.ndarray, ...],
+    cand_vals: Tuple[Tuple[jnp.ndarray, ...], ...],
+    n_cands: jnp.ndarray,
+    ts: Tuple[int, int],
+    gmaxes: Tuple[int, int],
+    k_sel: int,
+    use_pallas,
+    trace_counter: str = "count_traces",
+):
+    """One jit execution for a whole same-signature suggest bucket.
+
+    ``probe_vals``: B arrays of (2^{t_p}, gmax_p) int32; ``cand_vals``: B
+    tuples of C arrays of (2^{t_c}, gmax_c) int32 — stacked inside the jit
+    like the point pipeline.  ``n_cands`` is a traced (B,) int32 of REAL
+    candidate counts per row; slots at or past it (C-axis padding repeats
+    candidate 0) are masked to count -1 so they can never win top-K and
+    the executable never retraces on the fill level.  Returns
+    ``(top_counts, top_idx)``, each (B, k_sel) int32 — ``top_idx`` indexes
+    the row's candidate list, which callers order by ascending id so
+    ``lax.top_k``'s lowest-index tie-break is the smallest-id rule.
+    """
+    EXEC_COUNTERS[trace_counter] += 1  # python side effect: trace-time only
+    pv = jnp.stack(probe_vals)                            # (B, Gp, gp)
+    cv = jnp.stack([jnp.stack(row) for row in cand_vals])  # (B, C, Gc, gc)
+    counts = _count_block(pv, cv, ts, use_pallas)         # (B, C)
+    C = cv.shape[1]
+    slot = jnp.arange(C, dtype=jnp.int32)[None, :]
+    masked = jnp.where(slot < n_cands[:, None], counts, -1)
+    return jax.lax.top_k(masked, k_sel)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "ts", "gmaxes", "k_sel", "use_pallas",
+                     "trace_counter"),
+)
+def _intersect_count_sharded_batch(
+    probe_vals: Tuple[jnp.ndarray, ...],
+    cand_vals: Tuple[Tuple[jnp.ndarray, ...], ...],
+    n_cands: jnp.ndarray,
+    mesh: Mesh,
+    axis: str,
+    ts: Tuple[int, int],
+    gmaxes: Tuple[int, int],
+    k_sel: int,
+    use_pallas,
+    trace_counter: str = "count_traces",
+):
+    """The z-sharded twin of :func:`_intersect_count_batch`.
+
+    Each shard computes partial (B, C) counts over its local z-range with
+    no communication (counts are additive over disjoint z-ranges); the
+    per-shard matrices concatenate to (n_shards, B, C), sum OUTSIDE the
+    shard_map (still inside this jit), and top-K runs on the totals.
+    Requires both 2^{t_p} and 2^{t_c} to split evenly over the mesh.
+    """
+    EXEC_COUNTERS[trace_counter] += 1  # python side effect: trace-time only
+    pv = jnp.stack(probe_vals)                            # (B, Gp, gp)
+    cv = jnp.stack([jnp.stack(row) for row in cand_vals])  # (B, C, Gc, gc)
+
+    def local_fn(lpv, lcv):
+        # leading length-1 shard axis so out_specs concatenate the partial
+        # count matrices into (n_shards, B, C) without communication
+        return _count_block(lpv, lcv, ts, use_pallas)[None]
+
+    from jax.experimental.shard_map import shard_map
+
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(None, axis), P(None, None, axis)),
+        out_specs=P(axis), check_rep=False,
+    )
+    counts = fn(pv, cv).sum(axis=0)                       # (B, C)
+    C = cv.shape[1]
+    slot = jnp.arange(C, dtype=jnp.int32)[None, :]
+    masked = jnp.where(slot < n_cands[:, None], counts, -1)
+    return jax.lax.top_k(masked, k_sel)
+
+
+def _count_signature(queries) -> Tuple[Tuple[int, int], Tuple[int, int], int]:
+    """Validate a suggest bucket and return (ts, gmaxes, c_tier).
+
+    Every probe must share (t, gmax), every candidate must share (t,
+    gmax), and the candidate-axis tier is the pow2 ceiling of the largest
+    row's candidate count (matching ``ShapeSig.cands`` for plans bucketed
+    by the planner).
+    """
+    probe0, cands0 = queries[0]
+    assert len(cands0) >= 1, "suggest rows need at least one candidate"
+    tp, gp = probe0.t, probe0.gmax
+    tc, gc = cands0[0].t, cands0[0].gmax
+    max_c = 0
+    for probe, cands in queries:
+        assert (probe.t, probe.gmax) == (tp, gp), (
+            "bucket mixes probe shapes")
+        assert len(cands) >= 1, "suggest rows need at least one candidate"
+        for c in cands:
+            assert (c.t, c.gmax) == (tc, gc), "bucket mixes candidate shapes"
+        max_c = max(max_c, len(cands))
+    c_tier = 1 << (max_c - 1).bit_length()
+    return (tp, tc), (gp, gc), c_tier
+
+
+def _pack_count_rows(queries, rows: List[int], c_tier: int):
+    """Stack bucket rows into the count jit's pytree inputs: pad each
+    row's candidate list to ``c_tier`` by repeating candidate 0 (masked
+    off by ``n_cands``), B-pad by repeating row 0 (dropped at collect)."""
+    probe_vals = tuple(queries[i][0].vals for i in rows)
+    cand_vals = tuple(
+        tuple((queries[i][1] + [queries[i][1][0]]
+               * (c_tier - len(queries[i][1])))[j].vals
+              for j in range(c_tier))
+        for i in rows
+    )
+    n_cands = jnp.asarray([len(queries[i][1]) for i in rows], jnp.int32)
+    return probe_vals, cand_vals, n_cands
+
+
+def _collect_count(handles, queries, k_sel: int, extra_stats: Dict,
+                   row_of=None):
+    """Shared collect for the count paths: one transfer, no re-run loop.
+
+    ``row_of`` maps query index -> (handle key, local row) for the 2-D
+    host-driven layout; None means a single handle covering all rows."""
+    fetched = jax.device_get(handles)
+    results: List[Tuple[np.ndarray, Dict]] = []
+    for qi, (probe, cands) in enumerate(queries):
+        if row_of is None:
+            top_counts, top_idx = fetched
+            row = qi
+        else:
+            key, row = row_of(qi)
+            top_counts, top_idx = fetched[key]
+        pairs = np.stack(
+            [top_idx[row], top_counts[row]], axis=1).astype(np.int32)
+        stats = {
+            "n_cands": len(cands),
+            "k_sel": k_sel,
+            "batch_size": len(queries),
+            **extra_stats,
+        }
+        if row_of is not None:
+            stats["replica"] = key
+        results.append((pairs, stats))
+    return results
+
+
+def dispatch_count_batch(
+    queries: Sequence[Tuple[DeviceSet, Sequence[DeviceSet]]],
+    k: int,
+    use_pallas="auto",
+) -> PendingBatch:
+    """Issue one count-only suggest bucket without blocking.
+
+    ``queries[i]`` is ``(probe, candidates)`` — candidates ordered by
+    ascending id by the caller (the tie-break contract).  ``k`` is the
+    selection tier (``ShapeSig.capacity_tier`` for planned buckets); the
+    device returns each row's top ``min(k, c_tier)`` (idx, count) pairs
+    and the host keeps what it needs.  ONE pass per bucket — the count
+    path has no overflow re-run by construction.  Counters:
+    ``count_calls`` per pass, ``count_traces`` per compile.
+    """
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    queries = [(p, list(c)) for p, c in queries]
+    ts, gmaxes, c_tier = _count_signature(queries)
+    k_sel = min(int(k), c_tier)
+    b_tier = 1 << (len(queries) - 1).bit_length()
+    rows = list(range(len(queries))) + [0] * (b_tier - len(queries))
+    probe_vals, cand_vals, n_cands = _pack_count_rows(queries, rows, c_tier)
+    EXEC_COUNTERS["count_calls"] += 1
+    handles = _intersect_count_batch(
+        probe_vals, cand_vals, n_cands, ts, gmaxes, k_sel, use_pallas)
+    extra = {"c_tier": c_tier, "group_tuples": 1 << max(ts)}
+    return PendingBatch(
+        n_queries=len(queries), handles=handles,
+        _collect=lambda: _collect_count(handles, queries, k_sel, extra),
+    )
+
+
+def intersect_count_batch(
+    queries: Sequence[Tuple[DeviceSet, Sequence[DeviceSet]]],
+    k: int,
+    use_pallas="auto",
+) -> List[Tuple[np.ndarray, Dict]]:
+    """Count-only suggest bucket, synchronously: B (probe, candidates)
+    rows -> per row a (k_sel, 2) int32 array of (candidate index, count)
+    pairs, best-first under the ``(-count, smallest id)`` order, plus
+    stats.  Padded / past-the-end slots carry count -1; the serving layer
+    drops counts < 1 (a zero-overlap candidate is not a suggestion).  The
+    synchronous composition of :func:`dispatch_count_batch` +
+    :meth:`PendingBatch.collect`."""
+    return dispatch_count_batch(queries, k, use_pallas=use_pallas).collect()
+
+
+def dispatch_count_sharded_batch(
+    queries: Sequence[Tuple[DeviceSet, Sequence[DeviceSet]]],
+    k: int,
+    mesh: Mesh,
+    axis: str = SHARD_AXIS,
+    use_pallas="auto",
+) -> PendingBatch:
+    """Issue one suggest bucket z-sharded over ``mesh`` without blocking.
+
+    Same contract as :func:`dispatch_count_batch`; both the probe's and
+    the candidates' z axes must split evenly over the mesh (the planner's
+    routing rule guarantees it for planned buckets).  Pass z-sharded
+    mirrors to avoid a per-call reshard.
+    """
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    n_shards = mesh.shape[axis]
+    queries = [(p, list(c)) for p, c in queries]
+    ts, gmaxes, c_tier = _count_signature(queries)
+    assert (1 << ts[0]) % n_shards == 0 and (1 << ts[1]) % n_shards == 0, (
+        f"both z axes (t={ts}) must split over {n_shards} shards"
+    )
+    k_sel = min(int(k), c_tier)
+    b_tier = 1 << (len(queries) - 1).bit_length()
+    rows = list(range(len(queries))) + [0] * (b_tier - len(queries))
+    probe_vals, cand_vals, n_cands = _pack_count_rows(queries, rows, c_tier)
+    EXEC_COUNTERS["count_calls"] += 1
+    handles = _intersect_count_sharded_batch(
+        probe_vals, cand_vals, n_cands, mesh, axis, ts, gmaxes, k_sel,
+        use_pallas)
+    extra = {"c_tier": c_tier, "group_tuples": 1 << max(ts),
+             "n_shards": n_shards}
+    return PendingBatch(
+        n_queries=len(queries), handles=handles,
+        _collect=lambda: _collect_count(handles, queries, k_sel, extra),
+    )
+
+
+def intersect_count_sharded_batch(
+    queries: Sequence[Tuple[DeviceSet, Sequence[DeviceSet]]],
+    k: int,
+    mesh: Mesh,
+    axis: str = SHARD_AXIS,
+    use_pallas="auto",
+) -> List[Tuple[np.ndarray, Dict]]:
+    """Synchronous composition of :func:`dispatch_count_sharded_batch` +
+    :meth:`PendingBatch.collect` — bit-identical to the plain count path
+    (counts are additive over z-ranges; top-K runs on the exact totals)."""
+    return dispatch_count_sharded_batch(
+        queries, k, mesh, axis=axis, use_pallas=use_pallas).collect()
+
+
+def dispatch_count_mesh2d_batch(
+    queries: Sequence[Tuple[DeviceSet, Sequence[DeviceSet]]],
+    k: int,
+    topology,
+    use_pallas="auto",
+) -> PendingBatch:
+    """Issue one suggest bucket over a 2-D ``(data, shard)`` topology.
+
+    The count twin of :func:`dispatch_mesh2d_batch`: the batch axis is cut
+    into contiguous equal slices driven host-side (one async row dispatch
+    each — the z-sharded count jit on the row's submesh, or the plain
+    count jit when ``shards == 1``), rows overlap in flight, and one
+    ``device_get`` collects everything.  ``queries[i]`` resolves per row:
+    probes/candidates are :class:`ReplicatedDeviceSet` mirrors.  Counters:
+    ``count_calls`` per row dispatch (each row is one jit execution),
+    ``mesh2d_row_dispatches`` per row as in the point path.
+    """
+    if not len(queries):
+        return PendingBatch(n_queries=0, _collect=lambda: [])
+    n_replicas = topology.replicas
+    n_shards = topology.shards
+    queries = [(p, list(c)) for p, c in queries]
+    ts = (queries[0][0].t, queries[0][1][0].t)
+    if n_shards > 1:
+        assert ((1 << ts[0]) % n_shards == 0
+                and (1 << ts[1]) % n_shards == 0), (
+            f"both z axes (t={ts}) must split over {n_shards} shards"
+        )
+    b_tier = max(n_replicas, 1 << (len(queries) - 1).bit_length())
+    rows = list(range(len(queries))) + [0] * (b_tier - len(queries))
+    slice_len = b_tier // n_replicas
+    c_tier = 1 << (max(len(c) for _, c in queries) - 1).bit_length()
+    k_sel = min(int(k), c_tier)
+    handles = {}
+    for rr in range(n_replicas):
+        if rr * slice_len >= len(queries):
+            continue  # slice is pure padding: nothing real to compute
+        chunk = rows[rr * slice_len:(rr + 1) * slice_len]
+        row_queries = [
+            (queries[i][0].row(rr), [c.row(rr) for c in queries[i][1]])
+            for i in chunk
+        ]
+        tsr, gmaxes, _ = _count_signature(row_queries)
+        probe_vals, cand_vals, n_cands = _pack_count_rows(
+            row_queries, list(range(len(chunk))), c_tier)
+        EXEC_COUNTERS["count_calls"] += 1
+        EXEC_COUNTERS["mesh2d_row_dispatches"] += 1
+        if n_shards > 1:
+            handles[rr] = _intersect_count_sharded_batch(
+                probe_vals, cand_vals, n_cands, topology.row_mesh(rr),
+                topology.shard_axis, tsr, gmaxes, k_sel, use_pallas)
+        else:
+            handles[rr] = _intersect_count_batch(
+                probe_vals, cand_vals, n_cands, tsr, gmaxes, k_sel,
+                use_pallas)
+
+    def row_of(qi: int) -> Tuple[int, int]:
+        return qi // slice_len, qi % slice_len
+
+    extra = {"c_tier": c_tier, "group_tuples": 1 << max(ts),
+             "n_shards": n_shards, "n_replicas": n_replicas}
+    return PendingBatch(
+        n_queries=len(queries), handles=handles,
+        _collect=lambda: _collect_count(handles, queries, k_sel, extra,
+                                        row_of=row_of),
+    )
+
+
+def intersect_count_mesh2d_batch(
+    queries: Sequence[Tuple[DeviceSet, Sequence[DeviceSet]]],
+    k: int,
+    topology,
+    use_pallas="auto",
+) -> List[Tuple[np.ndarray, Dict]]:
+    """Synchronous composition of :func:`dispatch_count_mesh2d_batch` +
+    :meth:`PendingBatch.collect`."""
+    return dispatch_count_mesh2d_batch(
+        queries, k, topology, use_pallas=use_pallas).collect()
 
 
 # --------------------------------------------------------------------------

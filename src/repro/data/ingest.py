@@ -1,0 +1,120 @@
+"""Streaming binary ingestion for the suggestion corpus.
+
+The suggestion service (:class:`repro.serve.search.SuggestEngine`) grows
+its corpus incrementally — sets arrive over time from logs, crawls, or a
+network feed, not as one in-memory dict.  This module defines a tiny
+length-prefixed little-endian record format and a chunk-tolerant streaming
+reader, so a corpus can be replayed from disk (or any byte iterator) and
+folded into a live engine one set at a time:
+
+    file   := MAGIC (4 bytes, b"RSI1") record*
+    record := set_id:uint32  n:uint32  values:uint32[n]
+
+Everything is little-endian uint32.  The reader consumes *byte chunks* of
+arbitrary size (``stream_records``): a record split across a chunk
+boundary is buffered and completed by the next chunk, so the format works
+unchanged over sockets, mmap windows, or ``iter(lambda: f.read(1 << 16),
+b"")``.  A truncated tail (stream cut mid-record) raises ``ValueError``
+rather than silently dropping data.
+
+Duplicate ``set_id`` records are replacements, last-writer-wins — the same
+semantics as :meth:`SuggestEngine.add_set`, so replaying a log that
+appends updated versions of a set converges to the latest snapshot.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "MAGIC", "write_records", "read_records", "stream_records",
+    "ingest_file",
+]
+
+MAGIC = b"RSI1"
+_U32 = np.dtype("<u4")
+
+
+def write_records(path_or_stream,
+                  records: Iterable[Tuple[int, Sequence[int]]]) -> int:
+    """Serialize ``(set_id, values)`` pairs; returns the record count.
+
+    Accepts a filesystem path or any binary stream with ``write``.
+    Values are cast to uint32 (the element domain of the whole repo);
+    order inside a record is preserved verbatim — readers normalize.
+    """
+    own = not hasattr(path_or_stream, "write")
+    stream = open(path_or_stream, "wb") if own else path_or_stream
+    n_records = 0
+    try:
+        stream.write(MAGIC)
+        for set_id, values in records:
+            vals = np.asarray(values, _U32)
+            header = np.asarray([set_id, vals.size], _U32)
+            stream.write(header.tobytes())
+            stream.write(vals.tobytes())
+            n_records += 1
+    finally:
+        if own:
+            stream.close()
+    return n_records
+
+
+def stream_records(chunks: Iterable[bytes]
+                   ) -> Iterator[Tuple[int, np.ndarray]]:
+    """Incrementally decode records from arbitrary-size byte chunks.
+
+    The streaming half of the format: yields ``(set_id, values)`` as soon
+    as each record is complete, holding only the unfinished tail between
+    chunks (memory is O(largest record), not O(file)).  Raises
+    ``ValueError`` on a bad magic or a truncated final record.
+    """
+    buf = b""
+    seen_magic = False
+    for chunk in chunks:
+        buf += bytes(chunk)
+        if not seen_magic:
+            if len(buf) < len(MAGIC):
+                continue
+            if buf[:len(MAGIC)] != MAGIC:
+                raise ValueError(
+                    f"bad magic {buf[:len(MAGIC)]!r}; expected {MAGIC!r}")
+            buf = buf[len(MAGIC):]
+            seen_magic = True
+        while len(buf) >= 8:
+            set_id, n = np.frombuffer(buf, _U32, count=2)
+            end = 8 + 4 * int(n)
+            if len(buf) < end:
+                break  # record straddles the chunk boundary — wait
+            yield int(set_id), np.frombuffer(buf, _U32, count=int(n),
+                                             offset=8).copy()
+            buf = buf[end:]
+    if not seen_magic and buf:
+        raise ValueError(f"bad magic {buf[:len(MAGIC)]!r}; expected {MAGIC!r}")
+    if buf:
+        raise ValueError(f"truncated record: {len(buf)} trailing bytes")
+
+
+def read_records(path, chunk_size: int = 1 << 16
+                 ) -> Iterator[Tuple[int, np.ndarray]]:
+    """Stream records from a file path in ``chunk_size``-byte reads."""
+    with open(path, "rb") as f:
+        yield from stream_records(iter(lambda: f.read(chunk_size), b""))
+
+
+def ingest_file(path, engine, chunk_size: int = 1 << 16) -> int:
+    """Fold a record file into a live suggestion engine, one set at a
+    time (each record is queryable before the next is decoded).
+
+    ``engine`` is anything with ``add_set(set_id, values)`` —
+    :class:`~repro.serve.search.SuggestEngine` in practice.  Returns the
+    number of records applied.  Empty-value records are skipped (an empty
+    set can never be suggested and the index builder requires n >= 1).
+    """
+    n_applied = 0
+    for set_id, values in read_records(path, chunk_size=chunk_size):
+        if values.size:
+            engine.add_set(set_id, values)
+            n_applied += 1
+    return n_applied

@@ -60,8 +60,8 @@ __all__ = ["adaptive_key", "CapacityModel", "AdaptiveDeadline"]
 
 def adaptive_key_parts(k: int, ts: Tuple[int, ...],
                        gmaxes: Tuple[int, ...], shards: int,
-                       replicas: int = 1, eshape: Optional[Tuple] = None
-                       ) -> Tuple:
+                       replicas: int = 1, eshape: Optional[Tuple] = None,
+                       cands: int = 0) -> Tuple:
     """THE adaptive learning key, from raw signature parts.  Single source
     of truth: the planner builds the key from parts before a ``ShapeSig``
     exists, the model builds it from the executed sig — both MUST agree or
@@ -72,8 +72,14 @@ def adaptive_key_parts(k: int, ts: Tuple[int, ...],
     ``eshape`` (the leaf-erased expression shape; ``None`` for flat
     conjunctions) is part of the key for the same reason — ``(a∪b)∩c``
     and ``(a∩b)∩c`` over the same leaves have very different survivor
-    distributions, and each expression shape is its own executable."""
-    return (k, ts, gmaxes, shards, replicas, eshape)
+    distributions, and each expression shape is its own executable.
+    ``cands`` (the suggest candidate-axis tier; 0 otherwise) keeps
+    count-only signatures out of the point-query keyspace — they have no
+    survivor buffer, so the model never learns for them, but a shared key
+    would let their (absent) history shadow a real one.  ``eshape`` stays
+    the LAST element (tests and telemetry tooling read ``key[-1]``), so
+    ``cands`` slots in before it."""
+    return (k, ts, gmaxes, shards, replicas, cands, eshape)
 
 
 def adaptive_key(sig) -> Tuple:
@@ -83,7 +89,8 @@ def adaptive_key(sig) -> Tuple:
     return adaptive_key_parts(sig.k, sig.ts, sig.gmaxes,
                               getattr(sig, "shards", 1),
                               replicas=getattr(sig, "replicas", 1),
-                              eshape=getattr(sig, "eshape", None))
+                              eshape=getattr(sig, "eshape", None),
+                              cands=getattr(sig, "cands", 0))
 
 
 def _pow2_ceil(x: int) -> int:
@@ -206,6 +213,11 @@ class CapacityModel:
         as the fresh window dictates.  Hooks fire after the lock is
         released.
         """
+        if getattr(sig, "cands", 0):
+            # count-only (suggest) buckets have no survivor buffer to size:
+            # their capacity_tier is the top-K selection tier, fixed by the
+            # request's k — nothing to learn, nothing to observe
+            return
         key = adaptive_key(sig)
         if getattr(sig, "eshape", None) is not None:
             # expression buckets: the static prior and the hard ceiling are

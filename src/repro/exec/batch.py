@@ -52,9 +52,10 @@ import numpy as np
 from ..core.engine import (
     EXEC_COUNTERS, SHARD_AXIS, DeviceSet, PendingBatch,
     default_capacity_per_shard, default_expr_capacity_per_shard,
-    dispatch_device_batch, dispatch_expr_batch, dispatch_expr_mesh2d_batch,
-    dispatch_expr_sharded_batch, dispatch_mesh2d_batch,
-    dispatch_sharded_batch, expr_total_width,
+    dispatch_count_batch, dispatch_count_mesh2d_batch,
+    dispatch_count_sharded_batch, dispatch_device_batch, dispatch_expr_batch,
+    dispatch_expr_mesh2d_batch, dispatch_expr_sharded_batch,
+    dispatch_mesh2d_batch, dispatch_sharded_batch, expr_total_width,
 )
 from .expr import subexpr_keys
 from .plan import QueryPlan, ShapeSig, plan_query
@@ -290,6 +291,59 @@ def dispatch_bucket(
                 rows, eshape, capacity=sig.capacity_tier,
                 sub_keys=[sub_keys[qi] for qi, _ in items],
             )
+        EXEC_COUNTERS["inflight_dispatches"] += 1
+        _inflight_enter()
+        return InFlightBucket(
+            sig, items, pending, t0, capacity_model=capacity_model,
+            topology=topology, replica=replica, weight=weight,
+        )
+    cands = getattr(sig, "cands", 0)
+    if cands > 0:
+        # count-only (suggest) bucket: plan.terms is (probe, *candidates)
+        # in tie-break order (candidates ascending), sig.capacity_tier is
+        # the top-K selection tier.  Same routing tree as the point path,
+        # but the dispatches are single-pass — no overflow re-run exists.
+        k = sig.capacity_tier
+        if topology is not None and (shards > 1 or replicas > 1):
+            assert get_sharded_set is not None, (
+                "2-D count buckets resolve through the engine's "
+                "ReplicatedDeviceSet mirrors (get_sharded_set)"
+            )
+            rows = [(get_sharded_set(plan.terms[0]),
+                     [get_sharded_set(t) for t in plan.terms[1:]])
+                    for _, plan in items]
+            pending = dispatch_count_mesh2d_batch(
+                rows, k, topology, use_pallas=use_pallas)
+        elif shards > 1:
+            assert mesh is not None, "sharded bucket needs the engine's mesh"
+            resolve = get_sharded_set or get_set
+            rows = [(resolve(plan.terms[0]),
+                     [resolve(t) for t in plan.terms[1:]])
+                    for _, plan in items]
+            pending = dispatch_count_sharded_batch(
+                rows, k, mesh, axis=shard_axis, use_pallas=use_pallas)
+        elif (topology is not None and topology.replicas > 1
+              and get_replica_set is not None):
+            # balancer cost: B * C * G count-matrix cells (the count path's
+            # analogue of the flat bucket's B * G phase-1 rows)
+            weight = float(len(items) * cands * (1 << max(sig.ts)))
+            replica = topology.balancer.acquire(weight)
+            try:
+                rows = [(get_replica_set(replica, plan.terms[0]),
+                         [get_replica_set(replica, t)
+                          for t in plan.terms[1:]])
+                        for _, plan in items]
+                pending = dispatch_count_batch(
+                    rows, k, use_pallas=use_pallas)
+            except BaseException:
+                topology.balancer.release(replica, weight)
+                raise
+            EXEC_COUNTERS["replica_dispatches"] += 1
+        else:
+            rows = [(get_set(plan.terms[0]),
+                     [get_set(t) for t in plan.terms[1:]])
+                    for _, plan in items]
+            pending = dispatch_count_batch(rows, k, use_pallas=use_pallas)
         EXEC_COUNTERS["inflight_dispatches"] += 1
         _inflight_enter()
         return InFlightBucket(

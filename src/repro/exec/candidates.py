@@ -1,0 +1,128 @@
+"""Hashbin candidate pre-filter for the suggestion (set-similarity) path.
+
+Scoring a probe against every corpus set on the device would make
+``suggest`` O(corpus) in device work.  The paper's HashBin structure
+(Section 3.3) already gives each set a w-bin occupancy signature for free:
+hash ``h_0`` maps elements into ``[0, w)`` bins, and two sets sharing a
+common element necessarily occupy the SAME bin under the same family — so
+``popcount(bins(probe) & bins(candidate)) >= 1`` for every candidate with
+non-empty intersection.  The pre-filter keeps exactly the candidates whose
+shared-bin count clears ``min_shared_bins``; at the default threshold of 1
+it can NEVER drop a true-overlap candidate (no false negatives — the
+device's count pass stays exact over the kept set), while disjoint
+candidates survive only by hash collision.  This is the same
+signature-then-verify shape as cuckoo-filter pre-probing (Goodrich, arXiv
+1708.09059): a cheap word-parallel host screen in front of the exact
+device kernels.
+
+Ranking and capping: kept candidates order by ``(-shared_bins, id)`` —
+most plausible first, ties to the smallest id (the global suggest
+tie-break) — so an optional ``max_candidates`` cap keeps the most
+promising prefix.  A cap can drop true positives (shared bins only bound
+the intersection from above by min(n_probe, n_cand) and below by
+shared/m-ish collision noise), so exact-oracle callers leave it ``None``.
+
+Counters: ``EXEC_COUNTERS["suggest_prefilter_in"]`` counts candidates
+examined, ``["suggest_prefilter_kept"]`` candidates kept — the ratio is
+the screen's selectivity, surfaced in benchmark stats.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.engine import EXEC_COUNTERS
+from ..core.hashing import HashFamily
+
+__all__ = ["CandidateIndex"]
+
+
+class CandidateIndex:
+    """Per-set hash-bin occupancy bitmaps + the shared-bin screen.
+
+    Host-side numpy, append-only: :meth:`add` folds one set's values
+    through the family's ``h_0`` into a packed ``w``-bit occupancy word
+    row; :meth:`candidates` screens the whole corpus against one probe
+    with a single vectorized AND + popcount.  The structure is the
+    word-representation half of the paper's HashBin, pooled per *set*
+    instead of per group — O(corpus * w / 8) bytes total.
+
+    All sets must share one :class:`~repro.core.hashing.HashFamily` (the
+    screen's soundness argument needs a common ``h_0``); the serving layer
+    passes the same family its indexes use.
+    """
+
+    def __init__(self, family: HashFamily):
+        self.family = family
+        self.w = int(family.w)
+        self.words = self.w // 32
+        assert self.words * 32 == self.w, "w must be a multiple of 32"
+        self._ids: List = []
+        self._pos: Dict = {}
+        self._rows: List[np.ndarray] = []
+        self._matrix: Optional[np.ndarray] = None  # (n_sets, words) cache
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def __contains__(self, set_id) -> bool:
+        return set_id in self._pos
+
+    def _signature(self, values: np.ndarray) -> np.ndarray:
+        bins = np.asarray(
+            self.family.apply(np.asarray(values, np.uint32), 0), np.uint32)
+        row = np.zeros(self.words, np.uint32)
+        np.bitwise_or.at(row, bins >> np.uint32(5),
+                         np.uint32(1) << (bins & np.uint32(31)))
+        return row
+
+    def add(self, set_id, values: Sequence[int]) -> None:
+        """Register (or refresh) one corpus set's occupancy signature."""
+        row = self._signature(np.asarray(values, np.uint32))
+        if set_id in self._pos:
+            self._rows[self._pos[set_id]] = row
+        else:
+            self._pos[set_id] = len(self._ids)
+            self._ids.append(set_id)
+            self._rows.append(row)
+        self._matrix = None  # stacked cache is stale
+
+    def _stacked(self) -> np.ndarray:
+        if self._matrix is None:
+            self._matrix = (np.stack(self._rows) if self._rows
+                            else np.zeros((0, self.words), np.uint32))
+        return self._matrix
+
+    def candidates(
+        self,
+        probe_values: Sequence[int],
+        exclude=None,
+        min_shared_bins: int = 1,
+        max_candidates: Optional[int] = None,
+    ) -> List:
+        """Screen the corpus against one probe; returns kept set ids.
+
+        Ordered by ``(-shared_bins, id)``.  ``exclude`` (typically the
+        probe's own id) is never returned.  ``min_shared_bins=1`` is the
+        no-false-negative setting — a common element occupies the same
+        ``h_0`` bin in both signatures, so every true-overlap candidate
+        shares at least one bin.  ``max_candidates`` truncates to the
+        most-shared prefix (approximate — see module docstring).
+        """
+        matrix = self._stacked()
+        EXEC_COUNTERS["suggest_prefilter_in"] += len(self._ids)
+        if not len(self._ids):
+            return []
+        row = self._signature(np.asarray(probe_values, np.uint32))
+        inter = matrix & row[None, :]
+        shared = np.unpackbits(
+            inter.view(np.uint8), axis=1).sum(axis=1).astype(np.int64)
+        keep = np.nonzero(shared >= int(min_shared_bins))[0]
+        kept = sorted(
+            ((int(-shared[i]), self._ids[i]) for i in keep
+             if self._ids[i] != exclude))
+        if max_candidates is not None:
+            kept = kept[:int(max_candidates)]
+        EXEC_COUNTERS["suggest_prefilter_kept"] += len(kept)
+        return [set_id for _, set_id in kept]

@@ -41,15 +41,16 @@ import dataclasses
 from typing import Mapping, Optional, Sequence, Tuple
 
 from ..core.engine import (
-    SHARD_MIN_G, default_capacity, default_expr_capacity, gmax_tier,
-    set_sort_key,
+    SHARD_MIN_G, default_capacity, default_expr_capacity, default_k_tier,
+    gmax_tier, set_sort_key,
 )
 from .expr import (
     EMPTY, Expr, canonicalize, expr_key, expr_shape, flat_terms, leaf_terms,
     parse,
 )
 
-__all__ = ["SHARD_MIN_G", "ShapeSig", "QueryPlan", "plan_query"]
+__all__ = ["SHARD_MIN_G", "ShapeSig", "QueryPlan", "plan_query",
+           "plan_suggest"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +71,15 @@ class ShapeSig:
     ``(B, …)`` bucket and share a compiled DAG executable, with ``ts`` /
     ``gmaxes`` carried per leaf in the expression's canonical traversal
     order rather than sorted.
+
+    ``cands`` is 0 for point-query and expression plans, and the
+    power-of-two candidate-axis tier (> 0) for count-only suggest plans —
+    the third workload kind.  For suggest signatures ``ts`` / ``gmaxes``
+    are the ``(probe, candidate-class)`` pair in that fixed order (NOT
+    sorted — the count jit's alignment shift is direction-aware) and
+    ``capacity_tier`` holds the top-K *selection* tier instead of a
+    survivor-buffer size (the count path has no survivor buffer, so the
+    field is free — see ``core.engine.default_k_tier``).
     """
 
     k: int
@@ -79,6 +89,7 @@ class ShapeSig:
     shards: int = 1
     replicas: int = 1
     eshape: Optional[Tuple] = None
+    cands: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +135,11 @@ class QueryPlan:
         algorithm, so the stale-routing entry can never be served — the
         (algorithm, key) pair misses and the fresh route repopulates it.
         """
+        if self.sig is not None and self.sig.cands:
+            # suggest plans: same terms as a flat conjunction would carry,
+            # but a count-only execution — key them apart, and include the
+            # selection tier so suggest(id, 8) never serves suggest(id, 64)
+            return ("suggest", (self.terms, self.sig.capacity_tier))
         if self.expr is not None:
             return (self.algorithm, expr_key(self.expr))
         return (self.algorithm, self.terms)
@@ -277,3 +293,69 @@ def _plan_expr(
         shards=shards, replicas=replicas, eshape=eshape,
     )
     return QueryPlan(terms=leaves, algorithm="device", sig=sig, expr=can)
+
+
+def plan_suggest(
+    index: Mapping,
+    probe,
+    candidates: Sequence,
+    k: int,
+    device: bool = True,
+    mesh_shards: int = 1,
+    mesh_replicas: int = 1,
+    shard_min_g: int = SHARD_MIN_G,
+) -> QueryPlan:
+    """Plan one count-only suggest bucket row: ``probe`` scored against a
+    uniform *class* of ``candidates``.
+
+    Every candidate must share one ``(t, gmax_tier)`` shape class — the
+    count matrix stacks them along the C axis, so mixed shapes cannot
+    share an executable; the serving layer splits a query's pre-filtered
+    candidates into classes and issues one plan per class, merging top-K
+    lists on the host (exact: each bucket returns its own top
+    ``min(k_tier, c_tier)`` which is >= the final k).
+
+    The plan's ``terms`` are ``(probe, *candidates)`` with candidates
+    sorted **ascending by term** — the tie-break contract: the count jit's
+    ``lax.top_k`` prefers the lowest candidate index on equal counts, so
+    ascending order makes that "smallest candidate id wins".  ``sig.ts`` /
+    ``sig.gmaxes`` carry the ``(probe, candidate)`` pair in that order
+    (direction matters: the prefix-alignment shift in the count kernel is
+    asymmetric), ``sig.cands`` is the pow2 candidate-axis tier, and
+    ``sig.capacity_tier`` the pow2 top-K selection tier
+    (:func:`~repro.core.engine.default_k_tier`).
+
+    Mesh routing mirrors the flat rule but must hold for *both* z axes —
+    per-shard counting is exact only when ``2^t`` splits evenly over the
+    shards for probe and candidates alike — and gates on the *deeper* of
+    the two (``max(ts)``) clearing ``shard_min_g``.
+    """
+    if probe not in index or not candidates:
+        return QueryPlan(terms=(probe, *candidates), algorithm="empty")
+    cands = sorted(set(candidates))
+    if any(c not in index for c in cands):
+        return QueryPlan(terms=(probe, *cands), algorithm="empty")
+    tp = index[probe].t
+    gp = gmax_tier(index[probe].gmax)
+    tc = index[cands[0]].t
+    gc = gmax_tier(index[cands[0]].gmax)
+    for c in cands[1:]:
+        assert (index[c].t, gmax_tier(index[c].gmax)) == (tc, gc), (
+            "plan_suggest candidates must share one (t, gmax_tier) class"
+        )
+    if not device:
+        return QueryPlan(terms=(probe, *cands), algorithm="host")
+    ts = (tp, tc)
+    shards, replicas = 1, 1
+    if ((mesh_shards > 1 or mesh_replicas > 1)
+            and (1 << max(ts)) >= shard_min_g
+            and (1 << tp) % mesh_shards == 0
+            and (1 << tc) % mesh_shards == 0):
+        shards, replicas = mesh_shards, mesh_replicas
+    sig = ShapeSig(
+        k=2, ts=ts, gmaxes=(gp, gc),
+        capacity_tier=default_k_tier(k),
+        shards=shards, replicas=replicas,
+        cands=1 << max(0, (len(cands) - 1).bit_length()),
+    )
+    return QueryPlan(terms=(probe, *cands), algorithm="device", sig=sig)

@@ -111,6 +111,13 @@ class ReplicaBalancer:
             ]
 
     def reset(self) -> None:
+        """Zero all accounting (in-flight, dispatched, cumulative weight).
+
+        Benchmark/test hygiene between measured passes — never call it
+        while buckets are in flight: their deferred :meth:`release` at
+        collect time would subtract from the zeroed state (clamped at 0,
+        but the rows' relative loads would be skewed until drained).
+        """
         with self._lock:
             self._in_flight = [0.0] * self.n_replicas
             self._dispatched = [0] * self.n_replicas

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .bitmap_filter import bitmap_filter_pallas
+from .count import pair_count_pallas, pair_count_ref
 from .group_intersect import group_match_pallas
 
 
@@ -48,6 +49,22 @@ def group_match(a_vals: jnp.ndarray, b_vals: jnp.ndarray,
     if use_pallas:
         return group_match_pallas(a_vals, b_vals, interpret=not _on_tpu())
     return ref.group_match_ref(a_vals.astype(jnp.int32), b_vals.astype(jnp.int32))
+
+
+def pair_count(a_vals: jnp.ndarray, b_vals: jnp.ndarray,
+               use_pallas="auto") -> jnp.ndarray:
+    """(S, ga), (S, gb) sentinel-padded -> (S,) int32 match counts.
+
+    The count-only twin of :func:`group_match` — same broadcast-equality
+    tile, reduced to one scalar per row, so the suggestion path never
+    materializes survivor buffers.  Leading batch axes supported:
+    (..., S, ga) x (..., S, gb) -> (..., S).
+    """
+    if use_pallas == "auto":
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return pair_count_pallas(a_vals, b_vals, interpret=not _on_tpu())
+    return pair_count_ref(a_vals.astype(jnp.int32), b_vals.astype(jnp.int32))
 
 
 def vocab_mask_and(masks: jnp.ndarray, use_pallas="auto") -> jnp.ndarray:

@@ -195,6 +195,9 @@ class ArrivalSchedule:
 
     @property
     def offered_qps(self) -> float:
+        """Mean offered load over the whole run (arrivals / duration) —
+        the open-loop rate the drivers must absorb, independent of how
+        fast the engine serves."""
         return len(self.times) / max(self.duration_s, 1e-12)
 
 
@@ -306,6 +309,9 @@ class CostModel:
     per_query_us: float
 
     def flush_cost_us(self, n_buckets: int, n_queries: int) -> float:
+        """Modeled wall time of one flush: fixed dispatch cost per bucket
+        plus marginal cost per batched query.  ``run_virtual`` charges
+        this to the single server's ``busy_until`` horizon per pump."""
         return n_buckets * self.per_bucket_us + n_queries * self.per_query_us
 
     def capacity_qps(self, tier: int) -> float:

@@ -46,10 +46,11 @@ from ..core.partition import preprocess_prefix
 from ..exec.adaptive import AdaptiveDeadline, CapacityModel, adaptive_key
 from ..exec.batch import InFlightBucket, dispatch_bucket, execute_plan_buckets
 from ..exec.cache import ResultCache
+from ..exec.candidates import CandidateIndex
 from ..exec.expr import (
     And, Diff, Expr, Or, Term, canonicalize, eval_host, expr_key,
 )
-from ..exec.plan import QueryPlan, ShapeSig, plan_query
+from ..exec.plan import QueryPlan, ShapeSig, plan_query, plan_suggest
 from .admission import AdmissionQueue, Ticket
 
 
@@ -987,6 +988,283 @@ class AsyncSearchEngine(SearchEngine):
             self._store(plan, result, generation=flight.generation)
             wait_us = (flight.flush_at - ticket.submitted_at) * 1e6
             ticket.resolve(result, wait_us=wait_us)
+
+
+@dataclasses.dataclass
+class SuggestResult:
+    """One served suggestion query.
+
+    ``suggestions`` is the top-K list of ``(set_id, |probe ∩ candidate|)``
+    pairs, best-first under the deterministic ``(-count, smallest id)``
+    order; zero-overlap candidates never appear.  ``algorithm`` names the
+    executed path (``"suggest/device"``, ``"suggest/sharded"``,
+    ``"suggest/mesh2d"``, ``"suggest/host"``); cache hits carry
+    ``{"cached": True}`` in ``stats``.
+    """
+
+    suggestions: List[Tuple[int, int]]
+    latency_us: float
+    algorithm: str
+    stats: Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class _SuggestCacheKey:
+    """Result-cache key shim for a whole suggest request.
+
+    The per-class device plans already key apart via
+    ``QueryPlan.cache_key()``'s ``"suggest"`` arm; the *merged* final
+    answer is what repeats in live traffic, so the engine caches it under
+    the request itself.  Duck-types the one method ``ResultCache`` calls.
+    """
+
+    set_id: int
+    k: int
+
+    def cache_key(self):
+        return ("suggest_result", (self.set_id, self.k))
+
+
+class SuggestEngine:
+    """Top-K set-similarity suggestions over a corpus of sets.
+
+    ``suggest(set_id, k)`` returns the ``k`` corpus sets with the largest
+    intersection against the probe set, exact and deterministically
+    tie-broken (equal counts prefer the smaller set id).  The serving
+    pipeline is the point-query substrate with a count-only execution
+    path:
+
+    1. **Pre-filter** (host): the probe's hash-bin occupancy signature is
+       ANDed against every corpus signature
+       (:class:`~repro.exec.candidates.CandidateIndex`); at the default
+       ``min_shared_bins=1`` no true-overlap candidate is ever dropped,
+       so the device pass stays exact.
+    2. **Plan**: surviving candidates group into ``(t, gmax_tier)`` shape
+       classes — one :func:`~repro.exec.plan.plan_suggest` plan per class
+       (bucket stacking needs static shapes).  Plans carry
+       ``ShapeSig.cands`` (> 0) and route plain / z-sharded / 2-D exactly
+       like point queries.
+    3. **Execute**: buckets run through
+       :func:`~repro.exec.batch.execute_plan_buckets` into the count-only
+       jits (``core.engine.intersect_count_batch`` and twins) — no
+       survivor buffers, no overflow re-run, device-side ``lax.top_k``.
+    4. **Merge** (host): per-class top lists merge by ``(-count, id)``
+       and truncate to ``k`` — exact, because every class returns at
+       least its own top ``min(k_tier, c_tier) >= min(k, |class|)``.
+
+    The result cache stores *merged* answers per ``(set_id, k)`` and is
+    generation-stamped off the device engine's mutation hook, so
+    :meth:`add_set` can never serve stale suggestions.  :meth:`warm`
+    pre-traces the count executables (signature tiers + batch tiers) so
+    warmed serving pays zero traces (``EXEC_COUNTERS["count_traces"]``).
+    """
+
+    def __init__(self, corpus: Dict[int, np.ndarray], w: int = 256,
+                 m: int = 2, seed: int = 0, use_device: bool = True,
+                 result_cache: int = 1024, mesh=None,
+                 shard_min_g: int = SHARD_MIN_G, topology=None,
+                 min_shared_bins: int = 1,
+                 max_candidates: Optional[int] = None):
+        self.family = random_hash_family(m, w, seed=seed)
+        self.perm = default_permutation(seed)
+        self.w, self.m = w, m
+        self.min_shared_bins = int(min_shared_bins)
+        self.max_candidates = max_candidates
+        self.use_device = (use_device or mesh is not None
+                           or topology is not None)
+        self.corpus: Dict[int, np.ndarray] = {}
+        self.index: Dict[int, object] = {}
+        self.prefilter = CandidateIndex(self.family)
+        self.device = (BatchedEngine(use_pallas="auto", mesh=mesh,
+                                     shard_min_g=shard_min_g,
+                                     topology=topology)
+                       if self.use_device else None)
+        self.cache = ResultCache(result_cache)
+        if self.device:
+            self.device.on_mutate(self.cache.bump_generation)
+        t0 = time.perf_counter()
+        for set_id, values in corpus.items():
+            if len(values):
+                self.add_set(set_id, values)
+        self.build_s = time.perf_counter() - t0
+        self.warmed_sigs: List[ShapeSig] = []
+
+    def add_set(self, set_id: int, values: np.ndarray) -> None:
+        """Add or replace one corpus set (streaming-ingest entry point).
+
+        Re-runs preprocessing, refreshes the device mirrors and the
+        pre-filter signature, and — via the engine's mutation hook — bumps
+        the result-cache generation so previously cached suggestions
+        (whose candidate pool or counts may have changed) are stale.
+        """
+        values = np.unique(np.asarray(values, np.uint32))
+        idx = preprocess_prefix(values, w=self.w, m=self.m,
+                                family=self.family, perm=self.perm)
+        self.corpus[set_id] = values
+        self.index[set_id] = idx
+        self.prefilter.add(set_id, values)
+        if self.device:
+            self.device.add(str(set_id), idx)  # fires the cache hook
+        else:
+            self.cache.bump_generation()
+
+    def _classes(self, candidates: Sequence[int]) -> Dict[Tuple, List[int]]:
+        """Split prefiltered candidates into ``(t, gmax_tier)`` shape
+        classes (deterministic order: sorted class key, ascending ids in
+        each class — the tie-break contract feeds off the id order)."""
+        from ..core.engine import gmax_tier
+
+        classes: Dict[Tuple, List[int]] = {}
+        for c in candidates:
+            idx = self.index[c]
+            classes.setdefault((idx.t, gmax_tier(idx.gmax)), []).append(c)
+        return {key: sorted(classes[key]) for key in sorted(classes)}
+
+    def _plans_for(self, set_id: int, k: int) -> List[QueryPlan]:
+        """Pre-filter + per-class planning for one suggest request."""
+        cands = self.prefilter.candidates(
+            self.corpus[set_id], exclude=set_id,
+            min_shared_bins=self.min_shared_bins,
+            max_candidates=self.max_candidates)
+        return [
+            plan_suggest(
+                self.index, set_id, class_cands, k,
+                device=self.device is not None,
+                mesh_shards=self.device.n_shards if self.device else 1,
+                mesh_replicas=self.device.n_replicas if self.device else 1,
+                shard_min_g=(self.device.shard_min_g if self.device
+                             else SHARD_MIN_G),
+            )
+            for class_cands in self._classes(cands).values()
+        ]
+
+    @staticmethod
+    def _merge(per_class: List[List[Tuple[int, int]]], k: int
+               ) -> List[Tuple[int, int]]:
+        """Merge per-class top lists into the global top-k: order by
+        ``(-count, id)`` — the same key the device tie-break realizes —
+        and truncate."""
+        merged = [pair for pairs in per_class for pair in pairs]
+        merged.sort(key=lambda pair: (-pair[1], pair[0]))
+        return merged[:k]
+
+    def _host_counts(self, set_id: int, plan: QueryPlan
+                     ) -> List[Tuple[int, int]]:
+        """Host oracle path for one class plan: exact numpy counts."""
+        probe = self.corpus[set_id]
+        out = []
+        for c in plan.terms[1:]:
+            n = len(np.intersect1d(probe, self.corpus[c]))
+            if n >= 1:
+                out.append((c, n))
+        return out
+
+    def suggest(self, set_id: int, k: int) -> SuggestResult:
+        """Serve one suggestion query — a batch of one."""
+        return self.suggest_batch([(set_id, k)])[0]
+
+    def suggest_batch(self, requests: Sequence[Tuple[int, int]]
+                      ) -> List[SuggestResult]:
+        """Plan -> bucket -> execute -> merge for a request batch.
+
+        Class plans from ALL requests bucket together (same-signature
+        classes of different probes share one jit execution), so device
+        dispatches stay O(#distinct signatures).  Unknown ``set_id``
+        raises KeyError — suggestions are corpus-internal.
+        """
+        for set_id, _ in requests:
+            if set_id not in self.corpus:
+                raise KeyError(set_id)
+        gen = self.cache.generation
+        results: List[Optional[SuggestResult]] = [None] * len(requests)
+        req_plans: Dict[int, List[Tuple[int, QueryPlan]]] = {}
+        flat: List[Tuple[int, QueryPlan]] = []
+        for ri, (set_id, k) in enumerate(requests):
+            hit = self.cache.get(_SuggestCacheKey(set_id, int(k)))
+            if hit is not None:
+                suggestions, algorithm = hit
+                results[ri] = SuggestResult(
+                    suggestions, 0.0, algorithm,
+                    {"cached": True, "k": int(k)})
+                continue
+            plans = []
+            for plan in self._plans_for(set_id, int(k)):
+                if plan.algorithm == "device":
+                    plans.append((len(flat), plan))
+                    flat.append((len(flat), plan))
+                else:
+                    plans.append((-1, plan))
+            req_plans[ri] = plans
+        by_index: Dict[int, Tuple[np.ndarray, Dict]] = {}
+        if flat:
+            by_index = execute_plan_buckets(
+                lambda sid: self.device.sets[str(sid)],
+                flat,
+                use_pallas=self.device.use_pallas,
+                mesh=self.device.mesh,
+                shard_axis=self.device.shard_axis,
+                get_sharded_set=lambda sid: self.device.get_mesh_set(
+                    str(sid)),
+                topology=self.device.topology,
+                get_replica_set=lambda r, sid: self.device.get_replica_set(
+                    r, str(sid)),
+            )
+        for ri, (set_id, k) in enumerate(requests):
+            if results[ri] is not None:
+                continue
+            per_class: List[List[Tuple[int, int]]] = []
+            algorithm = "suggest/host"
+            stats: Dict = {"k": int(k), "classes": len(req_plans[ri])}
+            batch_us = 0.0
+            for fi, plan in req_plans[ri]:
+                if plan.algorithm == "empty":
+                    continue
+                if fi < 0:
+                    per_class.append(self._host_counts(set_id, plan))
+                    continue
+                pairs, cstats = by_index[fi]
+                cands = plan.terms[1:]
+                per_class.append([
+                    (cands[int(idx)], int(count))
+                    for idx, count in pairs if count >= 1
+                ])
+                algorithm = "suggest" + _device_result_name(
+                    cstats).removeprefix("rangroupscan")
+                batch_us += cstats.get("batch_us", 0.0)
+                stats["n_cands"] = stats.get(
+                    "n_cands", 0) + cstats.get("n_cands", 0)
+            suggestions = self._merge(per_class, int(k))
+            stats["r"] = len(suggestions)
+            results[ri] = SuggestResult(
+                suggestions, batch_us, algorithm, stats)
+            self.cache.put(_SuggestCacheKey(set_id, int(k)),
+                           (suggestions, algorithm), generation=gen)
+        return results  # type: ignore[return-value]
+
+    def warm(self, sample_ids: Sequence[int], k: int,
+             b_tiers: Sequence[int] = (1,)) -> List[ShapeSig]:
+        """Pre-trace the count executables a sample of probes would hit.
+
+        Plans each sample id exactly as :meth:`suggest` will (pre-filter
+        included, so the candidate-axis tiers match live traffic) and
+        warms every device-routed signature through
+        ``core.engine.warm_from_plans`` — plain, z-sharded, 2-D, and
+        per-replica-row variants included.  After warming, serving the
+        same signatures executes with zero fresh traces
+        (``EXEC_COUNTERS["count_traces"]`` stays flat).
+        """
+        assert self.device is not None, "warming is a device-path concept"
+        plans = [p for sid in sample_ids for p in self._plans_for(sid, k)]
+        self.warmed_sigs = warm_from_plans(
+            plans, lambda sid: self.device.sets[str(sid)],
+            top_k=len(plans) or 1, b_tiers=b_tiers,
+            use_pallas=self.device.use_pallas,
+            mesh=self.device.mesh, axis=self.device.shard_axis,
+            get_sharded_set=lambda sid: self.device.get_mesh_set(str(sid)),
+            topology=self.device.topology,
+            get_replica_set=lambda r, sid: self.device.get_replica_set(
+                r, str(sid)))
+        return self.warmed_sigs
 
 
 def zipf_query_log(index_terms: Sequence[int], n_queries: int = 1000,

@@ -1,0 +1,492 @@
+"""Tests for the top-K suggestion subsystem (count-only execution path).
+
+Covers, bottom-up: the ``pair_count`` kernel differentially vs a numpy
+oracle (Pallas-interpret vs pure-jnp reference included), the count-only
+batch executors (empty intersections, duplicate-free inputs, forced
+tie-breaks, padded top-K slots), hashbin candidate pre-filtering (the
+no-false-negative property at ``min_shared_bins=1``), ``plan_suggest``
+routing and the suggest cache-key arm, the streaming binary ingestion
+format (partial-chunk tolerance), and the :class:`SuggestEngine`
+end-to-end against an exact numpy top-K oracle — warmed serving must pay
+zero fresh traces, and a forced-8-device subprocess re-checks bit-identity
+on the 4-shard and 2x2 mesh paths so every tier-1 run exercises the
+multi-path acceptance guarantee.
+"""
+import io
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core.engine import (
+    EXEC_COUNTERS, DeviceSet, default_k_tier, intersect_count_batch,
+)
+from repro.core.hashing import default_permutation, random_hash_family
+from repro.core.partition import preprocess_prefix
+from repro.data.ingest import (
+    MAGIC, ingest_file, read_records, stream_records, write_records,
+)
+from repro.exec.candidates import CandidateIndex
+from repro.exec.plan import plan_suggest
+from repro.kernels.ops import pair_count
+from repro.kernels.count import pair_count_pallas, pair_count_ref
+from repro.serve.search import SuggestEngine
+
+
+def _oracle_counts(probe, cands):
+    probe = np.unique(np.asarray(probe, np.uint32))
+    return [len(np.intersect1d(probe, np.unique(np.asarray(c, np.uint32))))
+            for c in cands]
+
+
+def _oracle_topk(corpus, sid, k):
+    pairs = []
+    for c in sorted(corpus):
+        if c == sid:
+            continue
+        n = len(np.intersect1d(np.unique(corpus[sid]), np.unique(corpus[c])))
+        if n >= 1:
+            pairs.append((c, n))
+    pairs.sort(key=lambda p: (-p[1], p[0]))
+    return pairs[:k]
+
+
+# ---------------------------------------------------------------------------
+# pair_count kernel: differential vs numpy, interpret-Pallas vs reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,ga,gb", [(1, 1, 1), (3, 4, 8), (8, 16, 4),
+                                     (13, 7, 31)])
+def test_pair_count_matches_numpy(s, ga, gb):
+    """Duplicate-free rows (the count path's input invariant) with a
+    random overlap fraction and random sentinel padding in A."""
+    rng = np.random.default_rng(s * 100 + ga)
+    a = np.empty((s, ga), np.int32)
+    b = np.empty((s, gb), np.int32)
+    for i in range(s):
+        pool = rng.permutation(200).astype(np.int32)
+        a[i] = pool[:ga]
+        take = int(rng.integers(0, min(ga, gb) + 1))  # forced overlap size
+        b[i] = np.concatenate([
+            rng.permutation(a[i])[:take], pool[ga:ga + gb - take]])
+        n_pad = int(rng.integers(0, ga))              # sentinel-pad A's tail
+        if n_pad:
+            a[i, ga - n_pad:] = -1
+    want = np.array([
+        len(np.intersect1d(a[i][a[i] != -1], b[i]))
+        for i in range(s)
+    ], np.int32)
+    got_ref = np.asarray(pair_count_ref(a, b))
+    got_pal = np.asarray(pair_count_pallas(a, b, interpret=True))
+    assert np.array_equal(got_ref, want)
+    assert np.array_equal(got_pal, want)
+
+
+def test_pair_count_empty_and_disjoint():
+    a = np.full((4, 8), -1, np.int32)          # all-sentinel rows
+    b = np.arange(4 * 8, dtype=np.int32).reshape(4, 8)
+    assert np.array_equal(np.asarray(pair_count(a, b, use_pallas=False)),
+                          np.zeros(4, np.int32))
+    # fully disjoint live rows
+    a2 = np.arange(32, dtype=np.int32).reshape(4, 8)
+    b2 = a2 + 1000
+    assert np.array_equal(np.asarray(pair_count(a2, b2, use_pallas=False)),
+                          np.zeros(4, np.int32))
+    # identical rows count every element once (duplicate-free invariant)
+    assert np.array_equal(np.asarray(pair_count(a2, a2, use_pallas=False)),
+                          np.full(4, 8, np.int32))
+
+
+def test_pair_count_batched_leading_axes():
+    rng = np.random.default_rng(5)
+    a = rng.permutation(200)[:96].astype(np.int32).reshape(2, 3, 4, 4)
+    b = rng.permutation(200)[:48].astype(np.int32).reshape(2, 3, 4, 2)
+    got = np.asarray(pair_count(a, b, use_pallas=False))
+    assert got.shape == (2, 3, 4)
+    flat = np.asarray(pair_count(a.reshape(-1, 4), b.reshape(-1, 2),
+                                 use_pallas=False))
+    assert np.array_equal(got.reshape(-1), flat)
+
+
+# ---------------------------------------------------------------------------
+# count-only executor: oracle counts, tie-break, padded slots
+# ---------------------------------------------------------------------------
+
+def _build_sets(rng, sizes, universe=1 << 18, t=3, gmax=64):
+    # one (t, gmax) class: bucket stacking requires uniform shapes
+    fam = random_hash_family(2, 256, seed=1)
+    perm = default_permutation(1)
+    pool = rng.choice(universe, size=max(sizes) * 8, replace=False)
+    vals = [np.sort(rng.choice(pool, size=n, replace=False)).astype(np.uint32)
+            for n in sizes]
+    idxs = [preprocess_prefix(v, family=fam, perm=perm, t=t, gmax=gmax)
+            for v in vals]
+    return vals, [DeviceSet.from_host(i) for i in idxs]
+
+
+def test_intersect_count_batch_oracle_and_tiebreak():
+    rng = np.random.default_rng(2)
+    vals, sets = _build_sets(rng, [120, 90, 90, 60, 60, 30], gmax=64)
+    probe_v, probe = vals[0], sets[0]
+    cands = sets[1:] + [sets[1]]            # duplicate candidate: forced tie
+    cand_vals = vals[1:] + [vals[1]]
+    (pairs, stats), = intersect_count_batch([(probe, cands)], k=8,
+                                            use_pallas=False)
+    want = _oracle_counts(probe_v, cand_vals)
+    got = {int(i): int(c) for i, c in pairs if c >= 0}
+    for idx, w in enumerate(want):
+        if w >= 1:
+            assert got[idx] == w, (idx, got, want)
+    # forced tie between candidate 0 and its duplicate at index 5: equal
+    # counts order by ascending candidate index (== ascending id under the
+    # planner's sorted-terms contract)
+    ranked = [int(i) for i, c in pairs if c >= 1]
+    if want[0] >= 1:
+        assert ranked.index(0) < ranked.index(5)
+    assert stats["k_sel"] == min(8, stats["c_tier"])
+
+
+def test_intersect_count_padded_slots_carry_minus_one():
+    rng = np.random.default_rng(9)
+    vals, sets = _build_sets(rng, [64, 64, 64, 64], gmax=64)
+    (pairs, stats), = intersect_count_batch([(sets[0], sets[1:])], k=8,
+                                            use_pallas=False)
+    # 3 candidates -> c_tier 4, k_sel 4: the padded 4th slot must rank
+    # last with count -1 (candidate-axis padding is masked in-jit)
+    assert stats["c_tier"] == 4 and pairs.shape == (4, 2)
+    assert int(pairs[-1, 1]) == -1
+    want = _oracle_counts(vals[0], vals[1:])
+    got = {int(i): int(c) for i, c in pairs if c >= 0}
+    for idx, w in enumerate(want):
+        assert got.get(idx, 0) == w, (got, want)
+
+
+def test_default_k_tier():
+    assert [default_k_tier(k) for k in (1, 8, 9, 16, 100)] == \
+        [8, 8, 16, 16, 128]
+
+
+# ---------------------------------------------------------------------------
+# candidate pre-filter: no false negatives at min_shared_bins=1
+# ---------------------------------------------------------------------------
+
+def test_candidate_prefilter_never_drops_true_overlap():
+    rng = np.random.default_rng(11)
+    fam = random_hash_family(2, 256, seed=4)
+    ci = CandidateIndex(fam)
+    corpus = {}
+    pool = rng.choice(1 << 20, size=5000, replace=False)
+    for sid in range(60):
+        corpus[sid] = rng.choice(
+            pool, size=int(rng.integers(10, 200)), replace=False
+        ).astype(np.uint32)
+        ci.add(sid, corpus[sid])
+    assert len(ci) == 60 and 3 in ci
+    for sid in (0, 7, 33):
+        kept = set(ci.candidates(corpus[sid], exclude=sid))
+        assert sid not in kept
+        for c in corpus:
+            if c != sid and len(np.intersect1d(corpus[sid], corpus[c])):
+                assert c in kept, (sid, c)
+    assert EXEC_COUNTERS["suggest_prefilter_in"] == 3 * 60
+    assert EXEC_COUNTERS["suggest_prefilter_kept"] > 0
+
+
+def test_candidate_prefilter_cap_keeps_most_shared_prefix():
+    fam = random_hash_family(2, 256, seed=4)
+    ci = CandidateIndex(fam)
+    base = np.arange(100, dtype=np.uint32)
+    ci.add("near", base[:90])
+    ci.add("far", np.arange(10**6, 10**6 + 90, dtype=np.uint32))
+    kept = ci.candidates(base, max_candidates=1)
+    assert kept == ["near"]
+
+
+# ---------------------------------------------------------------------------
+# planner: suggest signatures, routing, cache key
+# ---------------------------------------------------------------------------
+
+def test_plan_suggest_signature_and_cache_key():
+    rng = np.random.default_rng(21)
+    fam = random_hash_family(2, 256, seed=2)
+    perm = default_permutation(2)
+    index = {
+        sid: preprocess_prefix(
+            rng.choice(1 << 16, size=80, replace=False).astype(np.uint32),
+            family=fam, perm=perm, gmax=64)
+        for sid in range(6)
+    }
+    plan = plan_suggest(index, 0, [3, 1, 2], k=5)
+    assert plan.algorithm == "device"
+    assert plan.terms == (0, 1, 2, 3)       # candidates sorted ascending
+    assert plan.sig.cands == 4              # pow2 tier over 3 candidates
+    assert plan.sig.capacity_tier == default_k_tier(5) == 8
+    kind, _ = plan.cache_key()
+    assert kind == "suggest"
+    # k-tier is part of the key: suggest(., 5) never serves suggest(., 100)
+    assert plan.cache_key() != plan_suggest(index, 0, [3, 1, 2],
+                                            k=100).cache_key()
+    # unknown candidate or probe -> empty plan
+    assert plan_suggest(index, 0, [99], k=5).algorithm == "empty"
+    assert plan_suggest(index, 99, [1], k=5).algorithm == "empty"
+    assert plan_suggest(index, 0, [], k=5).algorithm == "empty"
+    # host routing
+    assert plan_suggest(index, 0, [1], k=5, device=False).algorithm == "host"
+    # mixed (t, gmax_tier) classes are a planner contract violation
+    index[999] = preprocess_prefix(
+        rng.choice(1 << 18, size=3000, replace=False).astype(np.uint32),
+        family=fam, perm=perm)
+    with pytest.raises(AssertionError):
+        plan_suggest(index, 0, [1, 999], k=5)
+
+
+# ---------------------------------------------------------------------------
+# streaming ingestion: roundtrip, chunk boundaries, error paths
+# ---------------------------------------------------------------------------
+
+def test_ingest_roundtrip_and_partial_chunks(tmp_path):
+    rng = np.random.default_rng(3)
+    recs = [(i, rng.integers(0, 1 << 20, size=int(rng.integers(1, 200)),
+                             dtype=np.uint32)) for i in range(25)]
+    path = tmp_path / "corpus.rsi"
+    assert write_records(path, recs) == 25
+    back = list(read_records(path))
+    assert [i for i, _ in back] == [i for i, _ in recs]
+    assert all(np.array_equal(v, w) for (_, v), (_, w) in zip(recs, back))
+    raw = path.read_bytes()
+    assert raw[:4] == MAGIC
+    # worst-case streaming: 1-byte chunks force every boundary straddle
+    again = list(stream_records(bytes([b]) for b in raw))
+    assert all(np.array_equal(v, w) for (_, v), (_, w) in zip(back, again))
+    # stream into an in-memory sink via the write side too
+    buf = io.BytesIO()
+    write_records(buf, recs[:3])
+    assert len(list(stream_records([buf.getvalue()]))) == 3
+
+
+def test_ingest_rejects_bad_magic_and_truncation(tmp_path):
+    path = tmp_path / "c.rsi"
+    write_records(path, [(1, np.arange(10, dtype=np.uint32))])
+    raw = path.read_bytes()
+    with pytest.raises(ValueError, match="magic"):
+        list(stream_records([b"XXXX" + raw[4:]]))
+    with pytest.raises(ValueError, match="truncated"):
+        list(stream_records([raw[:-2]]))
+
+
+def test_ingest_file_feeds_engine_incrementally(tmp_path):
+    rng = np.random.default_rng(8)
+    pool = rng.choice(1 << 18, size=3000, replace=False)
+    corpus = {sid: rng.choice(pool, size=60, replace=False).astype(np.uint32)
+              for sid in range(12)}
+    path = tmp_path / "c.rsi"
+    write_records(path, [*corpus.items(), (99, np.array([], np.uint32))])
+    eng = SuggestEngine({}, use_device=False)
+    assert ingest_file(path, eng) == 12      # empty record skipped
+    got = eng.suggest(0, 5)
+    assert got.suggestions == _oracle_topk(corpus, 0, 5)
+
+
+# ---------------------------------------------------------------------------
+# SuggestEngine end-to-end: oracle, caching, warming, mutation
+# ---------------------------------------------------------------------------
+
+def _make_corpus(seed=0, n_sets=30, lo=30, hi=250):
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(1 << 20, size=4000, replace=False)
+    corpus = {
+        sid: rng.choice(pool, size=int(rng.integers(lo, hi)),
+                        replace=False).astype(np.uint32)
+        for sid in range(n_sets)
+    }
+    corpus[100] = corpus[3].copy()   # forced exact ties (identical sets)
+    corpus[101] = corpus[3].copy()
+    return corpus
+
+
+def test_suggest_engine_matches_oracle_device():
+    corpus = _make_corpus()
+    eng = SuggestEngine(corpus, use_device=True)
+    for sid in (0, 3, 100, 17):
+        for k in (1, 5, 10):
+            got = eng.suggest(sid, k)
+            assert got.suggestions == _oracle_topk(corpus, sid, k), (sid, k)
+            assert got.algorithm.startswith("suggest/")
+    # tie-break visible end-to-end: probing 101 ranks 3 before 100
+    top = eng.suggest(101, 3).suggestions
+    assert top[0][0] == 3 and top[1][0] == 100
+    with pytest.raises(KeyError):
+        eng.suggest(999, 5)
+
+
+def test_suggest_engine_matches_oracle_host():
+    corpus = _make_corpus(seed=4, n_sets=15)
+    eng = SuggestEngine(corpus, use_device=False)
+    for sid in (0, 3, 100):
+        got = eng.suggest(sid, 6)
+        assert got.suggestions == _oracle_topk(corpus, sid, 6)
+        assert got.algorithm == "suggest/host"
+
+
+def test_suggest_engine_result_cache_and_mutation():
+    corpus = _make_corpus(seed=1, n_sets=15)
+    eng = SuggestEngine(corpus, use_device=True)
+    first = eng.suggest(2, 5)
+    h0 = EXEC_COUNTERS["result_cache_hits"]
+    c0 = EXEC_COUNTERS["count_calls"]
+    hit = eng.suggest(2, 5)
+    assert hit.stats.get("cached") and hit.suggestions == first.suggestions
+    assert EXEC_COUNTERS["result_cache_hits"] == h0 + 1
+    assert EXEC_COUNTERS["count_calls"] == c0
+    # a different k is a different cache entry
+    assert not eng.suggest(2, 4).stats.get("cached")
+    # index mutation invalidates: the new overlap must show up
+    eng.add_set(2, np.concatenate([corpus[2], corpus[7][:10]]))
+    corpus[2] = np.unique(np.concatenate([corpus[2], corpus[7][:10]]))
+    got = eng.suggest(2, 5)
+    assert not got.stats.get("cached")
+    assert got.suggestions == _oracle_topk(corpus, 2, 5)
+
+
+def test_suggest_engine_warm_zero_serve_traces():
+    corpus = _make_corpus(seed=2, n_sets=20)
+    eng = SuggestEngine(corpus, use_device=True)
+    warmed = eng.warm([5, 6, 7], k=8)
+    assert warmed and all(s.cands > 0 for s in warmed)
+    t0 = EXEC_COUNTERS["count_traces"]
+    got = eng.suggest(5, 8)
+    assert got.suggestions == _oracle_topk(corpus, 5, 8)
+    assert EXEC_COUNTERS["count_traces"] == t0, "warmed serve retraced"
+
+
+def test_suggest_batch_shares_buckets():
+    corpus = _make_corpus(seed=3, n_sets=20)
+    eng = SuggestEngine(corpus, use_device=True)
+    c0 = EXEC_COUNTERS["count_calls"]
+    got = eng.suggest_batch([(0, 5), (1, 5), (2, 5), (3, 5)])
+    for (sid, k), r in zip([(0, 5), (1, 5), (2, 5), (3, 5)], got):
+        assert r.suggestions == _oracle_topk(corpus, sid, k)
+    # same-signature classes across the 4 probes share jit executions:
+    # far fewer device passes than probes x classes
+    n_classes = sum(r.stats["classes"] for r in got)
+    assert EXEC_COUNTERS["count_calls"] - c0 < n_classes
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bit-identity on 4-shard and 2x2 paths (fresh interpreter,
+# 8 forced host devices — runs on every tier-1 invocation)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.core.engine import EXEC_COUNTERS, SHARD_AXIS
+from repro.exec.topology import make_topology
+from repro.serve.search import SuggestEngine
+
+rng = np.random.default_rng(7)
+pool = rng.choice(1 << 20, size=30000, replace=False)
+corpus = {sid: rng.choice(pool, size=int(rng.integers(800, 2000)),
+                          replace=False).astype(np.uint32)
+          for sid in range(16)}
+corpus[50] = corpus[2].copy()        # forced tie
+
+def oracle(sid, k):
+    pairs = []
+    for c in sorted(corpus):
+        if c == sid: continue
+        n = len(np.intersect1d(np.unique(corpus[sid]),
+                               np.unique(corpus[c])))
+        if n >= 1: pairs.append((c, n))
+    pairs.sort(key=lambda p: (-p[1], p[0]))
+    return pairs[:k]
+
+probes = [(s, k) for s in (0, 2, 50, 9) for k in (5, 12)]
+want = {p: oracle(*p) for p in probes}
+
+plain = SuggestEngine(corpus, use_device=True)
+for p, e in want.items():
+    assert plain.suggest(*p).suggestions == e, ("plain", p)
+
+mesh = Mesh(np.array(jax.devices()[:4]), (SHARD_AXIS,))
+sh = SuggestEngine(corpus, mesh=mesh, shard_min_g=1)
+assert sh.suggest(0, 5).algorithm == "suggest/sharded"
+for p, e in want.items():
+    assert sh.suggest(*p).suggestions == e, ("sharded", p)
+
+topo = make_topology(replicas=2, shards=2)
+m2 = SuggestEngine(corpus, topology=topo, shard_min_g=1)
+assert m2.suggest(0, 5).algorithm == "suggest/mesh2d"
+for p, e in want.items():
+    assert m2.suggest(*p).suggestions == e, ("mesh2d", p)
+
+# warmed 2-D serving pays zero fresh traces
+m2.warm([9], 12)
+t0 = EXEC_COUNTERS["count_traces"]
+assert m2.suggest(9, 12).suggestions == want[(9, 12)]
+assert EXEC_COUNTERS["count_traces"] == t0
+print("SUGGEST_SUBPROCESS_OK")
+"""
+
+
+def test_suggest_oracle_in_forced_multidevice_subprocess():
+    """The acceptance guarantee, independent of this process's device
+    count: a fresh interpreter with 8 forced host devices must produce
+    bit-identical top-K (deterministic tie-break included) on the plain,
+    4-shard, and 2x2 mesh paths, and warmed 2-D serving must not
+    retrace."""
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.abspath(src) + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "SUGGEST_SUBPROCESS_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# multi-device in-process variants (skip on single-device runs)
+# ---------------------------------------------------------------------------
+
+N_DEVICES = 4
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < N_DEVICES,
+    reason=f"needs >= {N_DEVICES} devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+@multi_device
+def test_suggest_sharded_in_process_oracle():
+    corpus = _make_corpus(seed=6, n_sets=12, lo=300, hi=900)
+    from jax.sharding import Mesh
+    from repro.core.engine import SHARD_AXIS
+    mesh = Mesh(np.array(jax.devices()[:4]), (SHARD_AXIS,))
+    plain = SuggestEngine(corpus, use_device=True)
+    sh = SuggestEngine(corpus, mesh=mesh, shard_min_g=1)
+    for sid in (0, 3, 100):
+        assert (sh.suggest(sid, 6).suggestions
+                == plain.suggest(sid, 6).suggestions
+                == _oracle_topk(corpus, sid, 6))
+
+
+@multi_device
+def test_suggest_mesh2d_in_process_oracle():
+    corpus = _make_corpus(seed=7, n_sets=12, lo=300, hi=900)
+    from repro.exec.topology import make_topology
+    topo = make_topology(replicas=2, shards=2)
+    eng = SuggestEngine(corpus, topology=topo, shard_min_g=1)
+    for sid in (0, 3, 100):
+        assert eng.suggest(sid, 6).suggestions == _oracle_topk(
+            corpus, sid, 6)

@@ -122,6 +122,22 @@ RULES = {
         Rule("subexpr_host_merges", "min_abs", 1),
         Rule("served_qps", "min_ratio", 0.70),
     ],
+    "BENCH_suggest_qps.json": [
+        # suggestion-service invariants (absolute — any workload scale):
+        # every served top-K list stays bit-identical to the numpy oracle
+        # (deterministic tie-break included, folded across the plain and
+        # mesh sections), warmed serving never retraces a count
+        # executable, the Zipf-head workload actually exercises the
+        # result cache, and the hashbin pre-filter never keeps more than
+        # it examined.  Throughput gates relatively on a same-scale
+        # baseline for both the cached and the pure-device serving loops.
+        Rule("identical_to_oracle", "equals", 1),
+        Rule("count_traces_serving", "max_abs", 0),
+        Rule("result_cache_hits", "min_abs", 1),
+        Rule("prefilter_selectivity", "max_abs", 1.0),
+        Rule("served_qps", "min_ratio", 0.70),
+        Rule("device_qps", "min_ratio", 0.70),
+    ],
     "BENCH_mesh2d_qps.json": [
         # 2-D topology invariants (absolute — hold at any workload scale):
         # every layout stays bit-identical to the single-device baseline,
@@ -136,7 +152,7 @@ RULES = {
 }
 
 _SCALE_KEYS = ("queries", "n_docs", "vocab", "vocab_kept", "distinct_pool",
-               "set_size", "n_terms", "overlap")
+               "set_size", "n_terms", "overlap", "n_sets", "top_k")
 
 
 def _walk(base, cur, segs: List[str], label: str

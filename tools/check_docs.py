@@ -9,9 +9,12 @@ Checks, per file:
   in-page anchors are skipped);
 - fenced blocks must be balanced (every ``` opener has a closer).
 
+A directory argument expands to every ``*.md`` beneath it (recursively,
+sorted), so ``docs/`` keeps new documents covered without a CI edit.
+
 Exit code 0 = clean, 1 = any failure (failures are listed).
 
-Run:  python tools/check_docs.py README.md docs/ARCHITECTURE.md
+Run:  python tools/check_docs.py README.md ISSUE.md ROADMAP.md docs/
 """
 from __future__ import annotations
 
@@ -84,21 +87,34 @@ def check_file(path: pathlib.Path):
     return errors
 
 
-def main(argv):
-    if not argv:
-        print("usage: check_docs.py FILE.md [FILE.md ...]")
-        return 2
-    all_errors = []
+def expand(argv):
+    """Resolve CLI args to md files: directories recurse to their *.md."""
+    files, missing = [], []
     for name in argv:
         p = pathlib.Path(name)
-        if not p.exists():
-            all_errors.append(f"{p}: file not found")
-            continue
+        if p.is_dir():
+            found = sorted(p.rglob("*.md"))
+            if not found:
+                missing.append(f"{p}: directory holds no .md files")
+            files.extend(found)
+        elif p.exists():
+            files.append(p)
+        else:
+            missing.append(f"{p}: file not found")
+    return files, missing
+
+
+def main(argv):
+    if not argv:
+        print("usage: check_docs.py FILE.md|DIR [FILE.md|DIR ...]")
+        return 2
+    files, all_errors = expand(argv)
+    for p in files:
         all_errors.extend(check_file(p))
     for e in all_errors:
         print(f"FAIL {e}")
     if not all_errors:
-        print(f"docs OK ({len(argv)} files)")
+        print(f"docs OK ({len(files)} files)")
     return 1 if all_errors else 0
 
 
