@@ -1,0 +1,246 @@
+"""Observability overhead + integrity benchmark: the traced serving stack
+must stay bit-identical and within noise of metrics-only serving.
+
+The same warmed hot-z burst from ``fig_concurrent_qps`` (2x2 topology,
+single-device buckets via the balancer, overlapped flusher window) is
+served by two identically configured ``AsyncSearchEngine``\\ s whose only
+difference is the observability mode:
+
+- *metrics* — ``Obs(trace=False)``, the default: typed histograms and
+  counters record, every span call hits the shared ``NULL_SPAN`` sentinel.
+- *traced* — ``Obs(trace=True)``: full request/bucket span trees, span
+  cross-links, and per-signature profile attribution on top.
+
+Measured claims (all gated by ``tools/check_bench.py``):
+
+- ``identical_to_oracle`` — BOTH modes reproduce the synchronous
+  ``query_batch`` oracle bit-for-bit on every pass: observability is
+  read-only.
+- ``overhead.qps_ratio_traced_vs_metrics`` — median-of-passes served QPS
+  with tracing on vs off; the CI floor is 0.95 (<= 5% overhead).  The
+  modes run interleaved so shared-host drift hits both alike.
+- ``leaked_spans`` — open span count after every traced pass drains: 0,
+  or an instrumentation site forgot to close (the request root closes in
+  ``Ticket._record_wait``, bucket roots in ``InFlightBucket.collect``).
+- ``snapshot_consistent`` — the post-pass registry cut is internally
+  consistent (histogram ``sum(counts) == count``, queue-wait count ==
+  resolved tickets, collect count == dispatched buckets) and survives
+  both exposition round-trips (Prometheus text and JSON).
+- ``residual_coverage`` — every signature the traced engine executed
+  (ground truth: the ``bucket`` spans' sig attrs) has a profile entry
+  with CostModel-residual attribution, after ``calibrate_from_profile``
+  closes the fit loop on the collected samples (ROADMAP item 5's feed).
+
+Run:  PYTHONPATH=src python benchmarks/fig_observability.py [--queries N]
+      [--passes N] [--out BENCH_observability.json]
+"""
+from __future__ import annotations
+
+import os
+
+# before the first jax import: forced host devices to lay out, and the CPU
+# backend explicitly (with libtpu on the image a concurrently running jax
+# process would otherwise serialize on the TPU lockfile)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from fig_concurrent_qps import _pow2_tiers, hot_mixed_log
+from fig_mesh2d_qps import hot_z_postings
+from repro.core.engine import EXEC_COUNTERS
+from repro.exec.topology import make_topology
+from repro.obs import Obs, parse_json, parse_prometheus, to_json, to_prometheus
+from repro.serve.loadgen import calibrate_from_profile
+from repro.serve.search import AsyncSearchEngine, SearchEngine
+
+LAYOUT = (2, 2)
+
+
+def make_engine(postings, log, m, seed, obs, flush_tier, deadline_us):
+    topo = make_topology(*LAYOUT)
+    eng = AsyncSearchEngine(
+        postings, w=256, m=m, seed=seed, topology=topo,
+        shard_min_g=1 << 20,            # single-device buckets -> balancer
+        flush_tier=flush_tier, deadline_us=deadline_us,
+        result_cache=0,                 # repeats must hit the device
+        max_inflight=8, obs=obs)
+    eng.warm(log, top_k=len(log), b_tiers=_pow2_tiers(len(log)))
+    return eng, topo
+
+
+def serve_burst(eng, obs, log):
+    """One closed-loop flusher burst; obs state is reset first so the
+    post-pass snapshot covers exactly this pass."""
+    eng.cache.clear()
+    EXEC_COUNTERS.reset()
+    obs.reset()
+    eng.start()
+    t0 = time.perf_counter()
+    tickets = [eng.submit(q) for q in log]
+    for t in tickets:
+        t.wait(timeout=300.0)
+    wall_s = time.perf_counter() - t0
+    eng.stop()
+    assert eng._flusher_error is None, eng._flusher_error
+    assert all(t.done for t in tickets)
+    return tickets, wall_s
+
+
+def check_snapshot_consistency(obs, n_queries: int) -> dict:
+    """Post-pass integrity: the registry cut's internal invariants and
+    both exposition round-trips.  Returns the checks as 0/1 ints."""
+    snap = obs.snapshot()
+    hist_ok = all(sum(h["counts"]) == h["count"]
+                  for h in snap["histograms"].values())
+    waits_ok = (snap["histograms"]["queue_wait_us"]["count"] == n_queries
+                and snap["collected"]["exec_tickets_resolved"] == n_queries)
+    buckets = EXEC_COUNTERS["inflight_dispatches"]
+    collect_ok = (snap["histograms"]["collect_latency_us"]["count"]
+                  == buckets
+                  and snap["histograms"]["bucket_batch_size"]["count"]
+                  == buckets
+                  and snap["histograms"]["bucket_batch_size"]["sum"]
+                  == n_queries)
+    prom = parse_prometheus(to_prometheus(snap))
+    prom_ok = (prom["repro_queue_wait_us"]["count"] == n_queries
+               and prom["repro_exec_tickets_resolved"]["value"] == n_queries)
+    json_ok = parse_json(to_json(snap)) == snap
+    return {
+        "histograms_internally_consistent": int(hist_ok),
+        "counts_match_execution": int(waits_ok and collect_ok),
+        "prometheus_round_trip": int(prom_ok),
+        "json_round_trip": int(json_ok),
+    }
+
+
+def run(n_queries: int = 256, n_terms: int = 12, set_size: int = 50000,
+        overlap: int = 400, m: int = 6, flush_tier: int = 8,
+        deadline_us: float = 2000.0, passes: int = 5, seed: int = 11):
+    postings, planted = hot_z_postings(n_terms, set_size, overlap, seed=seed,
+                                       perm_seed=seed)
+    log = hot_mixed_log(n_terms, n_queries, seed=seed + 1)
+    avail = len(jax.devices())
+    assert avail >= LAYOUT[0] * LAYOUT[1], f"needs 4 devices, have {avail}"
+
+    oracle = SearchEngine(postings, w=256, m=m, seed=seed,
+                          use_device=True).query_batch(log)
+
+    plan = (("metrics", Obs(trace=False)), ("traced", Obs(trace=True)))
+    engines = {}
+    for mode, obs in plan:
+        eng, topo = make_engine(postings, log, m, seed, obs, flush_tier,
+                                deadline_us)
+        serve_burst(eng, obs, log)      # priming pass: lazy init + any
+        engines[mode] = (eng, obs, topo)  # shape warming missed
+
+    walls = {mode: [] for mode, _ in plan}
+    identical = True
+    leaked_spans = 0
+    consistency = None
+    trace_shape = None
+    for p in range(passes):
+        for mode, _ in plan:
+            eng, obs, topo = engines[mode]
+            tickets, wall_s = serve_burst(eng, obs, log)
+            walls[mode].append(wall_s)
+            identical &= all(np.array_equal(t.value.doc_ids, o.doc_ids)
+                             for t, o in zip(tickets, oracle))
+            assert all(d["in_flight"] == 0 for d in topo.load_snapshot())
+            if mode == "traced":
+                leaked_spans += obs.tracer.open_count()
+                consistency = check_snapshot_consistency(obs, len(log))
+                roots = obs.tracer.finished("request")
+                bspans = obs.tracer.finished("bucket")
+                trace_shape = {
+                    "request_spans": len(roots),
+                    "bucket_spans": len(bspans),
+                    "all_requests_closed_once": int(
+                        len(roots) == len(log)
+                        and all(s.end_us is not None for s in roots)),
+                }
+            else:
+                assert obs.tracer.finished() == [], \
+                    "disabled tracer recorded spans"
+    assert identical, "observability changed served results"
+
+    # residual attribution: fit the cost model from the collected samples
+    # (ROADMAP item 5's loop), attach it, and re-serve one pass so every
+    # executed signature carries a predicted/residual attribution
+    eng, obs, topo = engines["traced"]
+    fit = calibrate_from_profile(obs.profile)
+    assert fit is not None, "profile had < 2 distinct batch tiers"
+    obs.profile.cost_model = fit
+    serve_burst(eng, obs, log)
+    executed = {s.attrs["sig"] for s in obs.tracer.finished("bucket")}
+    residuals = obs.profile.residuals()
+    covered = executed & set(residuals)
+    residual_coverage = len(covered) / max(1, len(executed))
+    attributed = all(residuals[lbl]["predicted_us"] > 0 for lbl in covered)
+
+    med = {mode: float(np.median(ws)) for mode, ws in walls.items()}
+    qps = {mode: len(log) / w for mode, w in med.items()}
+    return {
+        "devices": avail,
+        "layout": f"{LAYOUT[0]}x{LAYOUT[1]}",
+        "queries": n_queries,
+        "n_terms": n_terms,
+        "set_size": set_size,
+        "overlap": len(planted),
+        "m": m,
+        "flush_tier": flush_tier,
+        "deadline_us": deadline_us,
+        "passes": passes,
+        "identical_to_oracle": int(identical),
+        "walls_s": walls,
+        "served_qps": qps,
+        "overhead": {
+            "qps_ratio_traced_vs_metrics": qps["traced"] / qps["metrics"],
+            "median_wall_metrics_s": med["metrics"],
+            "median_wall_traced_s": med["traced"],
+        },
+        "leaked_spans": leaked_spans,
+        "snapshot": consistency,
+        "snapshot_consistent": int(all(consistency.values())),
+        "trace_shape": trace_shape,
+        "cost_fit": {"per_bucket_us": fit.per_bucket_us,
+                     "per_query_us": fit.per_query_us},
+        "residual_coverage": residual_coverage,
+        "residuals_attributed": int(attributed),
+        "residuals": residuals,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--terms", type=int, default=12)
+    ap.add_argument("--set-size", type=int, default=50000)
+    ap.add_argument("--overlap", type=int, default=400)
+    ap.add_argument("--m", type=int, default=6)
+    ap.add_argument("--flush-tier", type=int, default=8)
+    ap.add_argument("--passes", type=int, default=5)
+    ap.add_argument("--out", type=str,
+                    default=str(pathlib.Path(__file__).resolve().parent.parent
+                                / "BENCH_observability.json"))
+    args = ap.parse_args()
+    res = run(args.queries, args.terms, args.set_size, args.overlap,
+              m=args.m, flush_tier=args.flush_tier, passes=args.passes)
+    print(json.dumps({k: v for k, v in res.items() if k != "residuals"},
+                     indent=2))
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(res, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

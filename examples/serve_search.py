@@ -56,17 +56,22 @@ def to_expr_log(queries):
 
 
 def serve_async(postings, queries, flusher: bool = False, topology=None,
-                max_inflight: int = 8):
+                max_inflight: int = 8, metrics_dump: str = ""):
     """Submit one query at a time; flushes run on the manual pump cadence
     or — with ``flusher`` — on the background flusher thread."""
     from repro.core.engine import EXEC_COUNTERS
 
+    obs = None
+    if metrics_dump:
+        from repro.obs import Obs
+
+        obs = Obs(trace=True)
     # warm_b_tiers defaults to every pow2 tier up to flush_tier, so any
     # partial-flush size hits a pre-traced executable
     engine = AsyncSearchEngine(postings, w=256, m=2, deadline_us=2000,
                                flush_tier=8, warm_queries=queries,
                                warm_top_k=64, topology=topology,
-                               max_inflight=max_inflight)
+                               max_inflight=max_inflight, obs=obs)
     EXEC_COUNTERS.reset()
     t0 = time.perf_counter()
     tickets = []
@@ -100,6 +105,16 @@ def serve_async(postings, queries, flusher: bool = False, topology=None,
               f"(row dispatches {EXEC_COUNTERS['mesh2d_row_dispatches']}), "
               f"balancer dispatches {EXEC_COUNTERS['replica_dispatches']} "
               f"-> {[d['dispatched'] for d in topology.load_snapshot()]}")
+    if obs is not None:
+        from repro.obs.export import to_json, to_prometheus
+
+        snap = obs.snapshot()
+        if metrics_dump == "json":
+            print(to_json(snap, indent=2))
+        else:
+            print(to_prometheus(snap))
+        print(f"# open spans after drain: {obs.tracer.open_count()}")
+        print(obs.trace_dump(limit=3))
 
 
 def main():
@@ -124,6 +139,11 @@ def main():
     ap.add_argument("--expr", action="store_true",
                     help="upgrade part of the log to boolean ∪/∩/∖ "
                          "expressions (parse syntax, e.g. '(a|b)&c-d')")
+    ap.add_argument("--metrics-dump", type=str, default="", nargs="?",
+                    const="prometheus", choices=["", "prometheus", "json"],
+                    help="with --async-front: serve with tracing on and "
+                         "print the metrics exposition (and a span-tree "
+                         "sample) after the run")
     args = ap.parse_args()
 
     topology = None
@@ -151,7 +171,8 @@ def main():
         if args.expr:
             queries = to_expr_log(queries)
         serve_async(kept, queries, flusher=args.flusher, topology=topology,
-                    max_inflight=args.max_inflight)
+                    max_inflight=args.max_inflight,
+                    metrics_dump=args.metrics_dump)
         return
     engine = SearchEngine(postings, w=256, m=2, use_device=args.device,
                           topology=topology)

@@ -82,6 +82,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -232,11 +233,23 @@ class ExecCounters(dict):
       candidates considered / kept by the hashbin candidate pre-filter
       (``exec/candidates.py::CandidateIndex``); the ratio is the
       pre-filter's device-work saving on the suggest workload.
+    - ``dispatch_failures`` — buckets whose dispatch or collect raised
+      (the balancer releases the weight; this counter is the telemetry
+      trace the release alone never left).  Mirrored as a typed counter
+      in ``repro.obs``.
 
-    Counters are process-global and unlocked: concurrent submitter threads
-    can in principle lose an increment.  Exact-count assertions belong in
-    single-threaded tests; serving reads them as telemetry, where a lost
-    bump is noise.
+    Counters are process-global.  Writes and snapshots serialize on one
+    internal lock: plain ``EXEC_COUNTERS["key"] += n`` sites keep working
+    (each read and write is individually consistent; the read-modify-write
+    itself can still lose a concurrent bump — last-write-wins noise, as
+    ever), while :meth:`bump` / :meth:`bump_many` do the whole
+    read-modify-write under the lock and :meth:`snapshot` copies every key
+    under the same lock.  The contract: keys that must stay mutually
+    consistent across a concurrent snapshot (e.g. the
+    ``tickets_resolved`` / ``queue_wait_us`` pair) are updated through one
+    ``bump_many`` call, and readers use ``snapshot()`` instead of key-at-
+    a-time reads — a snapshot can then never observe one of the pair
+    without the other.
     """
 
     _KEYS = (
@@ -258,14 +271,41 @@ class ExecCounters(dict):
         "subexpr_cache_stores", "subexpr_host_merges",
         "count_calls", "count_traces",
         "suggest_prefilter_in", "suggest_prefilter_kept",
+        "dispatch_failures",
     )
 
     def __init__(self):
         super().__init__({k: 0 for k in self._KEYS})
+        # Not reentrant: locked methods below write via dict.__setitem__
+        # directly so they never recurse into the locking override.
+        self._lock = threading.Lock()
+
+    def __setitem__(self, key, value) -> None:
+        with self._lock:
+            dict.__setitem__(self, key, value)
+
+    def bump(self, key: str, n: int = 1) -> None:
+        """Atomic read-modify-write increment of one counter."""
+        with self._lock:
+            dict.__setitem__(self, key, dict.__getitem__(self, key) + n)
+
+    def bump_many(self, deltas: dict) -> None:
+        """Atomically apply several increments — no snapshot can observe
+        a strict subset of them."""
+        with self._lock:
+            for key, n in deltas.items():
+                dict.__setitem__(self, key, dict.__getitem__(self, key) + n)
+
+    def snapshot(self) -> dict:
+        """A consistent copy of every counter, taken under the write
+        lock (the fix for key-at-a-time reads tearing mid-flush)."""
+        with self._lock:
+            return {k: dict.__getitem__(self, k) for k in self._KEYS}
 
     def reset(self) -> None:
-        for key in self._KEYS:
-            self[key] = 0
+        with self._lock:
+            for key in self._KEYS:
+                dict.__setitem__(self, key, 0)
 
 
 EXEC_COUNTERS = ExecCounters()

@@ -264,6 +264,32 @@ class CapacityModel:
         target = int(ordered[idx] * self.margin)
         return max(self.floor, min(g, _pow2_ceil(max(1, target))))
 
+    def telemetry(self) -> Dict[str, Dict]:
+        """One consistent snapshot of the model's learned state, keyed by
+        ``str(adaptive_key)`` (registry collectors and exposition want
+        string keys).  Per key: live (pruned) observation count, the
+        learned tier if warm, and the current survivor-window max —
+        enough to see *why* a tier is what it is without holding the
+        lock yourself."""
+        now = self.clock()
+        with self._lock:
+            out: Dict[str, Dict] = {}
+            for key, window in self._survivors.items():
+                self._prune(window, now)
+                out[str(key)] = {
+                    "observations": len(window),
+                    "learned_tier": self._learned.get(key),
+                    "window_max": (max(s for _, s in window)
+                                   if window else None),
+                }
+            # learned tiers whose windows fully decayed still serve plans
+            for key, tier in self._learned.items():
+                out.setdefault(str(key), {
+                    "observations": 0, "learned_tier": tier,
+                    "window_max": None,
+                })
+            return out
+
 
 class AdaptiveDeadline:
     """Learn per-signature flush budgets from observed bucket-fill rates.
@@ -325,3 +351,18 @@ class AdaptiveDeadline:
             return default_us
         return max(self.min_fraction * default_us,
                    default_us * expected_mates)
+
+    def telemetry(self) -> Dict[str, Dict]:
+        """Per-key arrival-rate state (``str(key)``-keyed): gap EWMA in
+        µs, number of recorded gaps, and whether the key is warm enough
+        (``>= min_observations``) for :meth:`budget_for` to shrink its
+        budget."""
+        with self._lock:
+            return {
+                str(key): {
+                    "gap_ewma_us": self._gap_ewma_us.get(key),
+                    "gaps": n,
+                    "warm": n >= self.min_observations,
+                }
+                for key, n in self._counts.items()
+            }

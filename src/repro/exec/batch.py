@@ -57,6 +57,7 @@ from ..core.engine import (
     dispatch_expr_mesh2d_batch, dispatch_expr_sharded_batch,
     dispatch_mesh2d_batch, dispatch_sharded_batch, expr_total_width,
 )
+from ..obs.profile import sig_label
 from .expr import subexpr_keys
 from .plan import QueryPlan, ShapeSig, plan_query
 
@@ -135,17 +136,34 @@ class InFlightBucket:
     def __init__(self, sig: ShapeSig, items: Sequence[Tuple[int, QueryPlan]],
                  pending: PendingBatch, dispatched_at: float,
                  capacity_model=None, topology=None,
-                 replica: Optional[int] = None, weight: float = 0.0):
+                 replica: Optional[int] = None, weight: float = 0.0,
+                 obs=None):
         self.sig = sig
         self.items = list(items)
         self.pending = pending
         self.dispatched_at = dispatched_at
+        self.dispatch_end_at = time.perf_counter()
         self.capacity_model = capacity_model
         self.topology = topology
         self.replica = replica
         self.weight = weight
+        self.obs = obs
+        self.span = None
         self._out: Optional[Dict[int, Tuple[np.ndarray, Dict]]] = None
         self._finished = False
+        if obs is not None:
+            obs.inflight.inc()
+            obs.inflight_high_water.set(obs.inflight.value)
+            if obs.tracer.enabled:
+                # bucket root span, backdated to dispatch start; the
+                # dispatch stage is already over, recorded retroactively
+                self.span = obs.tracer.start(
+                    "bucket", start_us=dispatched_at * 1e6,
+                    sig=sig_label(sig), batch=len(self.items),
+                    replica=replica)
+                obs.tracer.span_at(
+                    "dispatch", dispatched_at * 1e6,
+                    self.dispatch_end_at * 1e6, parent=self.span)
 
     def is_ready(self) -> bool:
         """Non-blocking readiness peek: True when the first pass's device
@@ -153,16 +171,29 @@ class InFlightBucket:
         any rare overflow re-run)."""
         return self.pending.is_ready()
 
-    def _finish(self) -> None:
+    def _finish(self, failed: bool = False) -> None:
         """One-shot teardown: return the balancer weight and leave the
-        in-flight gauge.  Runs on first collect completion OR failure."""
+        in-flight gauge.  Runs on first collect completion OR failure.
+        ``failed=True`` (dispatch/collect raised) additionally leaves the
+        failure trace: balancer row ``failures``, the
+        ``dispatch_failures`` counter in both telemetry worlds, and an
+        ``error``-flagged bucket span."""
         if self._finished:
             return
         self._finished = True
         if self.replica is not None and self.topology is not None:
-            self.topology.balancer.release(self.replica, self.weight)
+            self.topology.balancer.release(self.replica, self.weight,
+                                           failed=failed)
         EXEC_COUNTERS["inflight_collects"] += 1
+        if failed:
+            EXEC_COUNTERS.bump("dispatch_failures")
         _inflight_exit()
+        if self.obs is not None:
+            self.obs.inflight.dec()
+            if failed:
+                self.obs.dispatch_failures.inc()
+                if self.span is not None:
+                    self.span.end(error=True)
 
     def collect(self) -> Dict[int, Tuple[np.ndarray, Dict]]:
         """Block for the bucket's results; returns {query_index: (values,
@@ -175,16 +206,25 @@ class InFlightBucket:
         captured at dispatch (no lazy-mirror mutation), the balancer and
         the capacity model are internally locked.  Adds the blocking time
         to ``EXEC_COUNTERS["collect_us"]``.
+
+        With ``obs`` attached: observes the dispatch→collect latency,
+        batch-size, and per-row survivor histograms, feeds the per-
+        signature :class:`~repro.obs.profile.ProfileStore`, and closes
+        the bucket span (retroactive ``device`` + ``collect`` children).
         """
         if self._out is not None:
             return self._out
         c0 = time.perf_counter()
         try:
             results = self.pending.collect()
-        finally:
+        except BaseException:
+            self._finish(failed=True)
+            raise
+        else:
             self._finish()
-        EXEC_COUNTERS["collect_us"] += int((time.perf_counter() - c0) * 1e6)
-        us = (time.perf_counter() - self.dispatched_at) * 1e6
+        c1 = time.perf_counter()
+        EXEC_COUNTERS["collect_us"] += int((c1 - c0) * 1e6)
+        us = (c1 - self.dispatched_at) * 1e6
         out: Dict[int, Tuple[np.ndarray, Dict]] = {}
         for (qi, _), (values, stats) in zip(self.items, results):
             stats["batch_us"] = us / len(self.items)
@@ -194,6 +234,22 @@ class InFlightBucket:
         if self.capacity_model is not None:
             self.capacity_model.observe_bucket(
                 self.sig, [stats for _, stats in out.values()])
+        if self.obs is not None:
+            self.obs.collect_latency.observe(us)
+            self.obs.batch_size.observe(len(self.items))
+            for _, stats in out.values():
+                if "r" in stats:
+                    self.obs.survivors.observe(stats["r"])
+            self.obs.profile.observe(self.sig, len(self.items), us)
+            if self.span is not None:
+                # device stage = dispatch issued -> collect entered (the
+                # window jax's async dispatch computes under)
+                self.obs.tracer.span_at(
+                    "device", self.dispatch_end_at * 1e6, c0 * 1e6,
+                    parent=self.span)
+                self.obs.tracer.span_at(
+                    "collect", c0 * 1e6, c1 * 1e6, parent=self.span)
+                self.span.end()
         self._out = out
         return out
 
@@ -209,6 +265,7 @@ def dispatch_bucket(
     capacity_model=None,
     topology=None,
     get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
+    obs=None,
 ) -> InFlightBucket:
     """Dispatch ONE same-signature bucket without blocking; returns an
     :class:`InFlightBucket` whose :meth:`~InFlightBucket.collect` yields
@@ -230,8 +287,44 @@ def dispatch_bucket(
     Counters: ``inflight_dispatches`` per bucket; ``overlap_high_water``
     tracks the max simultaneously dispatched-not-collected buckets;
     ``replica_dispatches`` per balancer placement; the per-pass pipeline
-    counters are unchanged.
+    counters are unchanged.  A dispatch that raises (any branch) bumps
+    ``dispatch_failures`` once — balancer branches additionally mark the
+    row's failure via ``release(..., failed=True)``.
+
+    ``obs``: an optional :class:`repro.obs.Obs`.  When given, the bucket
+    reports through it — in-flight gauge + high-water, dispatch→collect
+    latency / batch-size / survivor histograms, the per-signature profile
+    store, and (tracer enabled) a ``bucket`` span with retroactive
+    ``dispatch`` / ``device`` / ``collect`` children.  ``None`` keeps the
+    executor layer decoupled: only ``EXEC_COUNTERS`` is touched.
     """
+    try:
+        return _dispatch_bucket(
+            get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
+            shard_axis=shard_axis, get_sharded_set=get_sharded_set,
+            capacity_model=capacity_model, topology=topology,
+            get_replica_set=get_replica_set, obs=obs,
+        )
+    except BaseException:
+        EXEC_COUNTERS.bump("dispatch_failures")
+        if obs is not None:
+            obs.dispatch_failures.inc()
+        raise
+
+
+def _dispatch_bucket(
+    get_set: Callable[[object], DeviceSet],
+    sig: ShapeSig,
+    items: Sequence[Tuple[int, QueryPlan]],
+    use_pallas="auto",
+    mesh=None,
+    shard_axis: str = SHARD_AXIS,
+    get_sharded_set: Optional[Callable[[object], DeviceSet]] = None,
+    capacity_model=None,
+    topology=None,
+    get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
+    obs=None,
+) -> InFlightBucket:
     shards = getattr(sig, "shards", 1)
     replicas = getattr(sig, "replicas", 1)
     t0 = time.perf_counter()
@@ -282,7 +375,7 @@ def dispatch_bucket(
                     sub_keys=[sub_keys[qi] for qi, _ in items],
                 )
             except BaseException:
-                topology.balancer.release(replica, weight)
+                topology.balancer.release(replica, weight, failed=True)
                 raise
             EXEC_COUNTERS["replica_dispatches"] += 1
         else:
@@ -295,7 +388,7 @@ def dispatch_bucket(
         _inflight_enter()
         return InFlightBucket(
             sig, items, pending, t0, capacity_model=capacity_model,
-            topology=topology, replica=replica, weight=weight,
+            topology=topology, replica=replica, weight=weight, obs=obs,
         )
     cands = getattr(sig, "cands", 0)
     if cands > 0:
@@ -336,7 +429,7 @@ def dispatch_bucket(
                 pending = dispatch_count_batch(
                     rows, k, use_pallas=use_pallas)
             except BaseException:
-                topology.balancer.release(replica, weight)
+                topology.balancer.release(replica, weight, failed=True)
                 raise
             EXEC_COUNTERS["replica_dispatches"] += 1
         else:
@@ -348,7 +441,7 @@ def dispatch_bucket(
         _inflight_enter()
         return InFlightBucket(
             sig, items, pending, t0, capacity_model=capacity_model,
-            topology=topology, replica=replica, weight=weight,
+            topology=topology, replica=replica, weight=weight, obs=obs,
         )
     if topology is not None and (shards > 1 or replicas > 1):
         assert get_sharded_set is not None, (
@@ -385,7 +478,7 @@ def dispatch_bucket(
             )
         except BaseException:
             # dispatch itself failed — there is no collect to release at
-            topology.balancer.release(replica, weight)
+            topology.balancer.release(replica, weight, failed=True)
             raise
         EXEC_COUNTERS["replica_dispatches"] += 1
     else:
@@ -397,7 +490,7 @@ def dispatch_bucket(
     _inflight_enter()
     return InFlightBucket(
         sig, items, pending, t0, capacity_model=capacity_model,
-        topology=topology, replica=replica, weight=weight,
+        topology=topology, replica=replica, weight=weight, obs=obs,
     )
 
 
@@ -412,6 +505,7 @@ def execute_bucket(
     capacity_model=None,
     topology=None,
     get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
+    obs=None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute ONE same-signature bucket; returns {query_index: (values,
     stats)}.
@@ -466,7 +560,7 @@ def execute_bucket(
         get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
         shard_axis=shard_axis, get_sharded_set=get_sharded_set,
         capacity_model=capacity_model, topology=topology,
-        get_replica_set=get_replica_set,
+        get_replica_set=get_replica_set, obs=obs,
     ).collect()
 
 
@@ -481,6 +575,7 @@ def execute_plan_buckets(
     topology=None,
     get_replica_set: Optional[Callable[[int, object], DeviceSet]] = None,
     max_inflight: int = 4,
+    obs=None,
 ) -> Dict[int, Tuple[np.ndarray, Dict]]:
     """Execute device plans bucket-by-bucket; returns {query_index: (values,
     stats)}.
@@ -506,7 +601,7 @@ def execute_plan_buckets(
             get_set, sig, items, use_pallas=use_pallas, mesh=mesh,
             shard_axis=shard_axis, get_sharded_set=get_sharded_set,
             capacity_model=capacity_model, topology=topology,
-            get_replica_set=get_replica_set,
+            get_replica_set=get_replica_set, obs=obs,
         ))
         if len(window) >= max(1, max_inflight):
             out.update(window.pop(0).collect())

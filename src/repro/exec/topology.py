@@ -39,6 +39,7 @@ capacity model's keys.
 """
 from __future__ import annotations
 
+import bisect
 import threading
 from typing import Dict, List, Optional
 
@@ -67,9 +68,18 @@ class ReplicaBalancer:
     nothing will ever collect it.
 
     :meth:`loads` snapshots the accounting — ``in_flight`` weight,
-    cumulative ``dispatched`` bucket count and ``weight`` per replica —
-    for telemetry, benchmarks, and the distribution tests.
+    cumulative ``dispatched`` bucket count, ``weight``, a per-row
+    ``queued_weight`` histogram (power-of-two buckets over per-bucket
+    acquired weight — the row's load *distribution*, not just its total),
+    and ``failures`` (buckets released via ``release(..., failed=True)``
+    because dispatch or collect raised) — for telemetry, benchmarks, and
+    the distribution tests.
     """
+
+    # pow2 upper bounds for the per-row acquired-weight histogram; weight
+    # is B * G (phase-1 rows), so the lattice spans one tiny bucket to a
+    # full-capacity giant.  Last bucket is the +Inf overflow.
+    WEIGHT_BUCKETS = tuple(float(1 << i) for i in range(0, 32, 2))
 
     def __init__(self, n_replicas: int):
         assert n_replicas >= 1
@@ -78,10 +88,14 @@ class ReplicaBalancer:
         self._in_flight = [0.0] * self.n_replicas
         self._dispatched = [0] * self.n_replicas
         self._weight = [0.0] * self.n_replicas
+        self._failures = [0] * self.n_replicas
+        nb = len(self.WEIGHT_BUCKETS) + 1
+        self._weight_hist = [[0] * nb for _ in range(self.n_replicas)]
 
     def acquire(self, weight: float = 1.0) -> int:
         """Pick the least-loaded replica and account ``weight`` to it."""
         weight = float(weight)
+        b = bisect.bisect_left(self.WEIGHT_BUCKETS, weight)
         with self._lock:
             r = min(
                 range(self.n_replicas),
@@ -90,28 +104,52 @@ class ReplicaBalancer:
             self._in_flight[r] += weight
             self._dispatched[r] += 1
             self._weight[r] += weight
+            self._weight_hist[r][b] += 1
             return r
 
-    def release(self, replica: int, weight: float = 1.0) -> None:
-        """Return ``weight`` of in-flight load on ``replica`` (bucket done)."""
+    def release(self, replica: int, weight: float = 1.0,
+                failed: bool = False) -> None:
+        """Return ``weight`` of in-flight load on ``replica`` (bucket done).
+
+        ``failed=True`` marks the release as a dispatch/collect failure:
+        the weight comes back either way (nothing will ever collect the
+        bucket), but the failure leaves a telemetry trace in
+        ``loads()[r]["failures"]`` instead of vanishing.
+        """
         with self._lock:
             self._in_flight[replica] = max(
                 0.0, self._in_flight[replica] - float(weight))
+            if failed:
+                self._failures[replica] += 1
 
     def loads(self) -> List[Dict[str, float]]:
-        """Per-replica accounting snapshot (index = replica id)."""
+        """Per-replica accounting snapshot (index = replica id).  Taken
+        under the balancer lock in one pass — rows are mutually
+        consistent.  ``queued_weight`` is the cumulative histogram of
+        per-bucket acquired weights: ``counts[i]`` buckets had weight <=
+        ``buckets[i]`` (trailing count = above the last bound)."""
         with self._lock:
-            return [
-                {
+            out = []
+            for r in range(self.n_replicas):
+                cum, cumulative = 0, []
+                for c in self._weight_hist[r]:
+                    cum += c
+                    cumulative.append(cum)
+                out.append({
                     "in_flight": self._in_flight[r],
                     "dispatched": self._dispatched[r],
                     "weight": self._weight[r],
-                }
-                for r in range(self.n_replicas)
-            ]
+                    "failures": self._failures[r],
+                    "queued_weight": {
+                        "buckets": list(self.WEIGHT_BUCKETS),
+                        "counts": cumulative,
+                    },
+                })
+            return out
 
     def reset(self) -> None:
-        """Zero all accounting (in-flight, dispatched, cumulative weight).
+        """Zero all accounting (in-flight, dispatched, cumulative weight,
+        failures, weight histograms).
 
         Benchmark/test hygiene between measured passes — never call it
         while buckets are in flight: their deferred :meth:`release` at
@@ -122,6 +160,9 @@ class ReplicaBalancer:
             self._in_flight = [0.0] * self.n_replicas
             self._dispatched = [0] * self.n_replicas
             self._weight = [0.0] * self.n_replicas
+            self._failures = [0] * self.n_replicas
+            nb = len(self.WEIGHT_BUCKETS) + 1
+            self._weight_hist = [[0] * nb for _ in range(self.n_replicas)]
 
 
 class Topology:

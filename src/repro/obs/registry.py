@@ -1,0 +1,300 @@
+"""Typed metrics registry: Counter / Gauge / Histogram with atomic snapshots.
+
+The serving stack's original telemetry is ``core.engine.EXEC_COUNTERS`` — a
+process-global dict of flat integers.  That surface stays (every existing
+``EXEC_COUNTERS["key"] += 1`` site keeps working, now tear-free — see the
+lock added in ``ExecCounters``), but it can only count.  This module adds
+the typed half the load-attribution work needs:
+
+- :class:`Counter` — monotonic float/int accumulator.
+- :class:`Gauge` — last-written value, plus ``track_max`` high-water mode.
+- :class:`Histogram` — bucketed distribution; the default bucket lattice
+  (:func:`default_latency_buckets`) is log-spaced 1-2-5 over µs so one
+  shape covers queue waits (~10² µs) and collect latencies (~10⁵ µs)
+  without per-metric tuning.
+
+All metrics registered on one :class:`MetricsRegistry` share the
+registry's single lock, so :meth:`MetricsRegistry.snapshot` is a *consistent
+cut*: no metric advances while the copy is taken, and multi-metric
+invariants (e.g. a histogram's ``sum``/``count`` pair, or two counters
+always bumped together through one locked call) can never tear across a
+snapshot.  The lock is uncontended in practice — metric updates happen per
+bucket / per ticket, not per element — so "lock-cheap" holds: one acquire
+per update, ~100 ns, noise next to a jit dispatch.
+
+Registries also accept **collectors** — callbacks returning a flat
+``{name: value}`` dict, read under the lock at snapshot time.  That is how
+``EXEC_COUNTERS`` is subsumed without rewriting its ~50 write sites: the
+default :class:`~repro.obs.Obs` registers ``EXEC_COUNTERS.snapshot`` as a
+collector, so every legacy counter appears in the typed snapshot (and in
+the Prometheus/JSON expositions) under the ``exec_`` prefix.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_latency_buckets", "pow2_buckets",
+]
+
+
+def default_latency_buckets(lo_us: float = 1.0,
+                            hi_us: float = 1e7) -> List[float]:
+    """Log-spaced 1-2-5 upper bounds in µs (1, 2, 5, 10, … up to
+    ``hi_us``).  Wide enough for queue waits and whole-bucket collect
+    latencies on CPU and accelerator backends alike; +Inf is implicit."""
+    out: List[float] = []
+    decade = lo_us
+    while decade <= hi_us:
+        for mult in (1.0, 2.0, 5.0):
+            bound = decade * mult
+            if lo_us <= bound <= hi_us:
+                out.append(bound)
+        decade *= 10.0
+    return out
+
+
+def pow2_buckets(lo: int = 1, hi: int = 1 << 20) -> List[float]:
+    """Power-of-two upper bounds — the natural lattice for batch sizes and
+    survivor counts (the executor's B-tiers and capacity tiers are pow2)."""
+    out: List[float] = []
+    b = lo
+    while b <= hi:
+        out.append(float(b))
+        b <<= 1
+    return out
+
+
+class _Metric:
+    """Base: a named metric bound to its registry's shared lock."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 lock: Optional[threading.Lock] = None):
+        self.name = name
+        self.help = help
+        self._lock = lock if lock is not None else threading.Lock()
+
+
+class Counter(_Metric):
+    """Monotonic accumulator.  ``inc(n)`` with ``n < 0`` raises — use a
+    Gauge for values that go down."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = "", lock=None):
+        super().__init__(name, help, lock)
+        self._value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError("Counter.inc is monotonic; use a Gauge")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def _read(self) -> float:  # caller holds the lock (snapshot path)
+        return self._value
+
+    def _reset(self) -> None:  # caller holds the lock
+        self._value = 0.0
+
+
+class Gauge(_Metric):
+    """Last-written value.  With ``track_max`` the gauge keeps the largest
+    value ever :meth:`set` since the last reset — the high-water idiom
+    (``overlap_high_water``) as a first-class type."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = "", lock=None,
+                 track_max: bool = False):
+        super().__init__(name, help, lock)
+        self.track_max = track_max
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            if self.track_max:
+                self._value = max(self._value, v)
+            else:
+                self._value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value -= n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+    def _read(self) -> float:
+        return self._value
+
+    def _reset(self) -> None:
+        self._value = 0.0
+
+
+class Histogram(_Metric):
+    """Fixed-bucket distribution: cumulative-compatible counts plus
+    ``sum``/``count`` — the Prometheus histogram data model, kept as
+    per-bucket (non-cumulative) counts internally and cumulated by the
+    exposition writer.
+
+    ``buckets`` are ascending upper bounds (``le``); observations above
+    the last bound land in the implicit +Inf bucket.  ``observe`` is one
+    ``bisect`` + two adds under the shared lock.
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "", lock=None,
+                 buckets: Optional[Sequence[float]] = None):
+        super().__init__(name, help, lock)
+        bounds = list(buckets if buckets is not None
+                      else default_latency_buckets())
+        assert bounds == sorted(bounds) and len(set(bounds)) == len(bounds), (
+            "histogram buckets must be strictly ascending"
+        )
+        self.bounds = bounds
+        self._counts = [0] * (len(bounds) + 1)  # +1: the +Inf bucket
+        self._sum = 0.0
+        self._count = 0
+
+    def observe(self, v: float) -> None:
+        i = bisect.bisect_left(self.bounds, v)
+        with self._lock:
+            self._counts[i] += 1
+            self._sum += v
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def quantile(self, q: float) -> float:
+        """Approximate quantile from bucket upper bounds (the coarse but
+        honest read: the true value is <= the returned bound)."""
+        assert 0.0 <= q <= 1.0
+        with self._lock:
+            if self._count == 0:
+                return 0.0
+            target = q * self._count
+            seen = 0
+            for i, c in enumerate(self._counts):
+                seen += c
+                if seen >= target and c:
+                    return (self.bounds[i] if i < len(self.bounds)
+                            else float("inf"))
+            return float("inf")
+
+    def _read(self) -> Dict:
+        return {
+            "buckets": list(self.bounds),
+            "counts": list(self._counts),
+            "sum": self._sum,
+            "count": self._count,
+        }
+
+    def _reset(self) -> None:
+        self._counts = [0] * (len(self.bounds) + 1)
+        self._sum = 0.0
+        self._count = 0
+
+
+class MetricsRegistry:
+    """Named metrics + collectors behind ONE lock; atomic snapshots.
+
+    ``counter`` / ``gauge`` / ``histogram`` are get-or-create (idempotent
+    for the same name and kind; a kind clash raises — one name, one type).
+    :meth:`snapshot` copies every metric and runs every collector while
+    holding the lock, so the returned dict is a consistent point-in-time
+    cut of the whole registry.  Collectors may take their own internal
+    locks (``ExecCounters`` does); nothing in this module calls back into
+    a registry from under a metric lock, so the ordering is acyclic.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, _Metric] = {}
+        self._collectors: List[Callable[[], Dict[str, float]]] = []
+
+    def _get_or_make(self, cls, name: str, help: str, **kw) -> _Metric:
+        with self._lock:
+            existing = self._metrics.get(name)
+            if existing is not None:
+                if not isinstance(existing, cls):
+                    raise ValueError(
+                        f"metric {name!r} already registered as "
+                        f"{existing.kind}, not {cls.kind}")
+                return existing
+            metric = cls(name, help, lock=self._lock, **kw)
+            self._metrics[name] = metric
+            return metric
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_make(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "",
+              track_max: bool = False) -> Gauge:
+        return self._get_or_make(Gauge, name, help, track_max=track_max)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+        return self._get_or_make(Histogram, name, help, buckets=buckets)
+
+    def register_collector(self,
+                           fn: Callable[[], Dict[str, float]]) -> None:
+        """Register a ``() -> {name: value}`` callback, read under the
+        registry lock at snapshot time (values export as gauges)."""
+        with self._lock:
+            self._collectors.append(fn)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> Dict:
+        """One consistent cut: ``{"counters": {...}, "gauges": {...},
+        "histograms": {...}, "collected": {...}}``.  Taken entirely under
+        the registry lock — no metric can advance mid-copy."""
+        with self._lock:
+            snap: Dict = {"counters": {}, "gauges": {}, "histograms": {},
+                          "collected": {}}
+            for name, m in self._metrics.items():
+                if isinstance(m, Counter):
+                    snap["counters"][name] = m._read()
+                elif isinstance(m, Histogram):
+                    snap["histograms"][name] = m._read()
+                else:
+                    snap["gauges"][name] = m._read()
+            for fn in self._collectors:
+                snap["collected"].update(fn())
+            return snap
+
+    def reset(self) -> None:
+        """Zero every metric (test/benchmark hygiene between passes;
+        collectors own their reset — ``EXEC_COUNTERS.reset()`` is
+        separate, as it always was)."""
+        with self._lock:
+            for m in self._metrics.values():
+                m._reset()

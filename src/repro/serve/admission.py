@@ -86,12 +86,24 @@ class Ticket:
     Resolution is single-shot: a second ``resolve`` / ``resolve_error``
     raises instead of clobbering a result some caller may already have
     read (the failed-then-retried-bucket hazard).
+
+    Tracing: the submitting engine may stamp ``span`` (the request's root
+    span) and ``admission_span`` (the queue-wait child) plus ``obs``.
+    The root span is closed inside :meth:`_record_wait` — i.e. exactly
+    once, under the same single-shot guarantee as resolution itself, on
+    every path (value, error, cache hit, host plan) — which is the
+    "every submitted ticket yields exactly one closed root span"
+    invariant the observability tests gate.
     """
 
     submitted_at: float
     deadline_us: float
     wait_us: float = 0.0
     error: Optional[BaseException] = None
+    span: Any = dataclasses.field(default=None, repr=False, compare=False)
+    admission_span: Any = dataclasses.field(
+        default=None, repr=False, compare=False)
+    obs: Any = dataclasses.field(default=None, repr=False, compare=False)
     _value: Any = None
     _done: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False)
@@ -124,11 +136,27 @@ class Ticket:
         (tickets with no budget — e.g. resolved-at-submit paths with
         ``deadline_us == 0`` — can't violate).  This is the raw material
         for the load harness's SLO-burn accounting.
+
+        The three counters are one :meth:`ExecCounters.bump_many` — a
+        concurrent ``EXEC_COUNTERS.snapshot()`` sees either none or all
+        of this resolution (the tearing fix).  With ``obs`` stamped, the
+        wait also lands in the typed ``queue_wait_us`` histogram and the
+        request's root span closes here (exactly once per ticket).
         """
-        EXEC_COUNTERS["tickets_resolved"] += 1
-        EXEC_COUNTERS["queue_wait_us"] += int(wait_us)
-        if self.deadline_us > 0 and wait_us > self.deadline_us + 0.5:
-            EXEC_COUNTERS["deadline_violations"] += 1
+        violated = (self.deadline_us > 0
+                    and wait_us > self.deadline_us + 0.5)
+        EXEC_COUNTERS.bump_many({
+            "tickets_resolved": 1,
+            "queue_wait_us": int(wait_us),
+            "deadline_violations": 1 if violated else 0,
+        })
+        if self.obs is not None:
+            self.obs.queue_wait.observe(wait_us)
+        if self.span is not None:
+            self.span.end(wait_us=round(wait_us, 1),
+                          deadline_violation=violated,
+                          error=(type(self.error).__name__
+                                 if self.error is not None else None))
 
     def resolve(self, value: Any, wait_us: float = 0.0) -> None:
         if self._done.is_set():
@@ -173,7 +201,8 @@ class AdmissionQueue:
 
     def submit(self, key: Hashable, item: Any,
                deadline_us: Optional[float] = None,
-               submitted_at: Optional[float] = None) -> Ticket:
+               submitted_at: Optional[float] = None,
+               span: Any = None, obs: Any = None) -> Ticket:
         """Queue ``item`` under ``key``; returns its unresolved Ticket.
 
         The per-submission ``deadline_us`` overrides the queue default.
@@ -185,12 +214,22 @@ class AdmissionQueue:
         Submission never flushes by itself — call :meth:`take_full` /
         :meth:`take_due` afterwards so the engine (which owns execution)
         controls when device work happens.
+
+        ``span`` / ``obs`` stamp the request's root span and telemetry
+        bundle onto the ticket *before* it becomes visible to any
+        concurrent flush (an "admission" child span opens here and is
+        ended by the flusher when the bucket is picked up).
         """
         ticket = Ticket(
             submitted_at=(self.clock() if submitted_at is None
                           else float(submitted_at)),
             deadline_us=self.deadline_us if deadline_us is None else float(deadline_us),
         )
+        if span is not None:
+            ticket.span = span
+            ticket.admission_span = span.child("admission")
+        if obs is not None:
+            ticket.obs = obs
         with self._lock:
             self._buckets.setdefault(key, []).append((ticket, item))
         return ticket

@@ -82,6 +82,7 @@ __all__ = [
     "attach_wall_clock",
     "CostModel",
     "calibrate_cost",
+    "calibrate_from_profile",
     "LoadReport",
     "run_virtual",
     "run_wallclock",
@@ -344,6 +345,25 @@ def calibrate_cost(eng, queries: Sequence[Sequence[int]],
     per_query = max(0.0, (wt - w1) / max(1, tier - 1))
     per_bucket = max(1.0, w1 - per_query)
     return CostModel(per_bucket_us=per_bucket, per_query_us=per_query)
+
+
+def calibrate_from_profile(profile) -> Optional[CostModel]:
+    """Fit a :class:`CostModel` from production execution profiles.
+
+    ``profile`` is an ``obs.profile.ProfileStore`` (anything with
+    ``fit_cost()``); its samples come from *live* collected buckets, so
+    unlike :func:`calibrate_cost` no synthetic probe traffic is needed —
+    this is the ROADMAP calibration loop closed: serve → profile →
+    refit → re-run the virtual-clock harness with the refreshed model.
+    Returns ``None`` while the profile can't identify both coefficients
+    (fewer than two distinct batch sizes observed).
+    """
+    fit = profile.fit_cost()
+    if fit is None:
+        return None
+    per_bucket, per_query = fit
+    return CostModel(per_bucket_us=max(1.0, per_bucket),
+                     per_query_us=per_query)
 
 
 # ----------------------------------------------------------------------

@@ -51,6 +51,8 @@ from ..exec.expr import (
     And, Diff, Expr, Or, Term, canonicalize, eval_host, expr_key,
 )
 from ..exec.plan import QueryPlan, ShapeSig, plan_query, plan_suggest
+from ..obs import get_obs
+from ..obs.profile import sig_label
 from .admission import AdmissionQueue, Ticket
 
 
@@ -114,7 +116,11 @@ class SearchEngine:
                  m: int = 2, seed: int = 0, use_device: bool = False,
                  hashbin_ratio: float = 100.0, result_cache: int = 0,
                  mesh=None, shard_min_g: int = SHARD_MIN_G,
-                 adaptive_capacity=False, topology=None):
+                 adaptive_capacity=False, topology=None, obs=None):
+        # observability bundle (repro.obs.Obs): typed metrics + profile
+        # store always report through it; tracing only if its tracer is
+        # enabled.  Defaults to the shared process-global instance.
+        self.obs = obs if obs is not None else get_obs()
         self.family = random_hash_family(m, w, seed=seed)
         self.perm = default_permutation(seed)
         self.w, self.m = w, m
@@ -421,6 +427,7 @@ class SearchEngine:
                 topology=self.device.topology,
                 get_replica_set=lambda r, term: self.device.get_replica_set(
                     r, str(term)),
+                obs=self.obs,
             )
             for i, plan in device_plans:
                 res, stats = by_index[i]
@@ -566,10 +573,16 @@ class AsyncSearchEngine(SearchEngine):
                  adaptive_deadline=False,
                  max_inflight: int = 8,
                  inline_tier_flush: bool = True,
+                 snapshot_every_s: float = 1.0,
                  **kw):
         kw.setdefault("use_device", True)
         super().__init__(postings, result_cache=result_cache, **kw)
         self.clock = clock
+        # flusher-driven metric snapshots: every ``snapshot_every_s`` of
+        # flusher activity, one consistent registry cut lands in
+        # ``self.obs.ring`` (post-mortem surface).  0 disables.
+        self.snapshot_every_s = float(snapshot_every_s)
+        self._last_snapshot_at = 0.0
         # manual mode only: with the flusher stopped, submit flushes full
         # tiers inline (the historical behavior).  A deterministic driver
         # that emulates the flusher itself (serve/loadgen.py's virtual-time
@@ -707,6 +720,11 @@ class AsyncSearchEngine(SearchEngine):
                 return
             self._wake.clear()
             EXEC_COUNTERS["flusher_wakeups"] += 1
+            if self.snapshot_every_s > 0:
+                now_mono = time.monotonic()
+                if now_mono - self._last_snapshot_at >= self.snapshot_every_s:
+                    self._last_snapshot_at = now_mono
+                    self.obs.ring.push(now_mono, self.obs.registry.snapshot())
             try:
                 self._flush(self.admission.take_due())
                 # reap everything already finished on the device...
@@ -746,16 +764,42 @@ class AsyncSearchEngine(SearchEngine):
         budget) instead of silently forgiving it — the coordinated-
         omission correction.  Applies to every path, including
         resolved-at-submit ones.
+
+        Tracing (when ``self.obs.tracer`` is enabled): each submit opens
+        one ``request`` root span with a ``plan`` child; the root carries
+        the resolved ``route`` (``cache`` / ``subcache`` / ``host`` /
+        ``device`` + sig label) and is closed exactly once at ticket
+        resolution, whichever path resolves it.
         """
-        plan = self.plan(terms)
-        cached = self._cached_result(plan)
-        if cached is not None:
-            return self._resolved_now(cached, arrival_at=arrival_at)
-        if plan.algorithm != "device":
-            gen = self.cache.generation
-            result = self._execute_host_plan(plan)
-            self._store(plan, result, generation=gen)
-            return self._resolved_now(result, arrival_at=arrival_at)
+        span = (self.obs.tracer.start("request")
+                if self.obs.tracer.enabled else None)
+        try:
+            if span is not None:
+                with span.child("plan"):
+                    plan = self.plan(terms)
+            else:
+                plan = self.plan(terms)
+            cached = self._cached_result(plan)
+            if cached is not None:
+                if span is not None:
+                    span.set(route=("subcache" if cached.stats.get(
+                        "subexpr_merge") else "cache"))
+                return self._resolved_now(cached, arrival_at=arrival_at,
+                                          span=span)
+            if plan.algorithm != "device":
+                if span is not None:
+                    span.set(route="host", algorithm=plan.algorithm)
+                gen = self.cache.generation
+                result = self._execute_host_plan(plan)
+                self._store(plan, result, generation=gen)
+                return self._resolved_now(result, arrival_at=arrival_at,
+                                          span=span)
+        except BaseException:
+            if span is not None:
+                span.end(error=True)
+            raise
+        if span is not None:
+            span.set(route="device", sig=sig_label(plan.sig))
         if self.adaptive_deadline is not None:
             key = adaptive_key(plan.sig)
             self.adaptive_deadline.observe(key, self.clock())
@@ -763,7 +807,8 @@ class AsyncSearchEngine(SearchEngine):
                 deadline_us = self.adaptive_deadline.budget_for(
                     key, self.admission.deadline_us)
         ticket = self.admission.submit(plan.sig, plan, deadline_us,
-                                       submitted_at=arrival_at)
+                                       submitted_at=arrival_at,
+                                       span=span, obs=self.obs)
         if self.running:
             # the queue reports 0 for full tiers, so waking the flusher
             # covers both the tier-flush and the recompute-sleep cases
@@ -809,16 +854,22 @@ class AsyncSearchEngine(SearchEngine):
         return self.admission.pending()
 
     def _resolved_now(self, result: QueryResult,
-                      arrival_at: Optional[float] = None) -> Ticket:
+                      arrival_at: Optional[float] = None,
+                      span=None) -> Ticket:
         """Pre-resolved ticket for paths answered inside ``submit``.
 
         With an ``arrival_at`` back-stamp the wait is the submitter's
         lateness (scheduled arrival -> now), not zero — a cache hit the
         runtime got to 3 ms late still waited 3 ms from the caller's side.
+        The request's root ``span`` (if tracing) is stamped before
+        resolution so it closes through the same single-shot
+        ``_record_wait`` path as queued tickets.
         """
         now = self.clock()
         arrival = now if arrival_at is None else min(float(arrival_at), now)
         ticket = Ticket(submitted_at=arrival, deadline_us=0.0)
+        ticket.span = span
+        ticket.obs = self.obs
         ticket.resolve(result, wait_us=(now - arrival) * 1e6)
         return ticket
 
@@ -873,6 +924,10 @@ class AsyncSearchEngine(SearchEngine):
         ``deadline_us`` bounds.
         """
         flush_at = self.clock()
+        for ticket, _ in entries:
+            # queue wait is over the moment the flush picks the bucket up
+            if ticket.admission_span is not None:
+                ticket.admission_span.end()
         live = []
         for ticket, plan in entries:
             # re-plan via the original spec (flat term list OR canonical
@@ -903,12 +958,22 @@ class AsyncSearchEngine(SearchEngine):
                 topology=self.device.topology,
                 get_replica_set=lambda r, term: self.device.get_replica_set(
                     r, str(term)),
+                obs=self.obs,
             )
         except Exception as exc:
             for ticket, _ in live:
                 ticket.resolve_error(
                     exc, wait_us=(flush_at - ticket.submitted_at) * 1e6)
             return
+        if bucket.span is not None:
+            # cross-link the bucket span and its member request traces so
+            # trace_dump shows which requests shared a flight
+            bucket.span.set(traces=[t.span.trace_id for t, _ in live
+                                    if t.span is not None])
+            for ticket, _ in live:
+                if ticket.span is not None:
+                    ticket.span.set(bucket_span=bucket.span.span_id,
+                                    replica=bucket.replica)
         with self._flight_cv:
             self._flights.append(_Flight(bucket, live, flush_at, gen))
             self._flight_cv.notify_all()
@@ -1064,7 +1129,8 @@ class SuggestEngine:
                  result_cache: int = 1024, mesh=None,
                  shard_min_g: int = SHARD_MIN_G, topology=None,
                  min_shared_bins: int = 1,
-                 max_candidates: Optional[int] = None):
+                 max_candidates: Optional[int] = None, obs=None):
+        self.obs = obs if obs is not None else get_obs()
         self.family = random_hash_family(m, w, seed=seed)
         self.perm = default_permutation(seed)
         self.w, self.m = w, m
@@ -1159,6 +1225,23 @@ class SuggestEngine:
                 out.append((c, n))
         return out
 
+    def _execute_flat(self, flat: List[Tuple[int, QueryPlan]]
+                      ) -> Dict[int, Tuple[np.ndarray, Dict]]:
+        """Run the flattened device-routed class plans for one batch."""
+        return execute_plan_buckets(
+            lambda sid: self.device.sets[str(sid)],
+            flat,
+            use_pallas=self.device.use_pallas,
+            mesh=self.device.mesh,
+            shard_axis=self.device.shard_axis,
+            get_sharded_set=lambda sid: self.device.get_mesh_set(
+                str(sid)),
+            topology=self.device.topology,
+            get_replica_set=lambda r, sid: self.device.get_replica_set(
+                r, str(sid)),
+            obs=self.obs,
+        )
+
     def suggest(self, set_id: int, k: int) -> SuggestResult:
         """Serve one suggestion query — a batch of one."""
         return self.suggest_batch([(set_id, k)])[0]
@@ -1176,6 +1259,11 @@ class SuggestEngine:
             if set_id not in self.corpus:
                 raise KeyError(set_id)
         gen = self.cache.generation
+        tracing = self.obs.tracer.enabled
+        spans = [self.obs.tracer.start("request", kind="suggest",
+                                       set_id=set_id, k=int(k))
+                 if tracing else None
+                 for set_id, k in requests]
         results: List[Optional[SuggestResult]] = [None] * len(requests)
         req_plans: Dict[int, List[Tuple[int, QueryPlan]]] = {}
         flat: List[Tuple[int, QueryPlan]] = []
@@ -1186,9 +1274,16 @@ class SuggestEngine:
                 results[ri] = SuggestResult(
                     suggestions, 0.0, algorithm,
                     {"cached": True, "k": int(k)})
+                if spans[ri] is not None:
+                    spans[ri].end(route="cache")
                 continue
             plans = []
-            for plan in self._plans_for(set_id, int(k)):
+            if spans[ri] is not None:
+                with spans[ri].child("plan"):
+                    req_class_plans = self._plans_for(set_id, int(k))
+            else:
+                req_class_plans = self._plans_for(set_id, int(k))
+            for plan in req_class_plans:
                 if plan.algorithm == "device":
                     plans.append((len(flat), plan))
                     flat.append((len(flat), plan))
@@ -1196,19 +1291,16 @@ class SuggestEngine:
                     plans.append((-1, plan))
             req_plans[ri] = plans
         by_index: Dict[int, Tuple[np.ndarray, Dict]] = {}
-        if flat:
-            by_index = execute_plan_buckets(
-                lambda sid: self.device.sets[str(sid)],
-                flat,
-                use_pallas=self.device.use_pallas,
-                mesh=self.device.mesh,
-                shard_axis=self.device.shard_axis,
-                get_sharded_set=lambda sid: self.device.get_mesh_set(
-                    str(sid)),
-                topology=self.device.topology,
-                get_replica_set=lambda r, sid: self.device.get_replica_set(
-                    r, str(sid)),
-            )
+        try:
+            by_index = self._execute_flat(flat) if flat else {}
+        except BaseException:
+            # Close every still-open request span (cache hits already
+            # ended; Span.end is idempotent) so a failed device batch
+            # can't leak open spans.
+            for s in spans:
+                if s is not None:
+                    s.end(error=True)
+            raise
         for ri, (set_id, k) in enumerate(requests):
             if results[ri] is not None:
                 continue
@@ -1237,6 +1329,10 @@ class SuggestEngine:
             stats["r"] = len(suggestions)
             results[ri] = SuggestResult(
                 suggestions, batch_us, algorithm, stats)
+            if spans[ri] is not None:
+                spans[ri].end(route="device" if any(
+                    fi >= 0 for fi, _ in req_plans[ri]) else "host",
+                    algorithm=algorithm, r=len(suggestions))
             self.cache.put(_SuggestCacheKey(set_id, int(k)),
                            (suggestions, algorithm), generation=gen)
         return results  # type: ignore[return-value]

@@ -5,13 +5,21 @@ order-independent: ``EXEC_COUNTERS`` is process-global telemetry, so
 without this a test that executes device buckets would leak counts into
 the next test's assertions (the pre-PR-2 failure mode was exactly that —
 tests had to remember to call ``reset_exec_counters()`` inline).
+
+The obs reset is the same hygiene for the observability layer: engines
+fall back to the process-global ``Obs`` (``repro.obs.get_obs``), so a
+test that installs a tracing-enabled ``Obs`` via ``set_obs`` — or just
+executes buckets, which feed the global profile store and histograms —
+must not leak that state into the next test.
 """
 import pytest
 
 from repro.core.engine import EXEC_COUNTERS
+from repro.obs import reset_obs
 
 
 @pytest.fixture(autouse=True)
 def _reset_exec_counters():
     EXEC_COUNTERS.reset()
+    reset_obs()
     yield

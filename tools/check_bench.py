@@ -138,6 +138,23 @@ RULES = {
         Rule("served_qps", "min_ratio", 0.70),
         Rule("device_qps", "min_ratio", 0.70),
     ],
+    "BENCH_observability.json": [
+        # observability invariants (absolute — any workload scale): the
+        # instrumented stack is read-only (bit-identical to the oracle
+        # with tracing on AND off), the traced drain leaks no open spans,
+        # the post-pass registry cut is internally consistent and survives
+        # both exposition round-trips, every executed signature carries a
+        # CostModel-residual attribution, and tracing costs <= 5% QPS
+        # (median-of-interleaved-passes vs metrics-only serving).
+        Rule("identical_to_oracle", "equals", 1),
+        Rule("leaked_spans", "max_abs", 0),
+        Rule("snapshot_consistent", "equals", 1),
+        Rule("trace_shape.all_requests_closed_once", "equals", 1),
+        Rule("residual_coverage", "min_abs", 1.0),
+        Rule("residuals_attributed", "equals", 1),
+        Rule("overhead.qps_ratio_traced_vs_metrics", "min_abs", 0.95),
+        Rule("served_qps.traced", "min_ratio", 0.70),
+    ],
     "BENCH_mesh2d_qps.json": [
         # 2-D topology invariants (absolute — hold at any workload scale):
         # every layout stays bit-identical to the single-device baseline,
